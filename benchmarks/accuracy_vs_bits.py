@@ -1,0 +1,63 @@
+"""Paper Figs. 4/6: accuracy vs input bit-width for the linear classifier.
+
+MNIST is unavailable offline; the synthetic stand-in (class-conditional blob
+patterns) reproduces the paper's *trend*: accuracy saturates by ~3 input
+bits and does not improve with more precision.  The LUT path is evaluated
+with the *same tables* at every bit width (exactness is tested separately —
+here we measure classification accuracy of the quantised-input model).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core.quantize import FixedPointFormat
+from repro.data.synthetic import image_batch
+from repro.models.layers import Ctx
+from repro.models.paper_models import linear_classifier_forward, linear_classifier_specs
+from repro.models.params import init_params
+
+
+def train_linear(steps=400, batch=256, lr=0.3, seed=0):
+    ctx = Ctx(get_config("granite_8b", reduced=True))
+    params = init_params(linear_classifier_specs(), jax.random.PRNGKey(seed))
+
+    def loss_fn(p, x, y):
+        logits = linear_classifier_forward(p, x, ctx)
+        onehot = jax.nn.one_hot(y, 10)
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))
+
+    @jax.jit
+    def step(p, x, y):
+        g = jax.grad(loss_fn)(p, x, y)
+        return jax.tree.map(lambda a, b: a - lr * b, p, g)
+
+    for s in range(steps):
+        x, y = image_batch(batch, s, seed=seed)
+        params = step(params, x, y)
+    return params, ctx
+
+
+def accuracy(params, ctx, bits: int | None, n=2000, seed=0) -> float:
+    correct = tot = 0
+    for s in range(n // 500):
+        x, y = image_batch(500, 10_000 + s, seed=seed)
+        if bits is not None:
+            fmt = FixedPointFormat(bits, bits)  # inputs in [0, 1)
+            x = fmt.dequantize(fmt.quantize(x))
+        logits = linear_classifier_forward(params, x, ctx)
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == y))
+        tot += 500
+    return correct / tot
+
+
+def rows() -> list[tuple[str, float, str]]:
+    params, ctx = train_linear()
+    ref = accuracy(params, ctx, None)
+    out = [("fig4/reference_fp32", round(ref, 4), "full precision")]
+    for bits in range(1, 9):
+        acc = accuracy(params, ctx, bits)
+        out.append((f"fig4/bits_{bits}", round(acc, 4), f"delta={acc - ref:+.4f}"))
+    return out

@@ -1,0 +1,58 @@
+"""Kernel micro-benchmarks (CPU wall-time; interpret-mode Pallas).
+
+Timing on this host is NOT the perf deliverable (that's the §Roofline
+analysis from the dry-run); these benches verify the execution paths run
+and give relative cost context between the LUT modes.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lut import LUTPlan, apply_luts, build_luts, pack_codes, plane_scales
+from repro.core.quantize import Float16Format
+from repro.kernels.binary_matmul.ops import binary_matmul
+from repro.kernels.lut_affine.ops import lut_affine
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def rows() -> list[tuple[str, float, str]]:
+    out = []
+    fmt = Float16Format(signed=True)
+    for B, q, p, m in [(32, 256, 256, 1), (8, 512, 512, 1)]:
+        plan = LUTPlan(q, p, m, fmt)
+        key = jax.random.PRNGKey(0)
+        W = jax.random.normal(key, (q, p)) / q**0.5
+        x = jax.random.normal(key, (B, q))
+        tables = build_luts(W, plan)
+        codes = pack_codes(x, plan)
+        scales = jnp.asarray(plane_scales(plan), jnp.float32)
+
+        t_ref = _time(
+            jax.jit(lambda c, t: apply_luts(t, c, plan)), codes, tables
+        )
+        t_kern = _time(
+            lambda c, t: lut_affine(c, t, scales, interpret=True), codes, tables
+        )
+        t_mat = _time(jax.jit(lambda a, w: a @ w), x, W)
+        tag = f"B{B}_q{q}_p{p}_m{m}"
+        out.append((f"kern/lut_affine_jnp_{tag}", round(t_ref, 1), "us/call"))
+        out.append((f"kern/lut_affine_pallas_{tag}", round(t_kern, 1), "us/call interpret"))
+        out.append((f"kern/matmul_ref_{tag}", round(t_mat, 1), "us/call"))
+        if m == 1:
+            planes = codes.astype(jnp.int8)
+            t_bmm = _time(
+                lambda pl, w: binary_matmul(pl, w, scales, interpret=True), planes, W
+            )
+            out.append((f"kern/binary_matmul_{tag}", round(t_bmm, 1), "us/call interpret"))
+    return out

@@ -1,0 +1,55 @@
+"""Render the roofline table from results/dryrun.json (§Roofline source)."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun.json")
+
+
+def load(path: str = RESULTS) -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows() -> list[tuple[str, float, str]]:
+    out = []
+    for r in sorted(load(), key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        key = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r.get("status") == "ok":
+            t = r["terms"]
+            out.append((
+                key,
+                round(t["roofline_fraction"], 4),
+                f"dom={t['dominant']} c={t['compute_s']:.4f} m={t['memory_s']:.4f} "
+                f"x={t['collective_s']:.4f} useful={r['useful_flops_ratio']:.2f}",
+            ))
+        else:
+            out.append((key, -1.0, f"{r.get('status')}: {r.get('reason', r.get('error',''))[:60]}"))
+    return out
+
+
+def markdown_table(records: list[dict]) -> str:
+    """EXPERIMENTS.md §Roofline table."""
+    lines = [
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | dominant "
+        "| roofline frac | useful FLOPs | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(records, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r.get("status") == "ok":
+            t = r["terms"]
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+                f"| {t['collective_s']:.4f} | {t['dominant']} "
+                f"| {t['roofline_fraction']:.3f} | {r['useful_flops_ratio']:.2f} | |"
+            )
+        else:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | – | – | – | – | – | – "
+                f"| {r.get('status')}: {r.get('reason', r.get('error', ''))[:50]} |"
+            )
+    return "\n".join(lines)

@@ -1,0 +1,51 @@
+"""Benchmark harness: one section per paper table/figure + kernel/serving
+micro-benches + the roofline table from the dry-run.
+
+Prints ``name,value,derived`` CSV (value is us_per_call for kern/serve
+sections, the paper's quantity elsewhere).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--sections",
+        default="paper,accuracy,kernels,serving,roofline",
+        help="comma list: paper,accuracy,kernels,serving,roofline",
+    )
+    args = ap.parse_args()
+    sections = args.sections.split(",")
+    all_rows: list[tuple[str, float, str]] = []
+
+    if "paper" in sections:
+        from benchmarks.paper_tables import rows as paper_rows
+
+        all_rows += paper_rows()
+    if "accuracy" in sections:
+        from benchmarks.accuracy_vs_bits import rows as acc_rows
+
+        all_rows += acc_rows()
+    if "kernels" in sections:
+        from benchmarks.kernels import rows as kern_rows
+
+        all_rows += kern_rows()
+    if "serving" in sections:
+        from benchmarks.serving import rows as serve_rows
+
+        all_rows += serve_rows()
+    if "roofline" in sections:
+        from benchmarks.roofline_report import rows as roof_rows
+
+        all_rows += roof_rows()
+
+    print("name,value,derived")
+    for name, value, derived in all_rows:
+        print(f"{name},{value},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Serving throughput bench (reduced LM, CPU): standard vs LUT-converted.
+
+On TPU the LUT gather path is memory-bound and the bitplane-MXU path
+compute-bound (see EXPERIMENTS.md §Perf); this CPU bench just demonstrates
+both paths end-to-end and reports tokens/s for context.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.core.convert import convert_params
+from repro.models.layers import Ctx, ExecCfg
+from repro.models.model import model_specs
+from repro.models.params import init_params
+from repro.serve.engine import generate
+
+
+def rows() -> list[tuple[str, float, str]]:
+    cfg = get_config("granite_8b", reduced=True)
+    ctx = Ctx(cfg, ex=ExecCfg(remat="none"))
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0, cfg.vocab_size)
+
+    out = []
+    for name, p, c in [
+        ("standard", params, ctx),
+        ("lut_gather", convert_params(params, chunk_size=1)[0], ctx),
+        ("binary_matmul", params, Ctx(cfg, ex=ExecCfg(remat="none", linear_mode="binary_matmul"))),
+    ]:
+        t0 = time.perf_counter()
+        toks = generate(p, c, prompts, max_new=16)
+        jax.block_until_ready(toks)
+        dt = time.perf_counter() - t0
+        tps = 4 * 16 / dt
+        out.append((f"serve/{name}_tok_per_s", round(tps, 2), "4 seqs x 16 new"))
+    return out

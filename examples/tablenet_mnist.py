@@ -1,0 +1,92 @@
+"""Paper reproduction: linear / MLP / LeNet classifiers on the synthetic
+MNIST stand-in — train, quantise inputs, convert to LUTs, compare.
+
+Reproduces (offline-container versions of):
+  Fig. 4/6: accuracy vs input bits (trend: saturation by ~3 bits)
+  Fig. 5/7/8: LUT size vs shift-add tradeoff (analytic, exact)
+  the LUT-path == quantised-model equivalence the whole paper rests on
+
+  PYTHONPATH=src python examples/tablenet_mnist.py [--model mlp] [--steps 300]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core.analysis import LINEAR_CLASSIFIER, MLP, figure_curve
+from repro.core.convert import convert_params, conversion_summary
+from repro.core.quantize import FixedPointFormat, Float16Format
+from repro.data.synthetic import image_batch
+from repro.models.layers import Ctx, ExecCfg
+from repro.models.paper_models import PAPER_MODELS
+from repro.models.params import init_params
+
+
+def train(model: str, steps: int, lr: float, seed=0):
+    specs_fn, forward = PAPER_MODELS[model]
+    ctx = Ctx(get_config("granite_8b", reduced=True))
+    params = init_params(specs_fn(), jax.random.PRNGKey(seed))
+
+    def loss_fn(p, x, y):
+        logits = forward(p, x, ctx)
+        return -jnp.mean(
+            jnp.sum(jax.nn.log_softmax(logits) * jax.nn.one_hot(y, 10), -1)
+        )
+
+    @jax.jit
+    def step(p, x, y):
+        return jax.tree.map(lambda a, g: a - lr * g, p, jax.grad(loss_fn)(p, x, y))
+
+    for s in range(steps):
+        x, y = image_batch(128, s)
+        params = step(params, x, y)
+    return params, forward, ctx
+
+
+def accuracy(forward, params, ctx, bits=None, n=1500):
+    ok = tot = 0
+    for s in range(n // 500):
+        x, y = image_batch(500, 50_000 + s)
+        if bits is not None:
+            fmt = FixedPointFormat(bits, bits)
+            x = fmt.dequantize(fmt.quantize(x))
+        ok += int(jnp.sum(jnp.argmax(forward(params, x, ctx), -1) == y))
+        tot += 500
+    return ok / tot
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="linear", choices=list(PAPER_MODELS))
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--lr", type=float, default=0.3)
+    args = ap.parse_args()
+
+    params, forward, ctx = train(args.model, args.steps, args.lr)
+    ref = accuracy(forward, params, ctx)
+    print(f"[{args.model}] reference (fp32) accuracy: {ref:.3f}")
+    print("accuracy vs input bits (paper Fig. 4/6 — expect ~3-bit saturation):")
+    for bits in range(1, 9):
+        print(f"  {bits} bits: {accuracy(forward, params, ctx, bits):.3f}")
+
+    lut_params, report = convert_params(params, chunk_size=1, signed=False)
+    print("conversion:", conversion_summary(report))
+    x, y = image_batch(500, 99_999)
+    a_ref = forward(params, x, ctx)
+    a_lut = forward(lut_params, x, ctx)
+    agree = float(jnp.mean(jnp.argmax(a_ref, -1) == jnp.argmax(a_lut, -1)))
+    print(f"LUT path vs full model: argmax agreement {agree:.4f}, "
+          f"max |dlogit| {float(jnp.abs(a_ref - a_lut).max()):.4f}")
+
+    print("\nLUT size vs ops tradeoff (paper Fig. 5):")
+    layers = LINEAR_CLASSIFIER if args.model == "linear" else MLP
+    fmt = FixedPointFormat(3, 3) if args.model == "linear" else Float16Format()
+    for r in figure_curve(layers, fmt)[:8]:
+        print(f"  {r['mode']:9s} m={r['chunk']:2d}: {r['bytes']:>12,} B "
+              f"{r['shift_adds']:>12,} shift-adds")
+
+
+if __name__ == "__main__":
+    main()

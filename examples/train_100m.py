@@ -1,0 +1,97 @@
+"""End-to-end training driver: a ~100M-parameter LM for a few hundred steps
+with checkpointing, restart, and metrics — the framework's full train path.
+
+  PYTHONPATH=src python examples/train_100m.py --preset tiny --steps 50   # CPU-quick
+  PYTHONPATH=src python examples/train_100m.py --preset 100m --steps 300  # the real driver
+
+The 100m preset is the deliverable configuration (~110M params, granite-
+style dense decoder); the tiny preset (~6M) exists so the driver can be
+exercised end-to-end in CI on this CPU container.  Both run the identical
+code path: deterministic sharded data -> jitted train step (remat, mixed
+precision, AdamW + cosine) -> atomic checkpoints every --ckpt-every steps.
+A mid-run restart (--demo-restart) kills and resumes from the checkpoint to
+demonstrate fault tolerance.
+"""
+import argparse
+import dataclasses
+import os
+import shutil
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import lm_stream
+from repro.models.layers import Ctx, ExecCfg
+from repro.models.model import model_specs
+from repro.models.params import count_params, init_params
+from repro.train.trainer import TrainConfig, Trainer
+
+PRESETS = {
+    "tiny": ModelConfig(
+        name="lm-tiny", family="dense", num_layers=4, d_model=128, num_heads=4,
+        num_kv_heads=2, head_dim=32, d_ff=512, vocab_size=2048,
+        vocab_pad_multiple=16,
+    ),
+    "100m": ModelConfig(
+        name="lm-100m", family="dense", num_layers=12, d_model=768, num_heads=12,
+        num_kv_heads=4, head_dim=64, d_ff=3072, vocab_size=32000,
+    ),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--out", default="/tmp/train_100m_run")
+    ap.add_argument("--fresh", action="store_true")
+    ap.add_argument("--demo-restart", action="store_true",
+                    help="stop halfway, then resume from the checkpoint")
+    args = ap.parse_args()
+
+    if args.fresh and os.path.isdir(args.out):
+        shutil.rmtree(args.out)
+    cfg = PRESETS[args.preset]
+    ctx = Ctx(cfg, ex=ExecCfg(remat="dots"))
+    specs = model_specs(cfg)
+    print(f"{cfg.name}: {count_params(specs) / 1e6:.1f}M params, "
+          f"{args.steps} steps of {args.batch}x{args.seq} tokens")
+
+    tc = TrainConfig(
+        peak_lr=3e-4, warmup_steps=max(args.steps // 10, 5),
+        total_steps=args.steps, checkpoint_every=args.ckpt_every,
+        out_dir=args.out,
+    )
+    params = init_params(specs, jax.random.PRNGKey(0))
+
+    def data_from(step):
+        return lm_stream(cfg.vocab_size, args.seq, args.batch, seed=0,
+                         start_step=step)
+
+    t = Trainer(ctx, tc, params, data_from(0))
+    if t.start_step:
+        print(f"resumed from checkpoint at step {t.start_step}")
+        t.data = data_from(t.start_step)
+
+    if args.demo_restart and t.start_step == 0:
+        half = args.steps // 2
+        t.run(half)
+        print(f"--- simulating preemption at step {half}; restarting ---")
+        params2 = init_params(specs, jax.random.PRNGKey(0))
+        t = Trainer(ctx, tc, params2, data_from(half))
+        assert t.start_step == half, t.start_step
+
+    log = t.run(args.steps)
+    first = sum(r["loss"] for r in log[:3]) / max(len(log[:3]), 1)
+    last = sum(r["loss"] for r in log[-3:]) / max(len(log[-3:]), 1)
+    times = sorted(r["time_s"] for r in log)
+    print(f"loss {first:.3f} -> {last:.3f}; "
+          f"step p50={times[len(times)//2]:.2f}s p99={times[int(len(times)*0.99)-1]:.2f}s")
+    print(f"checkpoints + metrics.jsonl in {args.out}")
+
+
+if __name__ == "__main__":
+    main()

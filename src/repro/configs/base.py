@@ -1,0 +1,136 @@
+"""Model configuration schema + registry.
+
+One file per assigned architecture lives next to this module; each exports
+``CONFIG`` (the exact published configuration) and ``reduced()`` (a tiny
+same-family variant for CPU smoke tests).  ``get_config(name)`` resolves
+either.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    # --- attention ---
+    attention: str = "gqa"  # gqa | mla | none
+    attn_bias: bool = False
+    sliding_window: Optional[int] = None
+    rope_theta: float = 10_000.0
+    pos: str = "rope"  # rope | sinusoidal | none
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    act: str = "silu"  # silu | gelu
+    # --- MoE ---
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_d_ff: int = 0
+    num_shared_experts: int = 0  # qwen2-moe style always-on experts
+    router_aux_coef: float = 0.001
+    # --- MLA (minicpm3) ---
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+    # --- SSM / hybrid ---
+    ssm_state: int = 0
+    mamba_head_dim: int = 64
+    mamba_expand: int = 2
+    conv_kernel: int = 4
+    shared_attn_every: int = 0  # zamba2: shared attn+mlp block cadence
+    # --- RWKV ---
+    rwkv_head_dim: int = 64
+    decay_lora_rank: int = 64
+    # --- enc-dec (whisper) ---
+    encoder_layers: int = 0
+    # --- VLM ---
+    num_image_tokens: int = 0
+    # --- embedding / misc ---
+    tie_embeddings: bool = False
+    vocab_pad_multiple: int = 256  # Megatron-style padding => TP-divisible
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+
+    # ---------------------------------------------------------------- derived
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return -(-self.vocab_size // m) * m
+
+    @property
+    def q_dim(self) -> int:
+        if self.attention == "mla":
+            return self.num_heads * (self.qk_nope_head_dim + self.qk_rope_head_dim)
+        return self.num_heads * self.head_dim
+
+    @property
+    def d_inner(self) -> int:  # mamba2
+        return self.mamba_expand * self.d_model
+
+    @property
+    def mamba_heads(self) -> int:
+        return self.d_inner // self.mamba_head_dim
+
+    @property
+    def rwkv_heads(self) -> int:
+        return self.d_model // self.rwkv_head_dim
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """Can this arch serve a 512k-token context (long_500k shape)?"""
+        return self.family in ("ssm", "hybrid") or self.sliding_window is not None
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # all assigned archs decode; encoder-only would flip this
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embedding + blocks), for 6ND math."""
+        from repro.models.params import count_params
+        from repro.models.model import model_specs
+
+        return count_params(model_specs(self))
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k + shared experts only)."""
+        if self.num_experts == 0:
+            return self.param_count()
+        total = self.param_count()
+        per_expert = 3 * self.d_model * self.moe_d_ff
+        inactive = (self.num_experts - self.num_experts_per_tok) * per_expert
+        return total - self.num_layers * inactive
+
+
+ARCH_NAMES = [
+    "qwen2_moe_a2_7b",
+    "mixtral_8x7b",
+    "zamba2_1_2b",
+    "minitron_4b",
+    "granite_8b",
+    "phi3_medium_14b",
+    "minicpm3_4b",
+    "llava_next_mistral_7b",
+    "whisper_base",
+    "rwkv6_3b",
+]
+
+
+def get_config(name: str, reduced: bool = False) -> ModelConfig:
+    key = name.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{key}")
+    return mod.reduced() if reduced else mod.CONFIG
+
+
+def list_configs() -> list[str]:
+    return list(ARCH_NAMES)

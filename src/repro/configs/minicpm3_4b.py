@@ -1,0 +1,31 @@
+"""MiniCPM3-4B [hf:openbmb/MiniCPM3-4B]: MLA latent-KV attention."""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b",
+    family="dense",
+    num_layers=62,
+    d_model=2560,
+    num_heads=40,
+    num_kv_heads=40,  # assignment annotation; MLA supersedes (DESIGN.md §5)
+    head_dim=64,
+    d_ff=6400,
+    vocab_size=73448,  # pads to 73472 for 16-way vocab TP
+    attention="mla",
+    q_lora_rank=768,
+    kv_lora_rank=256,
+    qk_nope_head_dim=64,
+    qk_rope_head_dim=32,
+    v_head_dim=64,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=512, q_lora_rank=32, kv_lora_rank=16,
+        qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16,
+        vocab_pad_multiple=16,
+    )

@@ -1,0 +1,128 @@
+"""Model -> TableNet conversion pass.
+
+Walks a trained parameter tree and replaces every eligible linear node
+({"w": 2-D array} produced by ``models.layers.linear_spec``) with its LUT
+tables, exactly as the paper prescribes post-training.  The zoo's
+:func:`repro.models.layers.linear` then executes those layers via the LUT
+path, so a converted model serves **multiplier-free** (in the paper's
+arithmetic sense — see DESIGN.md §2) with no other code changes.
+
+Non-affine recurrences (SSD / WKV — data-dependent transition weights) and
+raw tensors (embeddings, routers, norm scales, 3-D expert stacks) are left
+untouched; the expert stacks can be converted per-expert via
+``convert_experts=True`` (vmapped table build).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lut import LUTPlan, build_luts
+from repro.core.quantize import Float16Format
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvertReport:
+    converted: int
+    skipped: int
+    weight_bytes: int
+    table_bytes: int
+
+
+def _is_linear_node(node: Any) -> bool:
+    # 2-D = plain linear; 3-D = scan-stacked (L, q, p) — both convertible
+    return (
+        isinstance(node, dict)
+        and "w" in node
+        and hasattr(node["w"], "ndim")
+        and node["w"].ndim in (2, 3)
+        and set(node) <= {"w", "b"}
+    )
+
+
+def _build_tables(w, plan: LUTPlan, dtype):
+    """build_luts vmapped over any leading (layer/expert) dims."""
+    fn = lambda m: build_luts(m.astype(jnp.float32), plan)
+    for _ in range(w.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(w).astype(dtype)
+
+
+def convert_params(
+    params: dict,
+    chunk_size: int = 1,
+    min_features: int = 1,
+    predicate: Callable[[tuple, dict], bool] | None = None,
+    table_dtype=jnp.float32,
+    convert_experts: bool = False,
+    signed: bool = True,  # LM activations are signed; paper models may use False
+) -> tuple[dict, ConvertReport]:
+    """Returns (converted tree, report).  ``predicate(path, node)`` can veto
+    individual layers (default: convert everything eligible)."""
+    stats = {"converted": 0, "skipped": 0, "w_bytes": 0, "t_bytes": 0}
+    fmt = Float16Format(signed=signed)
+
+    def walk(path: tuple, node: Any):
+        if _is_linear_node(node):
+            w = node["w"]
+            q, p = w.shape[-2:]
+            if q < min_features or (predicate and not predicate(path, node)):
+                stats["skipped"] += 1
+                return node
+            plan = LUTPlan(q, p, chunk_size, fmt, mode="bitplane")
+            tables = _build_tables(w, plan, table_dtype)
+            stats["converted"] += 1
+            stats["w_bytes"] += w.size * w.dtype.itemsize
+            stats["t_bytes"] += tables.size * tables.dtype.itemsize
+            out = {"tables": tables}
+            if "b" in node:
+                out["b"] = node["b"]
+            return out
+        if convert_experts and isinstance(node, dict) and _is_expert_stack(node):
+            node = _convert_expert_stack(node, chunk_size, table_dtype, stats, fmt)
+            return {
+                k: (v if k in ("w_gate", "w_up", "w_down") else walk(path + (k,), v))
+                for k, v in node.items()
+            }
+        if isinstance(node, dict):
+            return {k: walk(path + (k,), v) for k, v in node.items()}
+        return node
+
+    out = walk((), params)
+    report = ConvertReport(
+        stats["converted"], stats["skipped"], stats["w_bytes"], stats["t_bytes"]
+    )
+    return out, report
+
+
+def _is_expert_stack(node: dict) -> bool:
+    return {"w_gate", "w_up", "w_down", "router"} <= set(node) and (
+        hasattr(node["w_gate"], "ndim") and node["w_gate"].ndim in (3, 4)
+    )
+
+
+def _convert_expert_stack(node: dict, chunk: int, dtype, stats, fmt) -> dict:
+    out = dict(node)
+    for key in ("w_gate", "w_up", "w_down"):
+        w3 = node[key]  # (E, q, p) or stacked (L, E, q, p)
+        q, p = w3.shape[-2:]
+        plan = LUTPlan(q, p, chunk, fmt, mode="bitplane")
+        tables = _build_tables(w3, plan, dtype)
+        out[key] = {"tables": tables}  # (..., E, k, entries, p)
+        stats["converted"] += 1
+        stats["w_bytes"] += w3.size * w3.dtype.itemsize
+        stats["t_bytes"] += tables.size * np.dtype(dtype).itemsize
+    return out
+
+
+def conversion_summary(report: ConvertReport) -> str:
+    ratio = report.table_bytes / max(report.weight_bytes, 1)
+    return (
+        f"converted {report.converted} linears ({report.skipped} skipped): "
+        f"{report.weight_bytes / 2**20:.1f} MiB weights -> "
+        f"{report.table_bytes / 2**20:.1f} MiB tables ({ratio:.0f}x)"
+    )

@@ -1,0 +1,296 @@
+"""TableNet LUT construction and (reference) application.
+
+Implements the paper's replacement of an affine map ``y = W x + b`` with
+look-up tables:
+
+* ``mode="bitplane"`` (fixed point or binary16): the input's bits are viewed
+  as ``n`` bitplanes; the *same* ``k`` tables are reused across planes and
+  the plane results are shift-and-added (paper §Fixed point / §Floating
+  point).  Table ``c`` maps the chunk-``c`` bit pattern (for binary16: one
+  mantissa bit **plus the full 5-bit exponent** per element, paper Fig. 1) to
+  the partial output vector ``W_chunk · alpha``.
+* ``mode="full"`` (fixed point): each table is indexed by the *totality* of
+  the chunk's bits (``m * r_I`` index bits) — fewest ops, biggest tables.
+
+Signed fixed point follows the paper's MSB trick: the MSB plane passes
+through the *same* tables and is subtracted after a left shift — realised
+here as a negative final plane scale (exactly equivalent).
+
+The bias is added once at the end rather than as ``b/k`` per table; this is
+algebraically identical and avoids ``k-1`` redundant additions of ``b/k``.
+
+Everything here is the pure-jnp *oracle*; the Pallas kernels in
+``repro.kernels`` implement the same contract and are tested against it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantize import FixedPointFormat, Float16Format
+
+Format = Union[FixedPointFormat, Float16Format]
+
+
+@dataclasses.dataclass(frozen=True)
+class LUTPlan:
+    """How one affine layer (q -> p) is mapped onto LUTs."""
+
+    in_features: int  # q
+    out_features: int  # p
+    chunk_size: int  # m: input elements per table
+    fmt: Format
+    mode: str = "bitplane"  # "bitplane" | "full"
+    out_bits: int = 16  # r_O, for size accounting only (compute is fp32)
+
+    def __post_init__(self):
+        if self.mode not in ("bitplane", "full"):
+            raise ValueError(f"unknown mode {self.mode!r}")
+        if self.mode == "full" and isinstance(self.fmt, Float16Format):
+            if self.chunk_size != 1:
+                raise ValueError("full-bits float LUTs only support chunk_size=1")
+        if self.index_bits > 24:
+            raise ValueError(
+                f"LUT index width {self.index_bits} bits is impractically large"
+            )
+
+    # -- derived sizes --------------------------------------------------------
+    @property
+    def num_chunks(self) -> int:  # k
+        return -(-self.in_features // self.chunk_size)
+
+    @property
+    def padded_in(self) -> int:
+        return self.num_chunks * self.chunk_size
+
+    @property
+    def fields_per_element(self) -> int:
+        """Index bits contributed by one input element."""
+        if isinstance(self.fmt, Float16Format):
+            if self.mode == "full":
+                # all 16 bits, minus the sign bit (always 0 post-ReLU).
+                return 15
+            return self.fmt.fields_per_element  # 1 mantissa bit + 5 exp bits
+        return 1 if self.mode == "bitplane" else self.fmt.total_bits
+
+    @property
+    def index_bits(self) -> int:
+        return self.chunk_size * self.fields_per_element
+
+    @property
+    def num_entries(self) -> int:
+        return 2**self.index_bits
+
+    @property
+    def num_planes(self) -> int:
+        if self.mode == "full":
+            return 1
+        return self.fmt.num_planes
+
+    # -- paper's cost accounting (validated against the paper's own numbers) --
+    @property
+    def lut_evaluations(self) -> int:
+        return self.num_planes * self.num_chunks
+
+    @property
+    def shift_add_ops(self) -> int:
+        """p-element adds: p * (n*k - 1)  — reproduces the paper's 14,652,918
+        for the MLP and 1,330,678 for the full-bits variant exactly."""
+        return self.out_features * (self.lut_evaluations - 1)
+
+    @property
+    def total_lut_bits(self) -> int:
+        return self.num_chunks * self.num_entries * self.out_features * self.out_bits
+
+    @property
+    def total_lut_bytes(self) -> int:
+        return self.total_lut_bits // 8
+
+
+# ---------------------------------------------------------------------------
+# Table construction
+# ---------------------------------------------------------------------------
+
+
+def _chunked_weights(W: jax.Array, plan: LUTPlan) -> jax.Array:
+    """(q, p) -> (k, m, p), zero-padding the ragged tail chunk (exact: the
+    padded elements always present a 0 bit pattern)."""
+    q, p = W.shape
+    assert q == plan.in_features and p == plan.out_features
+    pad = plan.padded_in - q
+    Wp = jnp.pad(W, ((0, pad), (0, 0)))
+    return Wp.reshape(plan.num_chunks, plan.chunk_size, p)
+
+
+def _fixed_full_coeffs(plan: LUTPlan) -> np.ndarray:
+    """(entries, m) dequantised value of each element slot for every index."""
+    fmt: FixedPointFormat = plan.fmt  # type: ignore[assignment]
+    r = fmt.total_bits
+    idx = np.arange(plan.num_entries, dtype=np.int64)
+    slots = np.arange(plan.chunk_size)
+    codes = (idx[:, None] >> (slots[None, :] * r)) & (2**r - 1)
+    if fmt.signed:
+        codes = codes - (codes >= 2 ** (r - 1)) * 2**r
+    return codes.astype(np.float64) * fmt.scale
+
+
+def _float_bitplane_coeffs(plan: LUTPlan) -> np.ndarray:
+    """(entries, m): (+/-) bit * sigma(exp) per element slot (paper Fig. 1;
+    field layout [sign?][mantissa bit][5-bit exponent])."""
+    fmt: Float16Format = plan.fmt  # type: ignore[assignment]
+    f = fmt.fields_per_element  # 6 unsigned / 7 signed
+    idx = np.arange(plan.num_entries, dtype=np.int64)
+    slots = np.arange(plan.chunk_size)
+    fields = (idx[:, None] >> (slots[None, :] * f)) & (2**f - 1)
+    bits = (fields >> fmt.exp_bits) & 1
+    exps = fields & (2**fmt.exp_bits - 1)
+    sigma = 2.0 ** (np.maximum(exps, 1).astype(np.float64) - 25.0)
+    coeff = bits.astype(np.float64) * sigma
+    if fmt.signed:
+        sign = fields >> (fmt.exp_bits + 1)
+        coeff = coeff * (1.0 - 2.0 * sign)
+    return coeff
+
+
+def _float_full_coeffs(plan: LUTPlan) -> np.ndarray:
+    """(2**15, 1): value of each non-negative binary16 bit pattern."""
+    idx = np.arange(plan.num_entries, dtype=np.uint16)
+    vals = idx.view(np.float16).astype(np.float64)
+    return vals[:, None]
+
+
+def build_luts(W: jax.Array, plan: LUTPlan) -> jax.Array:
+    """Materialise tables of shape ``(k, entries, p)`` in fp32.
+
+    Entry ``T[c, e, :]`` holds ``sum_i coeff_i(e) * W[chunk_c[i], :]`` — the
+    exact partial result the paper stores.  For bitplane mode the per-plane
+    scale (2**j, fixed-point 2**-f, signed MSB sign) lives in
+    :func:`plane_scales` and is applied at accumulation time, which is what
+    lets one table serve every plane.
+    """
+    if isinstance(plan.fmt, Float16Format):
+        coeffs = (
+            _float_bitplane_coeffs(plan)
+            if plan.mode == "bitplane"
+            else _float_full_coeffs(plan)
+        )
+    else:
+        if plan.mode == "bitplane":
+            # pattern bit i contributes W row as-is; scale handled per plane.
+            idx = np.arange(plan.num_entries, dtype=np.int64)
+            slots = np.arange(plan.chunk_size)
+            coeffs = ((idx[:, None] >> slots[None, :]) & 1).astype(np.float64)
+        else:
+            coeffs = _fixed_full_coeffs(plan)
+    Wc = _chunked_weights(W, plan)  # (k, m, p)
+    return jnp.einsum(
+        "em,kmp->kep", jnp.asarray(coeffs, jnp.float32), Wc.astype(jnp.float32)
+    )
+
+
+def plane_scales(plan: LUTPlan) -> np.ndarray:
+    """(num_planes,) multipliers applied to per-plane table sums."""
+    if plan.mode == "full":
+        return np.ones((1,), np.float64)
+    return plan.fmt.plane_scales()
+
+
+# ---------------------------------------------------------------------------
+# Input packing: float/ints -> LUT index codes
+# ---------------------------------------------------------------------------
+
+
+def _pack_fields(fields: jax.Array, plan: LUTPlan) -> jax.Array:
+    """(..., q_padded) per-element field ints -> (..., k) chunk indices."""
+    f = plan.fields_per_element
+    chunked = fields.reshape(fields.shape[:-1] + (plan.num_chunks, plan.chunk_size))
+    shifts = (jnp.arange(plan.chunk_size, dtype=jnp.int32) * f).reshape(
+        (1,) * (chunked.ndim - 1) + (-1,)
+    )
+    return jnp.sum(chunked << shifts, axis=-1).astype(jnp.int32)
+
+
+def pack_codes(x: jax.Array, plan: LUTPlan) -> jax.Array:
+    """Quantise ``x`` (..., q) and emit LUT indices of shape (..., n, k).
+
+    This is the bit-partitioning step the paper assumes custom routing
+    hardware for; the Pallas ``bitplane_pack`` kernel implements the same
+    contract on-chip.
+    """
+    pad = plan.padded_in - plan.in_features
+    if isinstance(plan.fmt, Float16Format):
+        h = plan.fmt.quantize(x)
+        if pad:
+            h = jnp.pad(h, [(0, 0)] * (h.ndim - 1) + [(0, pad)])
+        if plan.mode == "full":
+            u = jax.lax.bitcast_convert_type(h, jnp.uint16).astype(jnp.int32)
+            return u[..., None, :]  # (..., 1, k) with k == q
+        exp, planes = plan.fmt.decompose(h)  # (...,q), (n,...,q)
+        fields = (planes << plan.fmt.exp_bits) + exp[None]
+        if plan.fmt.signed:
+            sign = plan.fmt.sign_bits(h)
+            fields = fields + (sign << (plan.fmt.exp_bits + 1))[None]
+        codes = _pack_fields(fields, plan)  # (n, ..., k)
+        return jnp.moveaxis(codes, 0, -2)  # (..., n, k)
+    fmt: FixedPointFormat = plan.fmt  # type: ignore[assignment]
+    c = fmt.quantize(x)
+    if pad:
+        c = jnp.pad(c, [(0, 0)] * (c.ndim - 1) + [(0, pad)])
+    if plan.mode == "full":
+        u = fmt.to_unsigned_bits(c)
+        return _pack_fields(u, plan)[..., None, :]
+    bits = fmt.bitplanes(c)  # (n, ..., q)
+    codes = _pack_fields(bits, plan)  # (n, ..., k)
+    return jnp.moveaxis(codes, 0, -2)
+
+
+# ---------------------------------------------------------------------------
+# Reference application (the jnp oracle for the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+
+def apply_luts(
+    tables: jax.Array,
+    codes: jax.Array,
+    plan: LUTPlan,
+    bias: jax.Array | None = None,
+    accum_dtype=jnp.float32,
+) -> jax.Array:
+    """``(..., n, k)`` codes + ``(k, E, p)`` tables -> ``(..., p)``.
+
+    out = sum_j scale_j * sum_c T[c, codes[..., j, c], :]  (+ bias)
+    """
+    k = plan.num_chunks
+    gathered = tables[jnp.arange(k), codes]  # (..., n, k, p)
+    per_plane = jnp.sum(gathered.astype(accum_dtype), axis=-2)  # (..., n, p)
+    scales = jnp.asarray(plane_scales(plan), accum_dtype)
+    out = jnp.einsum("...np,n->...p", per_plane, scales)
+    if bias is not None:
+        out = out + bias.astype(accum_dtype)
+    return out
+
+
+def lut_affine_reference(
+    x: jax.Array, W: jax.Array, b: jax.Array | None, plan: LUTPlan
+) -> jax.Array:
+    """End-to-end oracle: pack -> tables -> apply."""
+    tables = build_luts(W, plan)
+    codes = pack_codes(x, plan)
+    return apply_luts(tables, codes, plan, bias=b)
+
+
+def quantized_matmul_reference(
+    x: jax.Array, W: jax.Array, b: jax.Array | None, plan: LUTPlan
+) -> jax.Array:
+    """What the LUT path must reproduce: matmul on the *quantised* input."""
+    xq = plan.fmt.dequantize(plan.fmt.quantize(x))
+    # zero-out the padded tail exactly as the LUT sees it
+    out = xq.astype(jnp.float32) @ W.astype(jnp.float32)
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    return out

@@ -1,0 +1,108 @@
+"""Partition planner: enumerate LUT configurations and their cost trade-off.
+
+Reproduces the paper's size-vs-operations curves (Figs. 5, 7, 8) and picks a
+plan under a memory budget.  All accounting is closed-form from
+:class:`repro.core.lut.LUTPlan`; the formulas were validated against every
+number the paper states for the linear classifier and the MLP (see
+``tests/test_analysis.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Sequence
+
+from repro.core.lut import LUTPlan
+from repro.core.quantize import FixedPointFormat, Float16Format
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanPoint:
+    plan: LUTPlan
+    num_tables: int
+    lut_bytes: int
+    lut_evaluations: int
+    shift_add_ops: int
+
+    @staticmethod
+    def of(plan: LUTPlan) -> "PlanPoint":
+        return PlanPoint(
+            plan=plan,
+            num_tables=plan.num_chunks,
+            lut_bytes=plan.total_lut_bytes,
+            lut_evaluations=plan.lut_evaluations,
+            shift_add_ops=plan.shift_add_ops,
+        )
+
+
+def enumerate_plans(
+    in_features: int,
+    out_features: int,
+    fmt,
+    modes: Sequence[str] = ("bitplane", "full"),
+    max_index_bits: int = 24,
+    max_chunk: int | None = None,
+) -> list[PlanPoint]:
+    """All uniform-chunk plans whose index width stays implementable."""
+    points: list[PlanPoint] = []
+    is_float = isinstance(fmt, Float16Format)
+    for mode in modes:
+        fpe = (
+            (6 if mode == "bitplane" else 15)
+            if is_float
+            else (1 if mode == "bitplane" else fmt.total_bits)
+        )
+        hi = max_index_bits // fpe
+        if max_chunk is not None:
+            hi = min(hi, max_chunk)
+        for m in range(1, max(hi, 0) + 1):
+            if mode == "full" and is_float and m != 1:
+                continue
+            try:
+                plan = LUTPlan(in_features, out_features, m, fmt, mode=mode)
+            except ValueError:
+                continue
+            points.append(PlanPoint.of(plan))
+    return points
+
+
+def tradeoff_curve(points: Iterable[PlanPoint]) -> list[PlanPoint]:
+    """Pareto frontier of (lut_bytes, shift_add_ops), sorted by size."""
+    pts = sorted(points, key=lambda p: (p.lut_bytes, p.shift_add_ops))
+    frontier: list[PlanPoint] = []
+    best_ops = math.inf
+    for p in pts:
+        if p.shift_add_ops < best_ops:
+            frontier.append(p)
+            best_ops = p.shift_add_ops
+    return frontier
+
+
+def plan_under_budget(
+    in_features: int,
+    out_features: int,
+    fmt,
+    max_lut_bytes: int,
+    modes: Sequence[str] = ("bitplane",),
+) -> LUTPlan:
+    """Fewest-ops plan whose tables fit the budget (raises if none fits)."""
+    candidates = [
+        p
+        for p in enumerate_plans(in_features, out_features, fmt, modes=modes)
+        if p.lut_bytes <= max_lut_bytes
+    ]
+    if not candidates:
+        raise ValueError(
+            f"no LUT plan for {in_features}x{out_features} fits "
+            f"{max_lut_bytes} bytes"
+        )
+    return min(candidates, key=lambda p: (p.shift_add_ops, p.lut_bytes)).plan
+
+
+def default_serving_plan(
+    in_features: int, out_features: int, chunk_size: int = 4
+) -> LUTPlan:
+    """The plan LM serving uses unless a config overrides it: binary16 input
+    (the paper's finding: fp16 inner activations preserve accuracy where
+    fixed point does not), bitplane mode, moderate chunks."""
+    return LUTPlan(in_features, out_features, chunk_size, Float16Format())

@@ -1,0 +1,238 @@
+"""Number formats and quantizers for TableNet LUT inputs.
+
+The paper's LUT input set ``I`` is a low-resolution number format.  Two
+families are implemented, both with *exact* bit-level decompositions so the
+LUT path can be validated against a reference matmul:
+
+* :class:`FixedPointFormat` — n-bit fixed point, signed (two's complement)
+  or unsigned, with ``frac_bits`` fractional bits.  Bitplane ``j`` of the
+  stored code contributes ``bit * 2**(j - frac_bits)`` (the MSB of a signed
+  code contributes ``-2**(n-1-frac_bits)``, the paper's subtract-shifted-MSB
+  trick).
+* :class:`Float16Format` — IEEE 754 binary16.  Mantissa is decomposed into
+  11 bitplanes (10 stored + the implicit leading bit); the full 5-bit
+  exponent indexes the LUT alongside each mantissa bit.  Plane ``j`` of
+  element ``x`` contributes ``bit * 2**j * sigma(e)`` with
+  ``sigma(e) = 2**(max(e,1) - 25)`` — exact for normals *and* subnormals.
+
+Quantizers are jit-friendly (pure jnp) and expose straight-through-estimator
+variants for quantization-aware training, plus the paper's stochastic
+rounding (threefry-counter based rather than a hardware mod-R counter, so
+training steps stay replayable under fault tolerance).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Fixed point
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPointFormat:
+    """``total_bits``-wide fixed point with ``frac_bits`` fractional bits."""
+
+    total_bits: int
+    frac_bits: int
+    signed: bool = False
+
+    def __post_init__(self):
+        if not (1 <= self.total_bits <= 24):
+            raise ValueError(f"total_bits must be in [1, 24], got {self.total_bits}")
+
+    # -- ranges -------------------------------------------------------------
+    @property
+    def scale(self) -> float:
+        return 2.0 ** (-self.frac_bits)
+
+    @property
+    def code_min(self) -> int:
+        return -(2 ** (self.total_bits - 1)) if self.signed else 0
+
+    @property
+    def code_max(self) -> int:
+        return 2 ** (self.total_bits - 1) - 1 if self.signed else 2**self.total_bits - 1
+
+    @property
+    def min_value(self) -> float:
+        return self.code_min * self.scale
+
+    @property
+    def max_value(self) -> float:
+        return self.code_max * self.scale
+
+    @property
+    def num_planes(self) -> int:
+        return self.total_bits
+
+    # -- core ops -------------------------------------------------------------
+    def quantize(self, x: jax.Array) -> jax.Array:
+        """float -> integer code (round-to-nearest-even, saturating)."""
+        c = jnp.round(x / self.scale)
+        c = jnp.clip(c, self.code_min, self.code_max)
+        return c.astype(jnp.int32)
+
+    def quantize_stochastic(self, x: jax.Array, key: jax.Array) -> jax.Array:
+        """Paper §Stochastic rounding: P(up) = frac(x/eps)."""
+        v = x / self.scale
+        lo = jnp.floor(v)
+        p_up = v - lo
+        u = jax.random.uniform(key, x.shape)
+        c = lo + (u < p_up).astype(lo.dtype)
+        return jnp.clip(c, self.code_min, self.code_max).astype(jnp.int32)
+
+    def dequantize(self, codes: jax.Array) -> jax.Array:
+        return codes.astype(jnp.float32) * self.scale
+
+    def fake_quant(self, x: jax.Array) -> jax.Array:
+        """Quantize+dequantize with straight-through gradient (for QAT)."""
+        y = self.dequantize(self.quantize(x))
+        return x + jax.lax.stop_gradient(y - x)
+
+    # -- bit-level views ------------------------------------------------------
+    def to_unsigned_bits(self, codes: jax.Array) -> jax.Array:
+        """Two's-complement bit pattern of the code as a non-negative int."""
+        if self.signed:
+            return jnp.where(codes < 0, codes + 2**self.total_bits, codes).astype(
+                jnp.int32
+            )
+        return codes.astype(jnp.int32)
+
+    def bitplanes(self, codes: jax.Array) -> jax.Array:
+        """Return bits with a new leading axis of size ``num_planes``.
+
+        ``value(codes) == sum_j plane_scales()[j] * bits[j]`` exactly.
+        """
+        u = self.to_unsigned_bits(codes)
+        planes = jnp.arange(self.num_planes, dtype=jnp.int32)
+        return (u[None, ...] >> planes.reshape((-1,) + (1,) * u.ndim)) & 1
+
+    def plane_scales(self) -> np.ndarray:
+        """Per-plane multiplier; MSB is negative for signed formats."""
+        s = (2.0 ** np.arange(self.num_planes)) * self.scale
+        if self.signed:
+            s[-1] = -s[-1]
+        return s.astype(np.float64)
+
+
+# ---------------------------------------------------------------------------
+# IEEE binary16
+# ---------------------------------------------------------------------------
+
+_F16_EXP_BITS = 5
+_F16_MAN_BITS = 10
+_F16_BIAS = 15
+
+
+@dataclasses.dataclass(frozen=True)
+class Float16Format:
+    """binary16 LUT input format.
+
+    ``signed=False`` is the paper's setting (sign bit always 0 after ReLU,
+    halving the tables); ``signed=True`` extends the paper's scheme the way
+    it handles fixed point signs — the sign bit joins the exponent in every
+    LUT field (7 index bits/element), needed for LM layers whose inputs are
+    norm/residual activations rather than ReLU outputs.
+    """
+
+    signed: bool = False
+
+    @property
+    def exp_bits(self) -> int:
+        return _F16_EXP_BITS
+
+    @property
+    def num_planes(self) -> int:
+        # 10 stored mantissa bits + the implicit leading bit.
+        return _F16_MAN_BITS + 1
+
+    @property
+    def fields_per_element(self) -> int:
+        # 1 mantissa bit + full exponent (+ sign) index the LUT (paper Fig. 1).
+        return 1 + _F16_EXP_BITS + (1 if self.signed else 0)
+
+    def quantize(self, x: jax.Array) -> jax.Array:
+        """float -> binary16 (unsigned mode clamps negatives to 0)."""
+        if self.signed:
+            return x.astype(jnp.float16)
+        return jnp.maximum(x, 0.0).astype(jnp.float16)
+
+    def fake_quant(self, x: jax.Array) -> jax.Array:
+        y = self.quantize(x).astype(jnp.float32)
+        return x + jax.lax.stop_gradient(y - x)
+
+    def dequantize(self, h: jax.Array) -> jax.Array:
+        return h.astype(jnp.float32)
+
+    # -- bit-level views ------------------------------------------------------
+    def decompose(self, h: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """Return ``(exponent, mantissa_planes)``.
+
+        ``exponent`` is int32 with shape of ``h``; ``mantissa_planes`` has a
+        leading axis of ``num_planes`` bits (plane 10 = implicit leading bit,
+        1 iff the number is normal).
+        """
+        bits = jax.lax.bitcast_convert_type(h.astype(jnp.float16), jnp.uint16).astype(
+            jnp.int32
+        )
+        exp = (bits >> _F16_MAN_BITS) & (2**_F16_EXP_BITS - 1)
+        man = bits & (2**_F16_MAN_BITS - 1)
+        planes = jnp.arange(_F16_MAN_BITS, dtype=jnp.int32)
+        man_planes = (man[None, ...] >> planes.reshape((-1,) + (1,) * man.ndim)) & 1
+        implicit = (exp > 0).astype(jnp.int32)[None, ...]
+        return exp, jnp.concatenate([man_planes, implicit], axis=0)
+
+    @staticmethod
+    def sign_bits(h: jax.Array) -> jax.Array:
+        bits = jax.lax.bitcast_convert_type(h.astype(jnp.float16), jnp.uint16)
+        return (bits.astype(jnp.int32) >> 15) & 1
+
+    @staticmethod
+    def sigma(exp: jax.Array | np.ndarray) -> jax.Array | np.ndarray:
+        """Per-element scale so that value == sum_j 2**j * bit_j * sigma(e)."""
+        e = jnp.maximum(exp, 1) if isinstance(exp, jax.Array) else np.maximum(exp, 1)
+        return 2.0 ** (e.astype(jnp.float32) - (_F16_BIAS + _F16_MAN_BITS))
+
+    def plane_scales(self) -> np.ndarray:
+        return (2.0 ** np.arange(self.num_planes)).astype(np.float64)
+
+
+# ---------------------------------------------------------------------------
+# Stochastic rounding as a LUT (paper §Stochastic rounding)
+# ---------------------------------------------------------------------------
+
+
+def build_stochastic_rounding_lut(
+    fmt: FixedPointFormat, in_bits: int, R: int, seed: int = 0
+) -> np.ndarray:
+    """Materialise the paper's rounding LUT: index = (code, counter mod R).
+
+    Maps an ``in_bits`` fixed point code (same frac_bits as ``fmt``) down to
+    ``fmt``; the random sequence r(i) is fixed at build time.  Size is
+    ``R * 2**in_bits`` output codes — the paper's ``R * 2**beta(I) * beta(O)``
+    bits.
+    """
+    if in_bits <= fmt.total_bits:
+        raise ValueError("input format must be wider than the output format")
+    rng = np.random.default_rng(seed)
+    r = rng.uniform(size=R)
+    shift = in_bits - fmt.total_bits
+    codes = np.arange(2**in_bits)
+    lo = codes >> shift
+    frac = (codes & (2**shift - 1)) / float(2**shift)
+    # f(x, i) = floor(x) if r(i) <= 1 - frac else floor(x)+eps
+    table = lo[None, :] + (r[:, None] > 1.0 - frac[None, :]).astype(np.int64)
+    return np.clip(table, 0, fmt.code_max).astype(np.int32)
+
+
+def stochastic_round_via_lut(table: np.ndarray, codes: jax.Array, step: jax.Array):
+    """Apply the rounding LUT with a replayable counter (step index)."""
+    R = table.shape[0]
+    i = jnp.asarray(step, jnp.int32) % R
+    return jnp.asarray(table)[i, codes]

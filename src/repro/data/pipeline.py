@@ -1,0 +1,57 @@
+"""Host data pipeline: deterministic sharded batches + background prefetch.
+
+Each host generates only its slice of the global batch (data-parallel
+sharding by process index), and a batch is fully determined by
+(seed, step) — the properties that make multi-pod input pipelines
+restartable and straggler-replayable.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator
+
+import jax
+
+from repro.data.synthetic import LMStreamConfig, lm_batch
+
+
+def host_slice(global_batch: int) -> tuple[int, int]:
+    """(host_batch, offset) for this process."""
+    n = jax.process_count()
+    i = jax.process_index()
+    assert global_batch % n == 0, (global_batch, n)
+    hb = global_batch // n
+    return hb, i * hb
+
+
+def lm_stream(
+    vocab_size: int, seq_len: int, global_batch: int, seed: int = 0, start_step: int = 0
+) -> Iterator[dict]:
+    hb, off = host_slice(global_batch)
+    cfg = LMStreamConfig(vocab_size, seq_len, hb, seed=seed * 1000 + off)
+    step = start_step
+    while True:
+        yield lm_batch(cfg, step)
+        step += 1
+
+
+def prefetch(it: Iterator, size: int = 2) -> Iterator:
+    """Background-thread prefetch (keeps the accelerator fed)."""
+    q: queue.Queue = queue.Queue(maxsize=size)
+    stop = object()
+
+    def worker():
+        try:
+            for item in it:
+                q.put(item)
+        finally:
+            q.put(stop)
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    while True:
+        item = q.get()
+        if item is stop:
+            return
+        yield item

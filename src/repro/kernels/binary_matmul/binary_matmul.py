@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: bitplane binary matmul (beyond-paper MXU path).
+
+Mathematically identical to the paper's bitplane LUT with chunk size 1 — a
+2-entry table ``{0, w_i}`` *is* multiplication by a bit — but re-expressed
+so the systolic array does the accumulation:
+
+    out[b, :] = sum_j scales[j] * (planes[b, j, :] @ W)
+
+``planes`` is the {0,1} bitplane tensor (int8), ``W`` the full-precision
+weights.  The n plane rows fold into the matmul M dimension, so one
+``(bb*n, qb) @ (qb, pb)`` MXU contraction per grid step; the shift-and-add
+(scale per plane) happens in-register on the (bb, n, pb) product.  Arithmetic
+intensity is that of a matmul instead of the O(1) gather path — this is the
+mode that moves LUT serving from the memory roofline to the compute
+roofline on TPU.
+
+Grid: (batch_tiles, out_tiles, in_tiles); in_tiles accumulate into the
+revisited output block.  fp32 accumulation throughout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(planes_ref, w_ref, scales_ref, out_ref):
+    """planes_ref: (bb, n, qb) int8; w_ref: (qb, pb); scales_ref: (n, 1) f32;
+    out_ref: (bb, pb) f32 (revisited over the q grid axis)."""
+    qt = pl.program_id(2)
+
+    @pl.when(qt == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    bb, n, qb = planes_ref.shape
+    lhs = planes_ref[...].astype(jnp.bfloat16).reshape(bb * n, qb)
+    prod = jnp.dot(
+        lhs, w_ref[...].astype(jnp.bfloat16), preferred_element_type=jnp.float32
+    )  # (bb*n, pb) on the MXU
+    prod = prod.reshape(bb, n, out_ref.shape[1])
+    out_ref[...] += jnp.einsum(
+        "bnp,n->bp", prod, scales_ref[:, 0], preferred_element_type=jnp.float32
+    )
+
+
+def binary_matmul_pallas(
+    planes: jax.Array,  # (B, n, q) int8 in {0, 1}
+    W: jax.Array,  # (q, p)
+    scales: jax.Array,  # (n,) f32
+    *,
+    block_b: int,
+    block_p: int,
+    block_q: int,
+    interpret: bool,
+) -> jax.Array:
+    B, n, q = planes.shape
+    q2, p = W.shape
+    assert q == q2
+    assert B % block_b == 0 and p % block_p == 0 and q % block_q == 0
+    return pl.pallas_call(
+        _kernel,
+        grid=(B // block_b, p // block_p, q // block_q),
+        in_specs=[
+            pl.BlockSpec((block_b, n, block_q), lambda b, o, i: (b, 0, i)),
+            pl.BlockSpec((block_q, block_p), lambda b, o, i: (i, o)),
+            pl.BlockSpec((n, 1), lambda b, o, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_p), lambda b, o, i: (b, o)),
+        out_shape=jax.ShapeDtypeStruct((B, p), jnp.float32),
+        interpret=interpret,
+    )(planes, W, scales.reshape(n, 1).astype(jnp.float32))

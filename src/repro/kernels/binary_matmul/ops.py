@@ -1,0 +1,55 @@
+"""Jit'd wrapper for the bitplane binary matmul."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.binary_matmul.binary_matmul import binary_matmul_pallas
+from repro.kernels.common import ceil_to, default_interpret, pad_axis
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_p", "block_q", "interpret")
+)
+def _bmm(planes, W, scales, block_b, block_p, block_q, interpret):
+    return binary_matmul_pallas(
+        planes,
+        W,
+        scales,
+        block_b=block_b,
+        block_p=block_p,
+        block_q=block_q,
+        interpret=interpret,
+    )
+
+
+def binary_matmul(
+    planes: jax.Array,  # (..., n, q) int8 bitplanes
+    W: jax.Array,  # (q, p)
+    scales: jax.Array,  # (n,)
+    bias: jax.Array | None = None,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = default_interpret()
+    *lead, n, q = planes.shape
+    p = W.shape[1]
+    B = 1
+    for d in lead:
+        B *= d
+    planes2 = planes.reshape(B, n, q)
+
+    block_b = min(ceil_to(B, 8), 64)
+    block_p = min(ceil_to(p, 128), 512)
+    block_q = min(ceil_to(q, 128), 512)
+    Bp, pp, qp = ceil_to(B, block_b), ceil_to(p, block_p), ceil_to(q, block_q)
+    planes2 = pad_axis(pad_axis(planes2, 0, Bp), 2, qp)
+    Wp = pad_axis(pad_axis(W, 0, qp), 1, pp)
+
+    out = _bmm(planes2, Wp, scales, block_b, block_p, block_q, interpret)[:B, :p]
+    if bias is not None:
+        out = out + bias.astype(out.dtype)
+    return out.reshape(*lead, p)

@@ -1,0 +1,17 @@
+"""Oracle for the bitplane binary matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def binary_matmul_ref(planes: jax.Array, W: jax.Array, scales: jax.Array) -> jax.Array:
+    """out[b] = sum_j scales[j] * planes[b, j] @ W  (bf16 inputs, f32 accum,
+    mirroring the kernel's MXU dtype path)."""
+    prod = jnp.einsum(
+        "bnq,qp->bnp",
+        planes.astype(jnp.bfloat16),
+        W.astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+    return jnp.einsum("bnp,n->bp", prod, scales.astype(jnp.float32))

@@ -1,0 +1,61 @@
+"""Jit'd wrapper for the packing kernel: padding + block choice + reshapes."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitplane_pack.bitplane_pack import bitplane_pack_pallas
+from repro.kernels.common import ceil_to, default_interpret, pad_axis
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "kind", "bits", "frac", "signed", "m", "block_b", "block_k", "interpret",
+    ),
+)
+def _packed(x, kind, bits, frac, signed, m, block_b, block_k, interpret):
+    return bitplane_pack_pallas(
+        x,
+        kind=kind,
+        bits=bits,
+        frac=frac,
+        signed=signed,
+        m=m,
+        block_b=block_b,
+        block_k=block_k,
+        interpret=interpret,
+    )
+
+
+def bitplane_pack(
+    x: jax.Array,  # (..., q)
+    *,
+    kind: str,
+    m: int,
+    bits: int = 16,
+    frac: int = 0,
+    signed: bool = False,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(..., q) -> (..., n_planes, k) LUT indices (see kernel docstring)."""
+    if interpret is None:
+        interpret = default_interpret()
+    *lead, q = x.shape
+    B = 1
+    for d in lead:
+        B *= d
+    k = -(-q // m)
+    x2 = pad_axis(x.reshape(B, q), 1, k * m)
+
+    block_k = min(ceil_to(k, 8), 256)
+    block_b = min(ceil_to(B, 8), 128)
+    Bp, kp = ceil_to(B, block_b), ceil_to(k, block_k)
+    x2 = pad_axis(x2, 0, Bp)
+    x2 = pad_axis(x2, 1, kp * m)
+
+    out = _packed(x2, kind, bits, frac, signed, m, block_b, block_k, interpret)
+    n = out.shape[1]
+    return out[:B, :, :k].reshape(*lead, n, k)

@@ -1,0 +1,14 @@
+"""Oracle for the packing kernel: the core-library pack_codes path."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.lut import LUTPlan, pack_codes
+from repro.core.quantize import FixedPointFormat, Float16Format
+
+
+def bitplane_pack_ref(x: jax.Array, *, kind, bits, frac, signed, m) -> jax.Array:
+    q = x.shape[-1]
+    fmt = Float16Format() if kind == "float16" else FixedPointFormat(bits, frac, signed)
+    plan = LUTPlan(q, 1, m, fmt, mode="bitplane")
+    return pack_codes(x, plan)

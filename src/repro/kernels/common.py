@@ -1,0 +1,25 @@
+"""Shared helpers for the Pallas TPU kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ceil_to(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def pad_axis(x: jax.Array, axis: int, to: int, value=0) -> jax.Array:
+    """Zero-pad ``axis`` of ``x`` up to length ``to``."""
+    cur = x.shape[axis]
+    if cur == to:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, to - cur)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def default_interpret() -> bool:
+    """Pallas kernels target TPU; on CPU hosts we run the kernel body in
+    interpret mode (bit-identical semantics, executed by XLA:CPU)."""
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel for the paper-faithful LUT affine map.
+
+Computes ``out[b, :] = sum_j scales[j] * sum_c tables[c, codes[b, j, c], :]``
+— the TableNet bitplane shift-and-add — with the tables resident in VMEM.
+
+TPU mapping
+-----------
+The FPGA "RAM read per chunk" becomes a *row gather* from a VMEM-resident
+``(entries, p_block)`` tile: the one random-access pattern the TPU memory
+system supports at full width (it is the embedding-lookup pattern).  The
+grid is ``(batch_tiles, out_tiles, chunk_tiles)``; chunk tiles revisit the
+output block and accumulate, so arbitrarily large layers stream through a
+fixed VMEM budget:
+
+  VMEM per step = kb * E * pb * 4   (tables)
+                + bb * n * kb * 4   (codes)
+                + bb * pb * 4       (accumulator)
+
+Block sizes are chosen so this stays under ~4 MiB (cf. ``ops.py``).  The
+plane loop is a ``fori_loop`` (n <= 16); the chunk loop is unrolled over the
+chunk tile.  All accumulation is fp32 regardless of the table dtype,
+matching the paper's full-precision-output claim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(codes_ref, tables_ref, scales_ref, out_ref, *, block_k: int, planes: int):
+    """One (batch, out, chunk) grid step.
+
+    codes_ref : (bb, n, kb) int32     VMEM
+    tables_ref: (kb, E, pb) f32/bf16  VMEM
+    scales_ref: (n, 1) f32            VMEM (2-D for TPU layout friendliness)
+    out_ref   : (bb, pb) f32          VMEM (revisited across chunk tiles)
+    """
+    kt = pl.program_id(2)
+
+    @pl.when(kt == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    def plane_body(j, acc):
+        plane = jnp.zeros(out_ref.shape, jnp.float32)
+        for c in range(block_k):  # static unroll over the chunk tile
+            idx = codes_ref[:, j, c]  # (bb,) int32
+            rows = jnp.take(tables_ref[c], idx, axis=0)  # (bb, pb) row gather
+            plane = plane + rows.astype(jnp.float32)
+        return acc + scales_ref[j, 0] * plane
+
+    acc = jax.lax.fori_loop(0, planes, plane_body, jnp.zeros(out_ref.shape, jnp.float32))
+    out_ref[...] += acc
+
+
+def lut_affine_pallas(
+    codes: jax.Array,  # (B, n, k) int32
+    tables: jax.Array,  # (k, E, p)
+    scales: jax.Array,  # (n,) f32
+    *,
+    block_b: int,
+    block_p: int,
+    block_k: int,
+    interpret: bool,
+) -> jax.Array:
+    B, n, k = codes.shape
+    k2, E, p = tables.shape
+    assert k == k2, (k, k2)
+    assert B % block_b == 0 and p % block_p == 0 and k % block_k == 0
+    grid = (B // block_b, p // block_p, k // block_k)
+
+    kernel = functools.partial(_kernel, block_k=block_k, planes=n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, n, block_k), lambda b, q, c: (b, 0, c)),
+            pl.BlockSpec((block_k, E, block_p), lambda b, q, c: (c, 0, q)),
+            pl.BlockSpec((n, 1), lambda b, q, c: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_p), lambda b, q, c: (b, q)),
+        out_shape=jax.ShapeDtypeStruct((B, p), jnp.float32),
+        interpret=interpret,
+    )(codes, tables, scales.reshape(n, 1).astype(jnp.float32))

@@ -1,0 +1,74 @@
+"""Jit'd public wrapper around the LUT affine Pallas kernel.
+
+Handles padding to block multiples, block-size selection under a VMEM
+budget, bias, and arbitrary leading batch dims.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import ceil_to, default_interpret, pad_axis
+from repro.kernels.lut_affine.lut_affine import lut_affine_pallas
+
+_VMEM_BUDGET = 4 * 2**20  # bytes of live blocks per grid step
+
+
+def _pick_blocks(B: int, k: int, E: int, p: int, n: int):
+    block_p = min(ceil_to(p, 128), 512)
+    block_b = min(ceil_to(B, 8), 128)
+    # tables dominate VMEM: kb * E * pb * 4 <= budget
+    max_kb = max(1, _VMEM_BUDGET // (E * block_p * 4))
+    block_k = 1
+    while block_k * 2 <= min(max_kb, k):
+        block_k *= 2
+    return block_b, block_p, block_k
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_p", "block_k", "interpret")
+)
+def _lut_affine_padded(codes, tables, scales, block_b, block_p, block_k, interpret):
+    return lut_affine_pallas(
+        codes,
+        tables,
+        scales,
+        block_b=block_b,
+        block_p=block_p,
+        block_k=block_k,
+        interpret=interpret,
+    )
+
+
+def lut_affine(
+    codes: jax.Array,  # (..., n, k) int32
+    tables: jax.Array,  # (k, E, p)
+    scales: jax.Array,  # (n,)
+    bias: jax.Array | None = None,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """out[..., :] = sum_j scales[j] * sum_c tables[c, codes[..., j, c], :] + bias"""
+    if interpret is None:
+        interpret = default_interpret()
+    *lead, n, k = codes.shape
+    _, E, p = tables.shape
+    B = 1
+    for d in lead:
+        B *= d
+    codes2 = codes.reshape(B, n, k)
+
+    block_b, block_p, block_k = _pick_blocks(B, k, E, p, n)
+    Bp, pp, kp = ceil_to(B, block_b), ceil_to(p, block_p), ceil_to(k, block_k)
+    codes2 = pad_axis(pad_axis(codes2, 0, Bp), 2, kp)
+    # padded chunks index entry 0 of a zero table -> contribute nothing
+    tables_p = pad_axis(pad_axis(tables, 0, kp), 2, pp)
+
+    out = _lut_affine_padded(
+        codes2, tables_p, scales, block_b, block_p, block_k, interpret
+    )[:B, :p]
+    if bias is not None:
+        out = out + bias.astype(out.dtype)
+    return out.reshape(*lead, p)

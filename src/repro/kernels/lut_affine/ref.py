@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the LUT affine kernel (identical contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lut_affine_ref(
+    codes: jax.Array,  # (B, n, k) int32
+    tables: jax.Array,  # (k, E, p)
+    scales: jax.Array,  # (n,)
+) -> jax.Array:
+    k = tables.shape[0]
+    gathered = tables[jnp.arange(k), codes]  # (B, n, k, p)
+    per_plane = jnp.sum(gathered.astype(jnp.float32), axis=-2)  # (B, n, p)
+    return jnp.einsum("bnp,n->bp", per_plane, scales.astype(jnp.float32))

@@ -1,0 +1,177 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment, the conv/mel frontend is a STUB: the model consumes
+precomputed frame embeddings (B, S_enc, d) from ``input_specs()``.  Encoder
+is bidirectional with sinusoidal positions; decoder is causal self-attention
++ cross-attention to the encoder output.  At serve time the cross K/V are
+computed once at prefill and cached (they are static thereafter).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.layers import Ctx
+from repro.models.params import PSpec
+from repro.models.transformer import _remat_policy, lm_logits, stack_specs
+
+
+def encdec_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    enc_block = {
+        "ln1": L.norm_spec(cfg),
+        "attn": L.attention_specs(cfg),
+        "ln2": L.norm_spec(cfg),
+        "mlp": L.mlp_specs(cfg),
+    }
+    dec_block = {
+        "ln1": L.norm_spec(cfg),
+        "self_attn": L.attention_specs(cfg),
+        "ln_x": L.norm_spec(cfg),
+        "cross_attn": L.attention_specs(cfg),
+        "ln2": L.norm_spec(cfg),
+        "mlp": L.mlp_specs(cfg),
+    }
+    return {
+        "embed": PSpec((cfg.padded_vocab, d), ("vocab", "embed"), init="embed"),
+        "encoder": stack_specs(enc_block, cfg.encoder_layers),
+        "enc_ln_f": L.norm_spec(cfg),
+        "decoder": stack_specs(dec_block, cfg.num_layers),
+        "ln_f": L.norm_spec(cfg),
+        # whisper ties the output head to the token embedding
+    }
+
+
+def encode(params: dict, enc_embeds: jax.Array, ctx: Ctx) -> jax.Array:
+    cfg = ctx.cfg
+    B, S, d = enc_embeds.shape
+    x = enc_embeds + L.sinusoidal_embedding(S, d)[None].astype(enc_embeds.dtype)
+    x = ctx.shard.constrain(x, "batch", None, None)
+
+    # bidirectional self-attention (full-visibility mask)
+    def enc_attn_body(carry, lp):
+        h = L.apply_norm(lp["ln1"], carry, cfg)
+        q = L._split_heads(L.linear(lp["attn"]["wq"], h, ctx), cfg.num_heads)
+        k = L._split_heads(L.linear(lp["attn"]["wk"], h, ctx), cfg.num_kv_heads)
+        v = L._split_heads(L.linear(lp["attn"]["wv"], h, ctx), cfg.num_kv_heads)
+        if ctx.shard.heads_shardable(cfg.num_heads):
+            q = ctx.shard.constrain(q, "batch", None, "heads", None)
+            k = ctx.shard.constrain(k, "batch", None, "kv_heads", None)
+            v = ctx.shard.constrain(v, "batch", None, "kv_heads", None)
+        else:  # whisper's 8 heads don't shard 16-way: shard query positions
+            q = ctx.shard.constrain(q, "batch", "qseq", None, None)
+        mask = jnp.ones((B, 1, S, S), bool)
+        o = L._sdpa(q, k, v, mask, ctx)
+        x2 = carry + ctx.shard.constrain(L.linear(lp["attn"]["wo"], o, ctx), "batch", None, None)
+        return x2 + L.mlp(lp["mlp"], L.apply_norm(lp["ln2"], x2, cfg), ctx), None
+
+    fn = enc_attn_body
+    if ctx.ex.remat != "none":
+        fn = jax.checkpoint(fn, policy=_remat_policy(ctx.ex.remat))
+    x, _ = jax.lax.scan(fn, x, params["encoder"],
+                        unroll=True if ctx.ex.inner_unroll else 1)
+    return L.apply_norm(params["enc_ln_f"], x, cfg)
+
+
+def _cross_kv_from(params_layer: dict, enc_out: jax.Array, ctx: Ctx):
+    k = L._split_heads(L.linear(params_layer["wk"], enc_out, ctx), ctx.cfg.num_kv_heads)
+    v = L._split_heads(L.linear(params_layer["wv"], enc_out, ctx), ctx.cfg.num_kv_heads)
+    return k, v
+
+
+def decode_blocks(params, x, ctx: Ctx, positions, cache_layers, meta, enc_out,
+                  cross_cache=None):
+    cfg = ctx.cfg
+
+    def body(carry, xs):
+        lp, lc, cc = xs
+        h = L.apply_norm(lp["ln1"], carry, cfg)
+        cache_in = dict(lc, _meta=meta) if lc else None
+        h, new_c = L.attention(lp["self_attn"], h, ctx, positions, cache=cache_in)
+        x2 = carry + h
+        h = L.apply_norm(lp["ln_x"], x2, cfg)
+        if cc:  # serve path: static cross K/V from the cache
+            ckv = (cc["k"], cc["v"])
+        else:  # train path: recompute from encoder output
+            ckv = _cross_kv_from(lp["cross_attn"], enc_out, ctx)
+        h, _ = L.attention(lp["cross_attn"], h, ctx, positions, cross_kv=ckv)
+        x2 = x2 + h
+        x2 = x2 + L.mlp(lp["mlp"], L.apply_norm(lp["ln2"], x2, cfg), ctx)
+        return x2, (new_c if new_c is not None else {})
+
+    if ctx.ex.remat != "none":
+        body = jax.checkpoint(body, policy=_remat_policy(ctx.ex.remat))
+    xs = (
+        params["decoder"],
+        cache_layers if cache_layers is not None else {},
+        cross_cache if cross_cache is not None else {},
+    )
+    x, new_caches = jax.lax.scan(body, x, xs,
+                                 unroll=True if ctx.ex.inner_unroll else 1)
+    return x, (new_caches if cache_layers is not None else None)
+
+
+def forward(
+    params: dict,
+    tokens: jax.Array,  # (B, S_dec)
+    ctx: Ctx,
+    enc_embeds: Optional[jax.Array] = None,  # (B, S_enc, d); None at decode
+    positions: Optional[jax.Array] = None,
+    cache: Optional[dict] = None,
+):
+    from repro.serve.cache import advance_meta
+
+    cfg = ctx.cfg
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if positions is None:
+        start = cache["index"][:, None] if cache is not None else 0
+        positions = jnp.broadcast_to(
+            start + jnp.arange(S, dtype=jnp.int32)[None], (B, S)
+        )
+    # decoder positions: sinusoidal lookup at absolute positions (stands in
+    # for whisper's learned table — see DESIGN.md §5)
+    pos_emb = _sinusoidal_at(positions, cfg.d_model).astype(x.dtype)
+    x = ctx.shard.constrain(x + pos_emb, "batch", None, None)
+
+    meta, cache_layers, cross_cache, enc_out = None, None, None, None
+    if cache is not None:
+        cache = advance_meta(cache, positions, None)
+        meta = {"pos": cache["pos"], "valid": cache["valid"], "index": cache["index"]}
+        cache_layers = cache["layers"]
+        cross_cache = cache["cross"]
+        if enc_embeds is not None:  # prefill: fill the cross cache
+            enc_out = encode(params, enc_embeds, ctx)
+            ks, vs = [], []
+            for i in range(cfg.num_layers):
+                lp = jax.tree.map(lambda a: a[i], params["decoder"])
+                k, v = _cross_kv_from(lp["cross_attn"], enc_out, ctx)
+                ks.append(k), vs.append(v)
+            cross_cache = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+    else:
+        assert enc_embeds is not None
+        enc_out = encode(params, enc_embeds, ctx)
+
+    x, new_layers = decode_blocks(
+        params, x, ctx, positions, cache_layers, meta, enc_out, cross_cache
+    )
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    if ctx.ex.logits == "last":
+        x = x[:, -1:]
+    logits = x @ params["embed"].T  # tied head
+    logits = ctx.shard.constrain(logits, "batch", None, "vocab")
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(cache, layers=new_layers, cross=cross_cache)
+    return logits, new_cache, jnp.zeros((), jnp.float32)
+
+
+def _sinusoidal_at(positions: jax.Array, d: int) -> jax.Array:
+    pos = positions.astype(jnp.float32)[..., None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,136 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a *shared-weight* attention+MLP
+block invoked between segments of SSD layers.
+
+Layout for L mamba layers with cadence ``shared_attn_every = g``:
+  [g mamba] shared [g mamba] shared ... [remainder mamba]
+Each shared-block invocation has its own KV cache slot (weights are shared,
+activations are not).  Segments use static slices of the stacked mamba
+params, so each segment is one lax.scan over its g layers.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.layers import Ctx
+from repro.models.params import PSpec
+from repro.models.ssm import mamba_block, mamba_specs
+from repro.models.transformer import _remat_policy, embed_tokens, lm_logits, stack_specs
+
+
+def segments(cfg: ModelConfig) -> list[int]:
+    g = cfg.shared_attn_every
+    L_ = cfg.num_layers
+    segs = [g] * (L_ // g)
+    if L_ % g:
+        segs.append(L_ % g)
+    return segs
+
+
+def hybrid_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    s = {
+        "embed": PSpec((cfg.padded_vocab, d), ("vocab", "embed"), init="embed"),
+        "mamba": stack_specs(
+            {"ln": L.norm_spec(cfg), "mix": mamba_specs(cfg)}, cfg.num_layers
+        ),
+        "shared": {
+            "ln1": L.norm_spec(cfg),
+            "attn": L.attention_specs(cfg),
+            "ln2": L.norm_spec(cfg),
+            "mlp": L.mlp_specs(cfg),
+        },
+        "ln_f": L.norm_spec(cfg),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = L.linear_spec(d, cfg.padded_vocab, axes=("embed", "vocab"))
+    return s
+
+
+def _mamba_segment(params_slice, x, ctx: Ctx, cache_slice):
+    def body(carry, xs):
+        lp, lc = xs
+        h, new_c = mamba_block(lp["mix"], L.apply_norm(lp["ln"], carry, ctx.cfg), ctx,
+                               cache=lc if lc else None)
+        return carry + h, (new_c if new_c is not None else {})
+
+    if ctx.ex.remat != "none":
+        body = jax.checkpoint(body, policy=_remat_policy(ctx.ex.remat))
+    xs = (params_slice, cache_slice if cache_slice is not None else {})
+    return jax.lax.scan(body, x, xs, unroll=True if ctx.ex.inner_unroll else 1)
+
+
+def forward(
+    params: dict,
+    tokens: jax.Array,
+    ctx: Ctx,
+    positions: Optional[jax.Array] = None,
+    cache: Optional[dict] = None,
+    embeds=None,
+):
+    from repro.serve.cache import advance_meta
+
+    cfg = ctx.cfg
+    x = embed_tokens(params, tokens, ctx)
+    B, S, _ = x.shape
+    if positions is None:
+        start = cache["index"][:, None] if cache is not None else 0
+        positions = jnp.broadcast_to(
+            start + jnp.arange(S, dtype=jnp.int32)[None, :], (B, S)
+        )
+
+    meta, shared_kv, mamba_cache = None, None, None
+    if cache is not None:
+        cache = advance_meta(cache, positions, None)
+        meta = {"pos": cache["pos"], "valid": cache["valid"], "index": cache["index"]}
+        shared_kv = cache["shared_attn"]
+        mamba_cache = cache["layers"]
+
+    segs = segments(cfg)
+    new_mamba, new_shared = [], []
+    start = 0
+    for i, g in enumerate(segs):
+        p_slice = jax.tree.map(lambda a: a[start : start + g], params["mamba"])
+        c_slice = (
+            jax.tree.map(lambda a: a[start : start + g], mamba_cache)
+            if mamba_cache is not None
+            else None
+        )
+        x, seg_cache = _mamba_segment(p_slice, x, ctx, c_slice)
+        if mamba_cache is not None:
+            new_mamba.append(seg_cache)
+        start += g
+        if i < len(segs) - 1 and cfg.shared_attn_every:
+            sp = params["shared"]
+            lc = None
+            if shared_kv is not None:
+                lc = dict(
+                    jax.tree.map(lambda a: a[i], shared_kv), _meta=meta
+                )
+            h, new_kv = L.attention(
+                sp["attn"], L.apply_norm(sp["ln1"], x, cfg), ctx, positions, cache=lc
+            )
+            x = x + h
+            x = x + L.mlp(sp["mlp"], L.apply_norm(sp["ln2"], x, cfg), ctx)
+            if shared_kv is not None:
+                new_shared.append(new_kv)
+
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    if ctx.ex.logits == "last":
+        x = x[:, -1:]
+    logits = lm_logits(params, x, ctx)
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(
+            cache,
+            layers=jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_mamba),
+            shared_attn=(
+                jax.tree.map(lambda *xs: jnp.stack(xs, 0), *new_shared)
+                if new_shared else cache["shared_attn"]
+            ),
+        )
+    return logits, new_cache, jnp.zeros((), jnp.float32)

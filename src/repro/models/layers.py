@@ -1,0 +1,441 @@
+"""Shared model layers: norms, RoPE, linears (with TableNet exec modes),
+attention (GQA / sliding-window / MLA / cross) for both full-sequence and
+cached-decode paths, and MLPs.
+
+Every projection goes through :func:`linear`, which is where the paper's
+technique plugs into the zoo: converted parameter trees carry ``tables``
+instead of ``w`` and execute via the LUT path (jnp oracle under GSPMD, the
+Pallas kernel on real single-device runs); ``binary_matmul`` mode runs the
+beyond-paper bitplane-MXU path against the original weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.lut import LUTPlan, apply_luts, pack_codes, plane_scales
+from repro.core.quantize import FixedPointFormat, Float16Format
+from repro.dist.sharding import ShardCtx
+from repro.models.params import PSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecCfg:
+    """Static execution options (hashable; closed over by jitted steps)."""
+
+    linear_mode: str = "standard"  # standard | lut_gather | onehot_mxu | binary_matmul
+    lut_chunk: int = 2  # elements per LUT for converted layers
+    fixed_bits: int = 8  # binary_matmul input format
+    fixed_frac: int = 6
+    use_pallas: bool = False  # Pallas kernels vs jnp oracles
+    remat: str = "full"  # full | dots | dots_no_batch | none
+    logits: str = "all"  # all | last (prefill: only the final position's head)
+    inner_unroll: bool = False  # unroll chunk scans (cost-analysis probes)
+    ssd_chunk: int = 0  # 0 = auto(64); hillclimb knob for the SSD scan
+    ssd_bf16: bool = False  # bf16 intra-chunk SSD math (cumsums stay f32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Ctx:
+    cfg: ModelConfig
+    shard: ShardCtx = ShardCtx()
+    ex: ExecCfg = ExecCfg()
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_spec(cfg: ModelConfig, d: int | None = None) -> dict:
+    d = d or cfg.d_model
+    s = {"scale": PSpec((d,), ("embed",), init="ones")}
+    if cfg.norm == "layernorm":
+        s["bias"] = PSpec((d,), ("embed",), init="zeros")
+    return s
+
+
+def apply_norm(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), -1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear with TableNet execution modes
+# ---------------------------------------------------------------------------
+
+
+def linear_spec(
+    d_in: int, d_out: int, axes=("embed", "heads_flat"), bias: bool = False
+) -> dict:
+    s = {"w": PSpec((d_in, d_out), axes)}
+    if bias:
+        s["b"] = PSpec((d_out,), (axes[1],), init="zeros")
+    return s
+
+
+def _lut_plan_for(q: int, p_out: int, num_entries: int) -> LUTPlan:
+    """Reconstruct the conversion-time plan from the stored table shape.
+    Index widths are multiples of 7 (signed fp16) or 6 (unsigned) — disjoint
+    sets below the practical limit, so the format is inferable."""
+    lb = int(math.log2(num_entries))
+    fmt = Float16Format(signed=lb % 7 == 0)
+    m = lb // fmt.fields_per_element
+    assert 2 ** (m * fmt.fields_per_element) == num_entries, num_entries
+    return LUTPlan(q, p_out, m, fmt, mode="bitplane")
+
+
+def linear(p: dict, x: jax.Array, ctx: Ctx) -> jax.Array:
+    """y = x @ W (+ b), or its TableNet-converted equivalents."""
+    ex = ctx.ex
+    b = p.get("b")
+    if "tables" in p:  # converted layer: paper-faithful LUT execution
+        q = x.shape[-1]
+        _, entries, p_out = p["tables"].shape
+        plan = _lut_plan_for(q, p_out, entries)
+        codes = pack_codes(x, plan)
+        scales = jnp.asarray(plane_scales(plan), jnp.float32)
+        if ex.use_pallas:
+            from repro.kernels.lut_affine.ops import lut_affine
+
+            y = lut_affine(codes, p["tables"], scales, bias=b)
+        elif ex.linear_mode == "onehot_mxu":
+            onehot = jax.nn.one_hot(codes, plan.num_entries, dtype=jnp.bfloat16)
+            per_plane = jnp.einsum(
+                "...nke,kep->...np",
+                onehot,
+                p["tables"].astype(jnp.bfloat16),
+                preferred_element_type=jnp.float32,
+            )
+            y = jnp.einsum("...np,n->...p", per_plane, scales)
+            if b is not None:
+                y = y + b
+        else:
+            y = apply_luts(p["tables"], codes, plan, bias=b)
+        return y.astype(x.dtype)
+    if ex.linear_mode == "binary_matmul":  # beyond-paper MXU bitplane path
+        fmt = FixedPointFormat(ex.fixed_bits, ex.fixed_frac, signed=True)
+        plan = LUTPlan(x.shape[-1], p["w"].shape[-1], 1, fmt, mode="bitplane")
+        codes = pack_codes(x, plan)  # (..., n, q) chunk=1 -> bits
+        scales = jnp.asarray(plane_scales(plan), jnp.float32)
+        if ex.use_pallas:
+            from repro.kernels.binary_matmul.ops import binary_matmul
+
+            y = binary_matmul(codes.astype(jnp.int8), p["w"], scales, bias=b)
+        else:
+            prod = jnp.einsum(
+                "...nq,qp->...np",
+                codes.astype(jnp.bfloat16),
+                p["w"].astype(jnp.bfloat16),
+                preferred_element_type=jnp.float32,
+            )
+            y = jnp.einsum("...np,n->...p", prod, scales)
+            if b is not None:
+                y = y + b
+        return y.astype(x.dtype)
+    y = x @ p["w"]
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Positions
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D) with D even; positions: (B, S) absolute indices."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(S: int, d: int) -> jax.Array:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA family)
+# ---------------------------------------------------------------------------
+
+
+def attention_specs(cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    bias = cfg.attn_bias
+    return {
+        "wq": linear_spec(d, cfg.num_heads * hd, bias=bias),
+        "wk": linear_spec(d, cfg.num_kv_heads * hd, bias=bias),
+        "wv": linear_spec(d, cfg.num_kv_heads * hd, bias=bias),
+        "wo": linear_spec(cfg.num_heads * hd, d, axes=("heads_flat", "embed")),
+    }
+
+
+def _split_heads(x: jax.Array, n: int) -> jax.Array:
+    B, S, _ = x.shape
+    return x.reshape(B, S, n, -1)
+
+
+def _mask_bias(mask: jax.Array) -> jax.Array:
+    return jnp.where(mask, 0.0, -1e9).astype(jnp.float32)
+
+
+def _sdpa(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Sk, K, hd)
+    v: jax.Array,  # (B, Sk, K, hd)
+    mask: jax.Array,  # (B, 1, Sq, Sk) or (B, 1, 1, Sk) boolean
+    ctx: Ctx,
+) -> jax.Array:
+    """Grouped scaled-dot-product attention; returns (B, Sq, H*hd)."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, hd)
+    scores = jnp.einsum(
+        "bskgh,btkh->bkgst", qg, k, preferred_element_type=jnp.float32
+    ) / math.sqrt(hd)
+    scores = scores + _mask_bias(mask)[:, :, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(B, Sq, H * hd)
+
+
+def causal_mask(
+    q_pos: jax.Array,  # (B, Sq)
+    k_pos: jax.Array,  # (B, Sk)
+    k_valid: jax.Array | None = None,  # (B, Sk) bool
+    window: int | None = None,
+) -> jax.Array:
+    m = q_pos[:, :, None] >= k_pos[:, None, :]
+    if window is not None:
+        m &= q_pos[:, :, None] - k_pos[:, None, :] < window
+    if k_valid is not None:
+        m &= k_valid[:, None, :]
+    return m[:, None]  # (B, 1, Sq, Sk)
+
+
+def attention(
+    p: dict,
+    x: jax.Array,
+    ctx: Ctx,
+    positions: jax.Array,
+    cache: dict | None = None,
+    cross_kv: tuple[jax.Array, jax.Array] | None = None,
+    is_causal: bool = True,
+):
+    """Full-sequence (train/prefill) or cached-decode attention.
+
+    Returns (out, new_cache).  ``cache`` layouts are defined in
+    ``repro.serve.cache``; updates use one-hot scatter so the sequence dim
+    of the cache can stay sharded over the model axis (T5X-style — GSPMD
+    partitions the one-hot contraction; no dynamic-slice-on-sharded-dim).
+    """
+    cfg, sh = ctx.cfg, ctx.shard
+    B, S, _ = x.shape
+    q = _split_heads(linear(p["wq"], x, ctx), cfg.num_heads)
+    if cross_kv is None:
+        k = _split_heads(linear(p["wk"], x, ctx), cfg.num_kv_heads)
+        v = _split_heads(linear(p["wv"], x, ctx), cfg.num_kv_heads)
+        if cfg.pos == "rope":
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+    else:
+        k, v = cross_kv
+        if cfg.pos == "rope":
+            q = rope(q, positions, cfg.rope_theta)
+
+    heads_tp = sh.heads_shardable(cfg.num_heads) and sh.heads_shardable(
+        cfg.num_kv_heads
+    )
+    new_cache = None
+    if cache is not None and cross_kv is None and S == 1:
+        # decode: attend over the cached keys
+        from repro.serve.cache import update_kv_cache
+
+        cache, k, v, k_pos, k_valid = update_kv_cache(cache, k, v, positions, ctx)
+        new_cache = cache
+        mask = causal_mask(positions, k_pos, k_valid, cfg.sliding_window)
+        q = sh.constrain(q, "batch", None, "heads" if heads_tp else None, None)
+    elif cache is not None and cross_kv is None:
+        # prefill (fresh cache): attend over the in-flight keys — the ring
+        # cache only retains the last `window` keys, which is state for
+        # decode, not a valid view for early query positions
+        from repro.serve.cache import update_kv_cache
+
+        new_cache, _, _, _, _ = update_kv_cache(cache, k, v, positions, ctx)
+        if heads_tp:
+            q = sh.constrain(q, "batch", None, "heads", None)
+            k = sh.constrain(k, "batch", None, "kv_heads", None)
+            v = sh.constrain(v, "batch", None, "kv_heads", None)
+        else:
+            q = sh.constrain(q, "batch", "qseq", None, None)
+        mask = causal_mask(positions, positions, None, cfg.sliding_window)
+    else:
+        if heads_tp:
+            q = sh.constrain(q, "batch", None, "heads", None)
+            k = sh.constrain(k, "batch", None, "kv_heads", None)
+            v = sh.constrain(v, "batch", None, "kv_heads", None)
+        elif S > 1:
+            # fallback: shard query positions over the model axis; K/V are
+            # gathered (sub-16-way head counts: DESIGN.md §4)
+            q = sh.constrain(q, "batch", "qseq", None, None)
+        if cross_kv is not None:
+            mask = jnp.ones((B, 1, S, k.shape[1]), bool)
+        else:
+            mask = causal_mask(positions, positions, None, cfg.sliding_window)
+
+    out = _sdpa(q, k, v, mask, ctx)
+    out = linear(p["wo"], out, ctx)
+    return sh.constrain(out, "batch", None, None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (minicpm3 / deepseek-style latent KV)
+# ---------------------------------------------------------------------------
+
+
+def mla_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    nope, rdim, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    H = cfg.num_heads
+    s = {
+        "wq_a": linear_spec(d, cfg.q_lora_rank, axes=("embed", None)),
+        "q_norm": {"scale": PSpec((cfg.q_lora_rank,), (None,), init="ones")},
+        "wq_b": linear_spec(cfg.q_lora_rank, H * (nope + rdim), axes=(None, "heads_flat")),
+        "wkv_a": linear_spec(d, cfg.kv_lora_rank + rdim, axes=("embed", None)),
+        "kv_norm": {"scale": PSpec((cfg.kv_lora_rank,), (None,), init="ones")},
+        "wk_b": linear_spec(cfg.kv_lora_rank, H * nope, axes=(None, "heads_flat")),
+        "wv_b": linear_spec(cfg.kv_lora_rank, H * vdim, axes=(None, "heads_flat")),
+        "wo": linear_spec(H * vdim, d, axes=("heads_flat", "embed")),
+    }
+    return s
+
+
+def _rms(x, scale, eps):
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+def mla_attention(
+    p: dict,
+    x: jax.Array,
+    ctx: Ctx,
+    positions: jax.Array,
+    cache: dict | None = None,
+):
+    cfg, sh = ctx.cfg, ctx.shard
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    nope, rdim, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+
+    q = linear(p["wq_b"], _rms(linear(p["wq_a"], x, ctx), p["q_norm"]["scale"], cfg.norm_eps), ctx)
+    q = q.reshape(B, S, H, nope + rdim)
+    # 40 heads don't shard 16-way: fall back to query-position sharding so
+    # the (B, H, Sq, Sk) score tensors stay model-sharded (DESIGN.md §4)
+    heads_tp = sh.heads_shardable(H)
+    if S > 1:
+        q = sh.constrain(
+            q, "batch", None if heads_tp else "qseq", "heads" if heads_tp else None, None
+        )
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    kv = linear(p["wkv_a"], x, ctx)
+    c_kv = _rms(kv[..., : cfg.kv_lora_rank], p["kv_norm"]["scale"], cfg.norm_eps)
+    k_rope = rope(kv[..., cfg.kv_lora_rank :][:, :, None, :], positions, cfg.rope_theta)[
+        :, :, 0
+    ]  # (B, S, rdim) shared across heads
+
+    if cache is not None and S == 1:
+        from repro.serve.cache import update_mla_cache
+
+        cache, c_kv_all, k_rope_all, k_pos, k_valid = update_mla_cache(
+            cache, c_kv, k_rope, positions, ctx
+        )
+        mask = causal_mask(positions, k_pos, k_valid)
+    elif cache is not None:  # prefill: write cache, attend in-flight
+        from repro.serve.cache import update_mla_cache
+
+        cache, _, _, _, _ = update_mla_cache(cache, c_kv, k_rope, positions, ctx)
+        c_kv_all, k_rope_all = c_kv, k_rope
+        mask = causal_mask(positions, positions)
+    else:
+        cache, c_kv_all, k_rope_all = None, c_kv, k_rope
+        mask = causal_mask(positions, positions)
+
+    # absorbed form: q_nope projected into latent space (decode-friendly)
+    wk_b = p["wk_b"]["w"].reshape(cfg.kv_lora_rank, H, nope)
+    q_lat = jnp.einsum("bshn,lhn->bshl", q_nope, wk_b)  # (B, S, H, kv_lora)
+    scores = (
+        jnp.einsum("bshl,btl->bhst", q_lat, c_kv_all, preferred_element_type=jnp.float32)
+        + jnp.einsum(
+            "bshr,btr->bhst", q_rope, k_rope_all, preferred_element_type=jnp.float32
+        )
+    ) / math.sqrt(nope + rdim)
+    if S > 1:
+        scores = sh.constrain(
+            scores, "batch", "heads" if heads_tp else None,
+            None if heads_tp else "qseq", None,
+        )
+    probs = jax.nn.softmax(scores + _mask_bias(mask), axis=-1).astype(x.dtype)
+    ctx_lat = jnp.einsum("bhst,btl->bshl", probs, c_kv_all)  # (B, S, H, kv_lora)
+    wv_b = p["wv_b"]["w"].reshape(cfg.kv_lora_rank, H, vdim)
+    out = jnp.einsum("bshl,lhv->bshv", ctx_lat, wv_b).reshape(B, S, H * vdim)
+    out = linear(p["wo"], out, ctx)
+    return sh.constrain(out, "batch", None, None), cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act in ("gelu", "relu2"):  # 2-matrix MLP (whisper GELU, nemotron reluÂ²)
+        return {
+            "w_in": linear_spec(d, f, axes=("embed", "mlp"), bias=cfg.act == "gelu"),
+            "w_out": linear_spec(f, d, axes=("mlp", "embed"), bias=cfg.act == "gelu"),
+        }
+    return {
+        "w_gate": linear_spec(d, f, axes=("embed", "mlp")),
+        "w_up": linear_spec(d, f, axes=("embed", "mlp")),
+        "w_down": linear_spec(f, d, axes=("mlp", "embed")),
+    }
+
+
+def mlp(p: dict, x: jax.Array, ctx: Ctx) -> jax.Array:
+    sh = ctx.shard
+    if "w_in" in p:
+        h = linear(p["w_in"], x, ctx)
+        h = jnp.square(jax.nn.relu(h)) if ctx.cfg.act == "relu2" else jax.nn.gelu(h)
+        h = sh.constrain(h, "batch", None, "mlp")
+        return sh.constrain(linear(p["w_out"], h, ctx), "batch", None, None)
+    g = linear(p["w_gate"], x, ctx)
+    u = linear(p["w_up"], x, ctx)
+    h = jax.nn.silu(g) * u
+    h = sh.constrain(h, "batch", None, "mlp")
+    return sh.constrain(linear(p["w_down"], h, ctx), "batch", None, None)

@@ -1,0 +1,67 @@
+"""Model registry: family -> (specs, forward) dispatch.
+
+The unified contract every family implements:
+  model_specs(cfg)                          -> PSpec tree
+  model_forward(params, batch_inputs, ctx, cache=None) -> (logits, cache, aux)
+where batch inputs are {"tokens", and optionally "embeds" (VLM patch
+embeddings) / "enc_embeds" (audio frame embeddings)} — the modality
+frontends are stubs per the assignment.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Ctx
+
+
+def model_specs(cfg: ModelConfig) -> dict:
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models.transformer import decoder_specs
+
+        return decoder_specs(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.hybrid import hybrid_specs
+
+        return hybrid_specs(cfg)
+    if cfg.family == "ssm":
+        from repro.models.rwkv import rwkv_lm_specs
+
+        return rwkv_lm_specs(cfg)
+    if cfg.family == "encdec":
+        from repro.models.encdec import encdec_specs
+
+        return encdec_specs(cfg)
+    raise ValueError(cfg.family)
+
+
+def model_forward(
+    params: dict,
+    inputs: dict[str, jax.Array],
+    ctx: Ctx,
+    cache: Optional[dict] = None,
+):
+    """Returns (logits, new_cache, aux_loss)."""
+    cfg = ctx.cfg
+    tokens = inputs["tokens"]
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models.transformer import forward
+
+        return forward(params, tokens, ctx, cache=cache, embeds=inputs.get("embeds"))
+    if cfg.family == "hybrid":
+        from repro.models.hybrid import forward
+
+        return forward(params, tokens, ctx, cache=cache)
+    if cfg.family == "ssm":
+        from repro.models.rwkv import forward
+
+        return forward(params, tokens, ctx, cache=cache)
+    if cfg.family == "encdec":
+        from repro.models.encdec import forward
+
+        return forward(
+            params, tokens, ctx, enc_embeds=inputs.get("enc_embeds"), cache=cache
+        )
+    raise ValueError(cfg.family)

@@ -1,0 +1,115 @@
+"""Mixture-of-experts FFN: top-k routing + MegaBlocks-style grouped GEMM.
+
+Distribution (DESIGN.md §4): dispatch is *local to each data shard* via
+``jax.shard_map`` — routing, sort and ``lax.ragged_dot`` never cross the data
+axis; expert weights are TP-sharded on d_ff over the model axis (expert-TP,
+not EP, so arbitrary expert counts never constrain the mesh) and the second
+ragged_dot's partial sums reduce with one psum over "model" — the same
+collective a dense TP MLP pays.  Measured on the fake-device mesh: the naive
+GSPMD formulation instead all-gathers the full (T*k, d) dispatch per layer.
+
+Qwen2-MoE-style shared experts run as a dense SwiGLU branch added to the
+routed output, and the router uses the standard load-balancing auxiliary
+loss (Switch §2.2), returned alongside the output.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Ctx, linear, linear_spec, mlp, mlp_specs
+from repro.models.params import PSpec
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    s = {
+        "router": PSpec((d, E), ("embed", None), dtype=jnp.float32),
+        "w_gate": PSpec((E, d, f), ("experts", "embed", "mlp")),
+        "w_up": PSpec((E, d, f), ("experts", "embed", "mlp")),
+        "w_down": PSpec((E, f, d), ("experts", "mlp", "embed")),
+    }
+    if cfg.num_shared_experts:
+        s["shared"] = mlp_specs(cfg, d_ff=cfg.num_shared_experts * cfg.moe_d_ff)
+        s["shared_gate"] = PSpec((d, 1), ("embed", None), dtype=jnp.float32)
+    return s
+
+
+def _route(x: jax.Array, router_w: jax.Array, cfg: ModelConfig):
+    """(T, d) -> combine weights (T, k), expert ids (T, k), aux loss scalar."""
+    logits = x.astype(jnp.float32) @ router_w
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    weights = weights / jnp.sum(weights, -1, keepdims=True)
+    # Switch-style load-balance loss: E * sum_e f_e * P_e
+    E = cfg.num_experts
+    f_e = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=1), axis=0
+    )
+    P_e = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f_e * P_e)
+    return weights.astype(x.dtype), idx, aux
+
+
+def _moe_local(x, router_w, w_gate, w_up, w_down, *, cfg: ModelConfig, psum_axes):
+    """Per-shard expert compute. x: (T_local, d); weights may be TP slices."""
+    k = cfg.num_experts_per_tok
+    weights, idx, aux = _route(x, router_w, cfg)
+    flat = idx.reshape(-1)  # (T*k,)
+    order = jnp.argsort(flat)
+    token_of = order // k
+    xs = jnp.take(x, token_of, axis=0)  # (T*k, d) sorted by expert
+    group_sizes = jnp.bincount(flat, length=cfg.num_experts)
+    g = jax.lax.ragged_dot(xs, w_gate, group_sizes)
+    u = jax.lax.ragged_dot(xs, w_up, group_sizes)
+    h = jax.nn.silu(g) * u  # (T*k, f_local)
+    y = jax.lax.ragged_dot(h, w_down, group_sizes)  # partial over f_local
+    if psum_axes:
+        y = jax.lax.psum(y, psum_axes)
+        aux = jax.lax.pmean(aux, psum_axes)
+    combine = weights.reshape(-1)[order][:, None].astype(y.dtype)
+    out = jnp.zeros_like(x).at[token_of].add(y * combine)
+    return out, aux
+
+
+def moe_ffn(p: dict, x: jax.Array, ctx: Ctx):
+    """(B, S, d) -> (B, S, d), aux_loss. shard_map'd when a mesh is active."""
+    cfg, sh = ctx.cfg, ctx.shard
+    B, S, d = x.shape
+    xt = x.reshape(B * S, d)
+    if sh.mesh is None:
+        out, aux = _moe_local(
+            xt, p["router"], p["w_gate"], p["w_up"], p["w_down"], cfg=cfg, psum_axes=()
+        )
+    else:
+        dp = sh.data_axes  # e.g. ("pod", "data")
+        tp = sh.model_axes  # ("model",)
+        # shard_map blocks must divide evenly; tiny decode batches (e.g.
+        # long_500k's B=1) replicate over data and compute redundantly
+        if (B * S) % max(sh.axis_size(*dp), 1) != 0:
+            dp = ()
+        tok_spec = P(dp, None) if dp else P(None, None)
+        fn = functools.partial(_moe_local, cfg=cfg, psum_axes=tp)
+        out, aux = jax.shard_map(
+            fn,
+            mesh=sh.mesh,
+            in_specs=(
+                tok_spec,
+                P(None, None),
+                P(None, None, tp[0] if tp else None),
+                P(None, None, tp[0] if tp else None),
+                P(None, tp[0] if tp else None, None),
+            ),
+            out_specs=(tok_spec, P()),
+            check_vma=False,
+        )(xt, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    out = out.reshape(B, S, d)
+    if "shared" in p:
+        gate = jax.nn.sigmoid(x.astype(jnp.float32) @ p["shared_gate"]).astype(x.dtype)
+        out = out + gate * mlp(p["shared"], x, ctx)
+    return sh.constrain(out, "batch", None, None), aux

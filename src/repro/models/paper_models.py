@@ -1,0 +1,89 @@
+"""The paper's own example networks: linear classifier, 784-1024-512-10 MLP,
+and the LeNet-style CNN from the TF tutorial — built on the same ``linear``
+abstraction as the LM zoo so the TableNet conversion pass applies verbatim.
+
+Convolutions are expressed as im2col + linear: the weight matrix is shared
+across spatial positions, which *is* the paper's "same LUT for every chunk,
+output shifted and added" convolution scheme (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Ctx, linear, linear_spec
+from repro.models.params import PSpec
+
+
+def linear_classifier_specs() -> dict:
+    return {"fc": linear_spec(784, 10, axes=(None, None), bias=True)}
+
+
+def linear_classifier_forward(params, images, ctx: Ctx):
+    """images: (B, 28, 28) in [0, 1] -> logits (B, 10)."""
+    x = images.reshape(images.shape[0], -1)
+    return linear(params["fc"], x, ctx)
+
+
+def mlp_specs() -> dict:
+    return {
+        "fc1": linear_spec(784, 1024, axes=(None, None), bias=True),
+        "fc2": linear_spec(1024, 512, axes=(None, None), bias=True),
+        "fc3": linear_spec(512, 10, axes=(None, None), bias=True),
+    }
+
+
+def mlp_forward(params, images, ctx: Ctx):
+    x = images.reshape(images.shape[0], -1)
+    x = jax.nn.relu(linear(params["fc1"], x, ctx))
+    x = jax.nn.relu(linear(params["fc2"], x, ctx))
+    return linear(params["fc3"], x, ctx)
+
+
+# ---------------------------------------------------------------------------
+# LeNet-style CNN (conv 5x5x32 -> pool -> conv 5x5x64 -> pool -> fc -> fc)
+# ---------------------------------------------------------------------------
+
+
+def im2col(x: jax.Array, k: int) -> jax.Array:
+    """(B, H, W, C) -> (B, H, W, k*k*C) 'same' patches (zero-padded)."""
+    B, H, W, C = x.shape
+    pad = k // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    cols = [
+        xp[:, i : i + H, j : j + W, :] for i in range(k) for j in range(k)
+    ]
+    return jnp.concatenate(cols, axis=-1)
+
+
+def maxpool2(x: jax.Array) -> jax.Array:
+    B, H, W, C = x.shape
+    return x.reshape(B, H // 2, 2, W // 2, 2, C).max(axis=(2, 4))
+
+
+def lenet_specs() -> dict:
+    return {
+        "conv1": linear_spec(25, 32, axes=(None, None), bias=True),
+        "conv2": linear_spec(25 * 32, 64, axes=(None, None), bias=True),
+        "fc1": linear_spec(3136, 1024, axes=(None, None), bias=True),
+        "fc2": linear_spec(1024, 10, axes=(None, None), bias=True),
+    }
+
+
+def lenet_forward(params, images, ctx: Ctx):
+    """images: (B, 28, 28) -> logits (B, 10)."""
+    x = images[..., None]  # (B, 28, 28, 1)
+    x = jax.nn.relu(linear(params["conv1"], im2col(x, 5), ctx))
+    x = maxpool2(x)  # (B, 14, 14, 32)
+    x = jax.nn.relu(linear(params["conv2"], im2col(x, 5), ctx))
+    x = maxpool2(x)  # (B, 7, 7, 64)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(linear(params["fc1"], x, ctx))
+    return linear(params["fc2"], x, ctx)
+
+
+PAPER_MODELS = {
+    "linear": (linear_classifier_specs, linear_classifier_forward),
+    "mlp": (mlp_specs, mlp_forward),
+    "lenet": (lenet_specs, lenet_forward),
+}

@@ -1,0 +1,79 @@
+"""Parameter-spec system: models declare shapes + logical axes, the runtime
+materialises arrays (smoke tests / real training) or ShapeDtypeStructs with
+shardings attached (the multi-pod dry-run never allocates a byte).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    """Declaration of one parameter tensor."""
+
+    shape: tuple[int, ...]
+    axes: tuple[Any, ...]  # logical axis name (str) or None per dim
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: float | None = None  # stddev override for "normal"
+    dtype: Any = None  # None -> model default
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+def tree_map_specs(fn: Callable[[PSpec], Any], tree):
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def _fan_in(spec: PSpec) -> int:
+    # convention: last axis is the output axis of a projection
+    if len(spec.shape) == 1:
+        return 1
+    return int(np.prod(spec.shape[:-1]))
+
+
+def init_params(tree, key: jax.Array, default_dtype=jnp.float32):
+    """Materialise real arrays (used by smoke tests, examples, training)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(spec: PSpec, k):
+        dtype = spec.dtype or default_dtype
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        std = spec.scale
+        if std is None:
+            std = 0.02 if spec.init == "embed" else 1.0 / math.sqrt(_fan_in(spec))
+        return (jax.random.normal(k, spec.shape, jnp.float32) * std).astype(dtype)
+
+    return treedef.unflatten([one(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract_params(tree, default_dtype=jnp.float32, sharding_fn=None):
+    """ShapeDtypeStruct stand-ins (optionally with shardings) — no allocation."""
+
+    def one(spec: PSpec):
+        dtype = spec.dtype or default_dtype
+        sharding = sharding_fn(spec) if sharding_fn is not None else None
+        return jax.ShapeDtypeStruct(spec.shape, dtype, sharding=sharding)
+
+    return tree_map_specs(one, tree)
+
+
+def count_params(tree) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(tree, is_leaf=is_spec):
+        total += int(np.prod(leaf.shape))
+    return total

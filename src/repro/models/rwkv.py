@@ -1,0 +1,251 @@
+"""RWKV-6 ("Finch") blocks: attention-free, data-dependent per-channel decay.
+
+Training/prefill runs the chunked parallel form of the WKV linear recurrence
+(GLA-style: intra-chunk quadratic term with cumulative log-decay weights +
+inter-chunk state carry); decode is the O(1) recurrent update.  A naive
+recurrent reference lives in ``tests/test_rwkv.py``.
+
+Simplifications vs the full Finch block, noted in DESIGN.md §5: static
+per-channel token-shift mixing coefficients (the decay — the paper's
+headline feature — keeps its data-dependent LoRA form); no per-head extra
+LoRA on u.  The WKV recurrence has data-dependent transition weights and is
+therefore not LUT-convertible; the r/k/v/g/o projections are.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Ctx, linear, linear_spec
+from repro.models.params import PSpec
+
+
+def rwkv_specs(cfg: ModelConfig) -> dict:
+    d, H, hd = cfg.d_model, cfg.rwkv_heads, cfg.rwkv_head_dim
+    r = cfg.decay_lora_rank
+    mix = lambda: PSpec((d,), (None,), init="zeros")
+    return {
+        "time": {
+            "mu_r": mix(), "mu_k": mix(), "mu_v": mix(), "mu_w": mix(), "mu_g": mix(),
+            "w_r": linear_spec(d, d), "w_k": linear_spec(d, d),
+            "w_v": linear_spec(d, d), "w_g": linear_spec(d, d),
+            "w_o": linear_spec(d, d, axes=("heads_flat", "embed")),
+            "decay_base": PSpec((d,), (None,), init="zeros"),
+            "decay_A": PSpec((d, r), ("embed", None), scale=0.01),
+            "decay_B": PSpec((r, d), (None, "heads_flat"), scale=0.01),
+            "u": PSpec((H, hd), ("heads", None), init="zeros"),
+            "ln_scale": PSpec((d,), (None,), init="ones"),
+            "ln_bias": PSpec((d,), (None,), init="zeros"),
+        },
+        "channel": {
+            "mu_k": mix(), "mu_r": mix(),
+            "w_k": linear_spec(d, cfg.d_ff, axes=("embed", "mlp")),
+            "w_v": linear_spec(cfg.d_ff, d, axes=("mlp", "embed")),
+            "w_r": linear_spec(d, d),
+        },
+    }
+
+
+def _token_shift(x: jax.Array, last: jax.Array | None) -> jax.Array:
+    """(B, L, d) -> previous token's features (zeros / cache for t=0)."""
+    prev = jnp.zeros_like(x[:, :1]) if last is None else last[:, None].astype(x.dtype)
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def wkv_chunked(
+    r: jax.Array,  # (B, L, H, K)
+    k: jax.Array,  # (B, L, H, K)
+    v: jax.Array,  # (B, L, H, V)
+    logw: jax.Array,  # (B, L, H, K)  log decay, < 0
+    u: jax.Array,  # (H, K) bonus for the current token
+    chunk: int = 32,
+    init_state: jax.Array | None = None,  # (B, H, K, V) fp32
+    unroll: bool = False,  # analysis probes: HLO cost counts loop bodies once
+):
+    """y_t = r_t @ (S_t + diag(u) k_t v_t^T);  S_{t+1} = diag(w_t) S_t + k_t v_t^T
+    (with S_t the state *before* absorbing token t). fp32 inside."""
+    B, L, H, K = r.shape
+    V = v.shape[-1]
+    assert L % chunk == 0
+    nc = L // chunk
+    f32 = jnp.float32
+    rc = jnp.moveaxis(r.astype(f32).reshape(B, nc, chunk, H, K), 1, 0)
+    kc = jnp.moveaxis(k.astype(f32).reshape(B, nc, chunk, H, K), 1, 0)
+    vc = jnp.moveaxis(v.astype(f32).reshape(B, nc, chunk, H, V), 1, 0)
+    lw = jnp.moveaxis(logw.astype(f32).reshape(B, nc, chunk, H, K), 1, 0)
+
+    i_idx = jnp.arange(chunk)
+    tri = (i_idx[:, None] > i_idx[None, :]).astype(f32)  # strict lower
+    s0 = jnp.zeros((B, H, K, V), f32) if init_state is None else init_state.astype(f32)
+
+    def chunk_step(s, inp):
+        rch, kch, vch, lwch = inp  # (B, c, H, {K, K, V, K})
+        cum = jnp.cumsum(lwch, axis=1)  # (B, c, H, K) sum_{t<=i}
+        cum_in = cum - lwch  # sum_{t<i}
+        # intra-chunk: att[i,j] = sum_k r_ik k_jk exp(cum_in_i - cum_j), j < i.
+        # Exponents are formed as differences BEFORE exp (always <= 0 on the
+        # masked triangle) — exact and overflow-free, unlike the factored
+        # exp(cum_in_i)*exp(-cum_j) form which overflows under strong decay.
+        expo = cum_in[:, :, None] - cum[:, None, :]  # (B, c, c, H, K)
+        w_ij = jnp.exp(jnp.minimum(expo, 0.0)) * tri[None, :, :, None, None]
+        att = jnp.einsum("bihk,bjhk,bijhk->bhij", rch, kch, w_ij)
+        bonus = jnp.einsum("bihk,hk,bihk->bhi", rch, u.astype(f32), kch)
+        y = jnp.einsum("bhij,bjhv->bihv", att, vch)
+        y = y + bonus.transpose(0, 2, 1)[..., None] * vch
+        # inter-chunk: contribution of the state entering this chunk
+        y = y + jnp.einsum("bihk,bhkv->bihv", rch * jnp.exp(cum_in), s)
+        # carry: S_end = diag(prod w) S_start + sum_j diag(prod_{t>j} w) k_j v_j
+        decay_rest = jnp.exp(cum[:, -1:] - cum)  # (B, c, H, K), <= 1
+        new_s = s * jnp.exp(cum[:, -1])[..., None] + jnp.einsum(
+            "bjhk,bjhv->bhkv", kch * decay_rest, vch
+        )
+        return new_s, y
+
+    final, ys = jax.lax.scan(chunk_step, s0, (rc, kc, vc, lw), unroll=True if unroll else 1)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, L, H, V)
+    return y, final
+
+
+def wkv_decode_step(r, k, v, logw, u, state):
+    """Single token: r/k/v/logw (B, 1, H, K|V); state (B, H, K, V) fp32."""
+    f32 = jnp.float32
+    r1, k1, v1, w1 = (t[:, 0].astype(f32) for t in (r, k, v, logw))
+    kv = jnp.einsum("bhk,bhv->bhkv", k1, v1)
+    y = jnp.einsum("bhk,bhkv->bhv", r1, state + u.astype(f32)[None, :, :, None] * kv)
+    new_state = state * jnp.exp(w1)[..., None] + kv
+    return y[:, None], new_state
+
+
+def _group_norm(x: jax.Array, H: int, scale, bias, eps) -> jax.Array:
+    """Per-head layernorm over the head dim of (B, L, d=H*hd)."""
+    B, L, d = x.shape
+    xh = x.astype(jnp.float32).reshape(B, L, H, d // H)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    y = ((xh - mu) * jax.lax.rsqrt(var + eps)).reshape(B, L, d)
+    return y * scale + bias
+
+
+def rwkv_time_mix(p: dict, x: jax.Array, ctx: Ctx, last: jax.Array | None,
+                  wkv_state: jax.Array | None):
+    """Returns (out, new_last, new_wkv_state)."""
+    cfg = ctx.cfg
+    B, L, d = x.shape
+    H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    xx = _token_shift(x, last)
+
+    def mixed(mu):
+        return x + (xx - x) * mu[None, None, :]
+
+    r = linear(p["w_r"], mixed(p["mu_r"]), ctx).reshape(B, L, H, hd)
+    k = linear(p["w_k"], mixed(p["mu_k"]), ctx).reshape(B, L, H, hd)
+    v = linear(p["w_v"], mixed(p["mu_v"]), ctx).reshape(B, L, H, hd)
+    g = linear(p["w_g"], mixed(p["mu_g"]), ctx)
+    # Finch data-dependent decay: w = exp(-exp(base + LoRA(x_w)))
+    dlora = (mixed(p["mu_w"]) @ p["decay_A"]) @ p["decay_B"]
+    logw = -jnp.exp(
+        jnp.clip(p["decay_base"][None, None, :] + dlora.astype(jnp.float32), -8.0, 4.0)
+    ).reshape(B, L, H, hd)
+
+    if wkv_state is None:
+        y, new_state = wkv_chunked(r, k, v, logw, p["u"], chunk=_pick_chunk(L),
+                                   unroll=ctx.ex.inner_unroll)
+    elif L == 1:  # decode: O(1) recurrent update
+        y, new_state = wkv_decode_step(r, k, v, logw, p["u"], wkv_state)
+    else:  # prefill continuing from cached state
+        y, new_state = wkv_chunked(
+            r, k, v, logw, p["u"], chunk=_pick_chunk(L), init_state=wkv_state
+        )
+    y = y.reshape(B, L, d).astype(x.dtype)
+    y = _group_norm(y, H, p["ln_scale"], p["ln_bias"], cfg.norm_eps).astype(x.dtype)
+    out = linear(p["w_o"], y * jax.nn.silu(g), ctx)
+    return ctx.shard.constrain(out, "batch", None, None), x[:, -1], new_state
+
+
+def rwkv_channel_mix(p: dict, x: jax.Array, ctx: Ctx, last: jax.Array | None):
+    xx = _token_shift(x, last)
+    xk = x + (xx - x) * p["mu_k"][None, None, :]
+    xr = x + (xx - x) * p["mu_r"][None, None, :]
+    h = jnp.square(jax.nn.relu(linear(p["w_k"], xk, ctx)))
+    h = ctx.shard.constrain(h, "batch", None, "mlp")
+    out = jax.nn.sigmoid(linear(p["w_r"], xr, ctx)) * linear(p["w_v"], h, ctx)
+    return ctx.shard.constrain(out, "batch", None, None), x[:, -1]
+
+
+def _pick_chunk(L: int) -> int:
+    for c in (32, 16, 8, 4, 2, 1):
+        if L % c == 0:
+            return c
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# RWKV LM (model-level assembly)
+# ---------------------------------------------------------------------------
+
+
+def rwkv_lm_specs(cfg: ModelConfig) -> dict:
+    from repro.models import layers as L
+    from repro.models.transformer import stack_specs
+
+    d = cfg.d_model
+    block = {
+        "ln1": L.norm_spec(cfg),
+        "time": rwkv_specs(cfg)["time"],
+        "ln2": L.norm_spec(cfg),
+        "channel": rwkv_specs(cfg)["channel"],
+    }
+    return {
+        "embed": PSpec((cfg.padded_vocab, d), ("vocab", "embed"), init="embed"),
+        "ln0": L.norm_spec(cfg),  # rwkv: extra norm after embedding
+        "blocks": stack_specs(block, cfg.num_layers),
+        "ln_f": L.norm_spec(cfg),
+        "lm_head": L.linear_spec(d, cfg.padded_vocab, axes=("embed", "vocab")),
+    }
+
+
+def forward(params, tokens, ctx: Ctx, positions=None, cache=None, embeds=None):
+    """Returns (logits, new_cache, aux). cache: {"layers": {shift_a, shift_c,
+    wkv}, "index"} — O(1) state, no pos/valid ring."""
+    from repro.models import layers as L
+    from repro.models.transformer import _remat_policy, embed_tokens, lm_logits
+
+    cfg = ctx.cfg
+    x = embed_tokens(params, tokens, ctx)
+    x = L.apply_norm(params["ln0"], x, cfg)
+
+    cache_layers = cache["layers"] if cache is not None else None
+
+    def body(carry, xs):
+        lp, lc = xs
+        la = lc.get("shift_a") if lc else None
+        lw = lc.get("wkv") if lc else None
+        h, new_a, new_w = rwkv_time_mix(
+            lp["time"], L.apply_norm(lp["ln1"], carry, cfg), ctx, la, lw
+        )
+        x2 = carry + h
+        lc_ = lc.get("shift_c") if lc else None
+        h, new_c = rwkv_channel_mix(
+            lp["channel"], L.apply_norm(lp["ln2"], x2, cfg), ctx, lc_
+        )
+        x2 = x2 + h
+        out_c = {"shift_a": new_a, "shift_c": new_c, "wkv": new_w} if lc else {}
+        return x2, out_c
+
+    if ctx.ex.remat != "none":
+        body = jax.checkpoint(body, policy=_remat_policy(ctx.ex.remat))
+    xs = (params["blocks"], cache_layers if cache_layers is not None else {})
+    x, new_layers = jax.lax.scan(
+        body, x, xs, unroll=True if ctx.ex.inner_unroll else 1
+    )
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    if ctx.ex.logits == "last":
+        x = x[:, -1:]
+    logits = lm_logits(params, x, ctx)
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(
+            cache, layers=new_layers, index=cache["index"] + tokens.shape[1]
+        )
+    return logits, new_cache, jnp.zeros((), jnp.float32)

@@ -1,0 +1,207 @@
+"""Mamba2 (SSD) blocks — the zamba2 backbone.
+
+Training/prefill uses the chunked SSD algorithm (Dao & Gu 2024, "minimal
+mamba2" formulation): intra-chunk quadratic attention-like term + inter-chunk
+state recurrence via an associative scan over chunk states.  Decode is the
+O(1) recurrent update.  A naive recurrent reference lives in
+``tests/test_ssm.py`` and the two must agree.
+
+The SSD recurrence itself has *data-dependent* transition weights, so it is
+not LUT-convertible (DESIGN.md §5); only the in/out projections participate
+in TableNet conversion.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Ctx, linear, linear_spec
+from repro.models.params import PSpec
+
+
+def mamba_specs(cfg: ModelConfig) -> dict:
+    d, din = cfg.d_model, cfg.d_inner
+    H, N = cfg.mamba_heads, cfg.ssm_state
+    conv_dim = din + 2 * N  # x, B, C share the causal conv (n_groups = 1)
+    proj_out = 2 * din + 2 * N + H  # z, xBC, dt
+    return {
+        "in_proj": linear_spec(d, proj_out, axes=("embed", "heads_flat")),
+        "conv_w": PSpec((cfg.conv_kernel, conv_dim), (None, "heads_flat")),
+        "conv_b": PSpec((conv_dim,), ("heads_flat",), init="zeros"),
+        "A_log": PSpec((H,), (None,), init="zeros"),
+        "dt_bias": PSpec((H,), (None,), init="zeros"),
+        "D": PSpec((H,), (None,), init="ones"),
+        "norm_scale": PSpec((din,), (None,), init="ones"),
+        "out_proj": linear_spec(din, d, axes=("heads_flat", "embed")),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., T) -> (..., T, T) lower-triangular pairwise sums
+    L[i, j] = sum_{t=j+1..i} x_t  (and -inf above the diagonal)."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, L, H, P)
+    dt: jax.Array,  # (B, L, H) post-softplus
+    A: jax.Array,  # (H,) negative
+    Bm: jax.Array,  # (B, L, N)  (n_groups=1, shared across heads)
+    Cm: jax.Array,  # (B, L, N)
+    chunk: int = 64,
+    init_state: jax.Array | None = None,  # (B, H, P, N)
+    compute_dtype=jnp.float32,
+):
+    """Returns (y (B, L, H, P), final_state (B, H, P, N)).  Decay cumsums
+    and the state carry stay f32; ``compute_dtype`` controls the big
+    intra-chunk tensors (bf16 halves their bytes — hillclimb knob)."""
+    B_, L, H, P = x.shape
+    N = Bm.shape[-1]
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+    f32 = jnp.float32
+    cd = compute_dtype
+    xdt = (x.astype(f32) * dt.astype(f32)[..., None]).astype(cd).reshape(
+        B_, nc, chunk, H, P
+    )
+    dA = (dt.astype(f32) * A.astype(f32)).reshape(B_, nc, chunk, H)
+    Bc = Bm.astype(cd).reshape(B_, nc, chunk, N)
+    Cc = Cm.astype(cd).reshape(B_, nc, chunk, N)
+
+    dA_cs = jnp.cumsum(dA, axis=2)  # (B, nc, c, H) — f32 always
+
+    # --- intra-chunk (diagonal blocks) ---
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(dA, -1, -2))).astype(cd)  # (B,nc,H,c,c)
+    att = jnp.einsum("bcin,bcjn,bchij->bchij", Cc, Bc, Lmat)
+    y_diag = jnp.einsum(
+        "bchij,bcjhp->bcihp", att, xdt, preferred_element_type=f32
+    )
+
+    # --- chunk states ---
+    decay_out = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs).astype(cd)  # (B, nc, c, H)
+    states = jnp.einsum(
+        "bcjn,bcjh,bcjhp->bchpn", Bc, decay_out, xdt, preferred_element_type=f32
+    )
+
+    # --- inter-chunk recurrence (scan over chunks) ---
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])  # (B, nc, H)
+    s0 = (
+        jnp.zeros((B_, H, P, N), f32)
+        if init_state is None
+        else init_state.astype(f32)
+    )
+
+    def step(s, inp):
+        st, dec = inp  # (B, H, P, N), (B, H)
+        nxt = s * dec[:, :, None, None] + st
+        return nxt, s  # emit the state *entering* this chunk
+
+    final, entering = jax.lax.scan(
+        step,
+        s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    entering = jnp.moveaxis(entering, 0, 1)  # (B, nc, H, P, N)
+
+    decay_in = jnp.exp(dA_cs).astype(cd)  # (B, nc, c, H)
+    y_inter = jnp.einsum(
+        "bcin,bcih,bchpn->bcihp", Cc, decay_in, entering.astype(cd),
+        preferred_element_type=f32,
+    )
+
+    y = (y_diag.astype(f32) + y_inter).reshape(B_, L, H, P)
+    return y, final
+
+
+def ssd_decode_step(
+    x: jax.Array,  # (B, 1, H, P)
+    dt: jax.Array,  # (B, 1, H)
+    A: jax.Array,
+    Bm: jax.Array,  # (B, 1, N)
+    Cm: jax.Array,  # (B, 1, N)
+    state: jax.Array,  # (B, H, P, N) fp32
+):
+    f32 = jnp.float32
+    dA = jnp.exp(dt[:, 0].astype(f32) * A.astype(f32))  # (B, H)
+    xdt = x[:, 0].astype(f32) * dt[:, 0].astype(f32)[..., None]  # (B, H, P)
+    new_state = state * dA[:, :, None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xdt, Bm[:, 0].astype(f32)
+    )
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(f32), new_state)
+    return y[:, None], new_state  # (B, 1, H, P)
+
+
+def _causal_conv_full(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, L, C) with taps (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xBC.shape[1], :] * w[i][None, None, :] for i in range(K)
+    )
+    return out + b
+
+
+def mamba_block(
+    p: dict,
+    x: jax.Array,  # (B, L, d)
+    ctx: Ctx,
+    cache: dict | None = None,  # {"conv": (B, K-1, conv_dim), "state": (B,H,P,N)}
+):
+    """Returns (out (B, L, d), new_cache)."""
+    cfg, sh = ctx.cfg, ctx.shard
+    B, L, _ = x.shape
+    din, H, N, P = cfg.d_inner, cfg.mamba_heads, cfg.ssm_state, cfg.mamba_head_dim
+    K = cfg.conv_kernel
+
+    zxbcdt = linear(p["in_proj"], x, ctx)
+    z = zxbcdt[..., :din]
+    xBC = zxbcdt[..., din : 2 * din + 2 * N]
+    dt = jax.nn.softplus(
+        zxbcdt[..., 2 * din + 2 * N :].astype(jnp.float32) + p["dt_bias"]
+    )
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    new_cache = None
+    if cache is None:
+        xBC = _causal_conv_full(xBC, p["conv_w"], p["conv_b"])
+    else:
+        window = jnp.concatenate([cache["conv"].astype(xBC.dtype), xBC], axis=1)
+        new_conv = window[:, -(K - 1) :, :]
+        xBC = _causal_conv_full(window, p["conv_w"], p["conv_b"])[:, -L:, :]
+    xBC = jax.nn.silu(xBC)
+    xs = xBC[..., :din].reshape(B, L, H, P)
+    Bm = xBC[..., din : din + N]
+    Cm = xBC[..., din + N :]
+
+    chunk = ctx.ex.ssd_chunk or _pick_chunk(L)
+    if cache is None:
+        y, _ = ssd_chunked(xs, dt, A, Bm, Cm, chunk=min(chunk, L),
+                           compute_dtype=jnp.bfloat16 if ctx.ex.ssd_bf16 else jnp.float32)
+    elif L == 1:  # decode: O(1) recurrent update
+        y, new_state = ssd_decode_step(xs, dt, A, Bm, Cm, cache["state"])
+        new_cache = {"conv": new_conv, "state": new_state}
+    else:  # prefill continuing from cached state
+        y, new_state = ssd_chunked(
+            xs, dt, A, Bm, Cm, chunk=min(chunk, L), init_state=cache["state"]
+        )
+        new_cache = {"conv": new_conv, "state": new_state}
+
+    y = y.reshape(B, L, din) + xBC[..., :din] * p["D"].repeat(P)[None, None, :]
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(g), -1, keepdims=True)
+    g = (g * jax.lax.rsqrt(ms + cfg.norm_eps) * p["norm_scale"]).astype(x.dtype)
+    out = linear(p["out_proj"], g, ctx)
+    return sh.constrain(out, "batch", None, None), new_cache
+
+
+def _pick_chunk(L: int) -> int:
+    for c in (64, 32, 16, 8, 4, 2, 1):
+        if L % c == 0:
+            return c
+    return 1

@@ -1,0 +1,149 @@
+"""Decoder-only transformer LM (dense / MoE / VLM backbones).
+
+Layers are stacked along a leading ``layers`` axis and executed with
+``lax.scan`` — one compiled block body regardless of depth (keeps the
+40-cell x 2-mesh dry-run tractable; also how MaxText ships).  The scan body
+is wrapped in ``jax.checkpoint`` per the ExecCfg remat policy.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.layers import Ctx
+from repro.models.moe import moe_ffn, moe_specs
+from repro.models.params import PSpec, is_spec, tree_map_specs
+
+
+def stack_specs(tree, n: int):
+    """Prepend a (n,)+"layers" axis to every PSpec in a block's tree."""
+    return tree_map_specs(
+        lambda s: PSpec((n,) + s.shape, ("layers",) + s.axes, s.init, s.scale, s.dtype),
+        tree,
+    )
+
+
+def block_specs(cfg: ModelConfig) -> dict:
+    attn = L.mla_specs(cfg) if cfg.attention == "mla" else L.attention_specs(cfg)
+    ffn = moe_specs(cfg) if cfg.num_experts else L.mlp_specs(cfg)
+    return {
+        "ln1": L.norm_spec(cfg),
+        "attn": attn,
+        "ln2": L.norm_spec(cfg),
+        "ffn": ffn,
+    }
+
+
+def decoder_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    s: dict[str, Any] = {
+        "embed": PSpec((cfg.padded_vocab, d), ("vocab", "embed"), init="embed"),
+        "blocks": stack_specs(block_specs(cfg), cfg.num_layers),
+        "ln_f": L.norm_spec(cfg),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = L.linear_spec(d, cfg.padded_vocab, axes=("embed", "vocab"))
+    return s
+
+
+def embed_tokens(params: dict, tokens: jax.Array, ctx: Ctx) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return ctx.shard.constrain(x, "batch", None, None)
+
+
+def lm_logits(params: dict, x: jax.Array, ctx: Ctx) -> jax.Array:
+    if ctx.cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = L.linear(params["lm_head"], x, ctx)
+    return ctx.shard.constrain(logits, "batch", None, "vocab")
+
+
+def _block_apply(p, x, ctx: Ctx, positions, layer_cache, meta):
+    cfg = ctx.cfg
+    h = L.apply_norm(p["ln1"], x, cfg)
+    if cfg.attention == "mla":
+        cache_in = dict(layer_cache, _meta=meta) if layer_cache else None
+        h, new_cache = L.mla_attention(p["attn"], h, ctx, positions, cache=cache_in)
+    else:
+        cache_in = dict(layer_cache, _meta=meta) if layer_cache else None
+        h, new_cache = L.attention(p["attn"], h, ctx, positions, cache=cache_in)
+    x = x + h
+    h = L.apply_norm(p["ln2"], x, cfg)
+    if cfg.num_experts:
+        h, aux = moe_ffn(p["ffn"], h, ctx)
+    else:
+        h, aux = L.mlp(p["ffn"], h, ctx), jnp.zeros((), jnp.float32)
+    return x + h, new_cache, aux
+
+
+def scan_blocks(params_blocks, x, ctx: Ctx, positions, cache_layers, meta):
+    """Run the stacked blocks; returns (x, new_cache_layers, aux_sum)."""
+
+    def body(carry, xs):
+        lp, lc = xs
+        out, new_c, aux = _block_apply(lp, carry, ctx, positions, lc, meta)
+        return out, (new_c if new_c is not None else {}, aux)
+
+    if ctx.ex.remat != "none":
+        body = jax.checkpoint(body, policy=_remat_policy(ctx.ex.remat))
+    xs = (params_blocks, cache_layers if cache_layers is not None else {})
+    x, (new_caches, auxs) = jax.lax.scan(
+        body, x, xs, unroll=True if ctx.ex.inner_unroll else 1
+    )
+    return x, (new_caches if cache_layers is not None else None), jnp.sum(auxs)
+
+
+def _remat_policy(name: str):
+    if name == "dots":
+        return jax.checkpoint_policies.checkpoint_dots
+    if name == "dots_no_batch":
+        return jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return None  # "full": save nothing
+
+
+def forward(
+    params: dict,
+    tokens: jax.Array,  # (B, S) int32
+    ctx: Ctx,
+    positions: Optional[jax.Array] = None,
+    cache: Optional[dict] = None,
+    embeds: Optional[jax.Array] = None,  # VLM: (B, S_img, d) patch embeddings
+):
+    """Returns (logits, new_cache, aux_loss)."""
+    from repro.serve.cache import advance_meta
+
+    x = embed_tokens(params, tokens, ctx)
+    if embeds is not None:  # VLM: image tokens first (llava layout)
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+        x = ctx.shard.constrain(x, "batch", None, None)
+    B, S, _ = x.shape
+    if positions is None:
+        if cache is not None:
+            positions = cache["index"][:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+
+    meta = None
+    new_cache = None
+    cache_layers = None
+    if cache is not None:
+        cache = advance_meta(cache, positions, ctx.cfg.sliding_window)
+        meta = {k: cache[k] for k in ("pos", "valid", "index") if k in cache}
+        meta["index"] = cache["index"]
+        cache_layers = cache["layers"]
+
+    x, new_layers, aux = scan_blocks(
+        params["blocks"], x, ctx, positions, cache_layers, meta
+    )
+    x = L.apply_norm(params["ln_f"], x, ctx.cfg)
+    if ctx.ex.logits == "last":
+        x = x[:, -1:]
+    logits = lm_logits(params, x, ctx)
+    if cache is not None:
+        new_cache = dict(cache, layers=new_layers)
+    return logits, new_cache, aux

@@ -1,0 +1,70 @@
+"""Hand-rolled AdamW (no optax in this environment) with global-norm clip.
+
+Moments inherit the parameters' shardings through the update computation, so
+optimizer state is ZeRO-sharded wherever the params are.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def init_opt_state(params) -> dict:
+    zeros = lambda t: jax.tree.map(jnp.zeros_like, t)
+    return {"m": zeros(params), "v": zeros(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(grads, opt_state, params, lr: jax.Array, cfg: AdamWConfig):
+    """Returns (new_params, new_opt_state, grad_norm)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.clip_norm > 0:
+        grads, norm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        norm = global_norm(grads)
+    step = opt_state["step"] + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m2 / b1c
+        vh = v2 / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:  # no decay on norms/biases
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, norm

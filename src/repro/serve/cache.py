@@ -1,0 +1,217 @@
+"""Decode caches for every architecture family.
+
+Layouts (leading ``layers`` axis — stacks scan with the blocks):
+  GQA  : k/v      (L, B, T, n_kv, head_dim)     T = max_len or SWA window
+  MLA  : c_kv     (L, B, T, kv_lora), k_rope (L, B, T, rope_dim)
+  SSD  : conv     (L, B, K-1, conv_dim), state (L, B, H, P, N)
+  RWKV : shift_a/shift_c (L, B, d), wkv (L, B, H, hd, hd)
+plus shared metadata: pos (B, T) absolute position per slot, valid (B, T),
+index () — next write offset.
+
+The cached-sequence dim T carries the ``seq_kv`` logical axis => sharded over
+the *model* mesh axis (flash-decoding style).  This is the one layout that
+shards evenly for every assigned arch (kv head counts 8/10/16/32/40 do not
+all divide 16; T always does).  Softmax and the probs@V contraction over the
+sharded T insert only tiny (B*H-sized) all-reduces.
+
+Writes use one-hot contractions, never dynamic-update-slice on the sharded
+dim (the T5X trick), so updates partition cleanly under GSPMD.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import PSpec
+
+
+# ---------------------------------------------------------------------------
+# Cache spec construction (PSpec trees -> works for init AND dry-run)
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> dict:
+    """PSpec tree for a fresh decode cache."""
+    T = max_len if cfg.sliding_window is None else min(cfg.sliding_window, max_len)
+    L = cfg.num_layers
+    tree: dict[str, Any] = {
+        "pos": PSpec((batch, T), ("batch", "seq_kv"), init="zeros", dtype=jnp.int32),
+        "valid": PSpec((batch, T), ("batch", "seq_kv"), init="zeros", dtype=jnp.bool_),
+        # per-sequence write offset: continuous batching gives slots
+        # different lengths
+        "index": PSpec((batch,), ("batch",), init="zeros", dtype=jnp.int32),
+    }
+    kv = lambda n_layers: {
+        "k": PSpec(
+            (n_layers, batch, T, cfg.num_kv_heads, cfg.head_dim),
+            ("layers", "batch", "seq_kv", None, None),
+            init="zeros",
+        ),
+        "v": PSpec(
+            (n_layers, batch, T, cfg.num_kv_heads, cfg.head_dim),
+            ("layers", "batch", "seq_kv", None, None),
+            init="zeros",
+        ),
+    }
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.attention == "mla":
+            tree["layers"] = {
+                "c_kv": PSpec(
+                    (L, batch, T, cfg.kv_lora_rank),
+                    ("layers", "batch", "seq_kv", None),
+                    init="zeros",
+                ),
+                "k_rope": PSpec(
+                    (L, batch, T, cfg.qk_rope_head_dim),
+                    ("layers", "batch", "seq_kv", None),
+                    init="zeros",
+                ),
+            }
+        else:
+            tree["layers"] = kv(L)
+    elif cfg.family == "hybrid":  # zamba2: ssd states + shared-attn kv caches
+        n_shared = _num_shared_invocations(cfg)
+        tree["layers"] = _ssd_state_specs(cfg, L, batch)
+        tree["shared_attn"] = kv(n_shared)
+    elif cfg.family == "ssm":  # rwkv6
+        H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+        tree["layers"] = {
+            "shift_a": PSpec((L, batch, cfg.d_model), ("layers", "batch", None), init="zeros"),
+            "shift_c": PSpec((L, batch, cfg.d_model), ("layers", "batch", None), init="zeros"),
+            "wkv": PSpec(
+                (L, batch, H, hd, hd),
+                ("layers", "batch", "heads", None, None),
+                init="zeros",
+                dtype=jnp.float32,
+            ),
+        }
+        # rwkv needs no pos/valid ring: state is O(1)
+        tree.pop("pos"), tree.pop("valid")
+    elif cfg.family == "encdec":  # whisper: decoder self-KV + static cross-KV
+        tree["layers"] = kv(L)
+        tree["cross"] = {
+            "k": PSpec(
+                (L, batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                ("layers", "batch", "seq_kv", None, None),
+                init="zeros",
+            ),
+            "v": PSpec(
+                (L, batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                ("layers", "batch", "seq_kv", None, None),
+                init="zeros",
+            ),
+        }
+    else:
+        raise ValueError(cfg.family)
+    return tree
+
+
+def _num_shared_invocations(cfg: ModelConfig) -> int:
+    if not cfg.shared_attn_every:
+        return 0
+    return cfg.num_layers // cfg.shared_attn_every
+
+
+def _ssd_state_specs(cfg: ModelConfig, L: int, batch: int) -> dict:
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": PSpec(
+            (L, batch, cfg.conv_kernel - 1, conv_dim),
+            ("layers", "batch", None, None),
+            init="zeros",
+        ),
+        "state": PSpec(
+            (L, batch, cfg.mamba_heads, cfg.mamba_head_dim, cfg.ssm_state),
+            ("layers", "batch", "heads", None, None),
+            init="zeros",
+            dtype=jnp.float32,
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Metadata advance (once per step) + one-hot writes (per layer)
+# ---------------------------------------------------------------------------
+
+
+def advance_meta(cache: dict, positions: jax.Array, window: int | None) -> dict:
+    """Update pos/valid/index for the S tokens being written this step."""
+    if "pos" not in cache:
+        return dict(cache, index=cache["index"] + positions.shape[1])
+    T = cache["pos"].shape[1]
+    S = S_consumed = positions.shape[1]
+    if window is not None and S > T:
+        # ring cache: only the last T tokens survive; slicing first keeps
+        # slot writes unique (T consecutive positions mod T is a permutation)
+        positions = positions[:, -T:]
+        S = T
+    slots = positions % T if window is not None else (
+        cache["index"][:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    )
+    oh = jax.nn.one_hot(slots, T, dtype=jnp.int32)  # (B, S, T)
+    written = oh.sum(1)  # (B, T)
+    pos = cache["pos"] * (1 - written) + jnp.einsum(
+        "bst,bs->bt", oh, positions.astype(jnp.int32)
+    )
+    valid = cache["valid"] | (written > 0)
+    return dict(cache, pos=pos, valid=valid, index=cache["index"] + S_consumed)
+
+
+def _onehot_write(buf: jax.Array, new: jax.Array, slots: jax.Array) -> jax.Array:
+    """buf: (B, T, ...); new: (B, S, ...); slots: (B, S) -> updated buf."""
+    T = buf.shape[1]
+    oh = jax.nn.one_hot(slots, T, dtype=buf.dtype)  # (B, S, T)
+    keep = 1 - oh.sum(1)  # (B, T)
+    keep = keep.reshape(keep.shape + (1,) * (buf.ndim - 2))
+    add = jnp.einsum("bst,bs...->bt...", oh, new)
+    return buf * keep + add
+
+
+def _write_slots(meta_index: jax.Array, positions: jax.Array, T: int, window) -> jax.Array:
+    if window is not None:
+        return positions % T
+    return meta_index[:, None] + jnp.arange(positions.shape[1], dtype=jnp.int32)[None, :]
+
+
+def update_kv_cache(cache: dict, k, v, positions, ctx):
+    """Write new K/V (B, S, ...) and return full cache views + key metadata.
+
+    ``cache`` is one layer's {"k", "v"} plus the step-level "_meta" dict
+    (pos/valid/index *already advanced* for this step).
+    """
+    meta = cache["_meta"]
+    T = cache["k"].shape[1]
+    window = ctx.cfg.sliding_window
+    S = positions.shape[1]
+    if window is not None and S > T:  # ring: only the last T tokens survive
+        k, v, positions = k[:, -T:], v[:, -T:], positions[:, -T:]
+        S = T
+    if S == T and window is None:
+        new_k = k.astype(cache["k"].dtype)
+        new_v = v.astype(cache["v"].dtype)
+    else:
+        slots = _write_slots(meta["index"] - S, positions, T, window)
+        new_k = _onehot_write(cache["k"], k.astype(cache["k"].dtype), slots)
+        new_v = _onehot_write(cache["v"], v.astype(cache["v"].dtype), slots)
+    new_k = ctx.shard.constrain(new_k, "batch", "seq_kv", None, None)
+    new_v = ctx.shard.constrain(new_v, "batch", "seq_kv", None, None)
+    return {"k": new_k, "v": new_v}, new_k, new_v, meta["pos"], meta["valid"]
+
+
+def update_mla_cache(cache: dict, c_kv, k_rope, positions, ctx):
+    meta = cache["_meta"]
+    T = cache["c_kv"].shape[1]
+    S = positions.shape[1]
+    if S == T:
+        new_c = c_kv.astype(cache["c_kv"].dtype)
+        new_r = k_rope.astype(cache["k_rope"].dtype)
+    else:
+        slots = _write_slots(meta["index"] - S, positions, T, None)
+        new_c = _onehot_write(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), slots)
+        new_r = _onehot_write(cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), slots)
+    new_c = ctx.shard.constrain(new_c, "batch", "seq_kv", None)
+    new_r = ctx.shard.constrain(new_r, "batch", "seq_kv", None)
+    return {"c_kv": new_c, "k_rope": new_r}, new_c, new_r, meta["pos"], meta["valid"]

@@ -1,0 +1,186 @@
+"""Serving engine: prefill/decode steps + a slot-based continuous batcher.
+
+The TableNet integration is first-class: pass ``lut_params`` (from
+``core.convert.convert_params``) and every converted projection executes via
+the paper's LUT path — ``ExecCfg(use_pallas=True)`` routes through the
+Pallas kernel on real devices, the jnp oracle otherwise.
+
+``decode_step`` is what the decode_32k / long_500k dry-run cells lower: one
+new token against a seq_len-deep cache, caches seq-sharded over the model
+axis (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Ctx, ExecCfg
+from repro.models.model import model_forward
+from repro.models.params import abstract_params, init_params
+from repro.serve.cache import cache_specs
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int, ctx: Ctx,
+               dtype=jnp.bfloat16):
+    specs = cache_specs(cfg, batch, max_len)
+    return init_params(specs, jax.random.PRNGKey(0), default_dtype=dtype)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int, ctx: Ctx,
+                   dtype=jnp.bfloat16):
+    specs = cache_specs(cfg, batch, max_len)
+    return abstract_params(
+        specs, default_dtype=dtype,
+        sharding_fn=(ctx.shard.param_sharding if ctx.shard.mesh is not None else None),
+    )
+
+
+def make_prefill_step(ctx: Ctx) -> Callable:
+    """(params, inputs, cache) -> (last-token logits, filled cache)."""
+    serve_ctx = dataclasses.replace(ctx, ex=dataclasses.replace(ctx.ex, remat="none"))
+
+    def prefill(params, inputs, cache):
+        logits, cache, _ = model_forward(params, inputs, serve_ctx, cache=cache)
+        return logits[:, -1:], cache
+
+    return prefill
+
+
+def make_decode_step(ctx: Ctx, sample: str = "greedy") -> Callable:
+    """(params, cache, tokens (B,1)) -> (next tokens (B,1), logits, cache)."""
+    serve_ctx = dataclasses.replace(ctx, ex=dataclasses.replace(ctx.ex, remat="none"))
+
+    def decode(params, cache, tokens):
+        logits, cache, _ = model_forward(
+            params, {"tokens": tokens}, serve_ctx, cache=cache
+        )
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, logits, cache
+
+    return decode
+
+
+def generate(
+    params, ctx: Ctx, prompts: jax.Array, max_new: int, max_len: int | None = None,
+    enc_embeds: jax.Array | None = None, embeds: jax.Array | None = None,
+) -> jax.Array:
+    """Greedy generation (reference implementation used by tests/examples)."""
+    B, S = prompts.shape
+    T = max_len or (S + max_new)
+    cache = make_cache(ctx.cfg, B, T, ctx)
+    prefill = jax.jit(make_prefill_step(ctx))
+    decode = jax.jit(make_decode_step(ctx))
+    inputs = {"tokens": prompts}
+    if enc_embeds is not None:
+        inputs["enc_embeds"] = enc_embeds
+    if embeds is not None:
+        inputs["embeds"] = embeds
+    logits, cache = prefill(params, inputs, cache)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    out = [tok]
+    for _ in range(max_new - 1):
+        tok, _, cache = decode(params, cache, tok)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Slot-based continuous batcher
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: Any  # (S,) int32
+    max_new: int
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchingEngine:
+    """Fixed-slot continuous batching: finished sequences are swapped out for
+    queued requests between decode steps (per-slot prefill).  Single-host
+    reference implementation of the serving layer's scheduling semantics."""
+
+    def __init__(self, params, ctx: Ctx, num_slots: int, max_len: int,
+                 eos_id: Optional[int] = None):
+        self.params, self.ctx = params, ctx
+        self.num_slots, self.max_len = num_slots, max_len
+        self.eos_id = eos_id
+        self.queue: list[Request] = []
+        self.slots: list[Optional[Request]] = [None] * num_slots
+        self.cache = make_cache(ctx.cfg, num_slots, max_len, ctx)
+        self._prefill1 = jax.jit(make_prefill_step(ctx))
+        self._decode = jax.jit(make_decode_step(ctx))
+        self._next_tok = jnp.zeros((num_slots, 1), jnp.int32)
+        self._remaining = [0] * num_slots
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.num_slots):
+            if self.slots[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[s] = req
+                # per-slot prefill on a batch-1 cache, then splice into slot s
+                sub = make_cache(self.ctx.cfg, 1, self.max_len, self.ctx)
+                logits, sub = self._prefill1(
+                    self.params, {"tokens": req.prompt[None, :]}, sub
+                )
+                self.cache = _splice_cache(self.cache, sub, s)
+                tok = int(jnp.argmax(logits[0, -1]))
+                req.generated.append(tok)
+                self._next_tok = self._next_tok.at[s, 0].set(tok)
+                self._remaining[s] = req.max_new - 1
+
+    def step(self) -> bool:
+        """One decode step over all active slots; returns True if any active."""
+        self._admit()
+        if all(r is None for r in self.slots):
+            return False
+        nxt, _, self.cache = self._decode(self.params, self.cache, self._next_tok)
+        self._next_tok = nxt
+        for s, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(nxt[s, 0])
+            req.generated.append(tok)
+            self._remaining[s] -= 1
+            if self._remaining[s] <= 0 or (self.eos_id is not None and tok == self.eos_id):
+                req.done = True
+                self.slots[s] = None
+        return True
+
+    def run(self) -> list[Request]:
+        finished = []
+        all_reqs = list(self.queue)
+        while self.step():
+            pass
+        return all_reqs
+
+
+def _splice_cache(cache: dict, sub: dict, slot: int) -> dict:
+    """Write a batch-1 cache into batch slot ``slot``.  Leaves under
+    "layers"/"shared_attn"/"cross" are (L, B, ...) — batch at axis 1;
+    metadata leaves (pos/valid/index) are (B, ...) — batch at axis 0."""
+    out = {}
+    for key, val in cache.items():
+        axis = 1 if key in ("layers", "shared_attn", "cross") else 0
+        out[key] = jax.tree.map(
+            lambda d, s, a=axis: d.at[
+                tuple(
+                    slice(slot, slot + 1) if i == a else slice(None)
+                    for i in range(d.ndim)
+                )
+            ].set(s),
+            val,
+            sub[key],
+        )
+    return out

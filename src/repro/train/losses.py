@@ -1,0 +1,25 @@
+"""Losses: next-token cross entropy with padded-vocab + label masking."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(
+    logits: jax.Array,  # (B, S, V_padded)
+    labels: jax.Array,  # (B, S) int32; -1 = ignore
+    vocab_size: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (mean loss over valid tokens, valid-token count)."""
+    Vp = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    if Vp > vocab_size:  # mask Megatron-style vocab padding columns
+        col = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+        lf = jnp.where(col < vocab_size, lf, -1e9)
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    picked = jnp.take_along_axis(lf, safe[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, lse - picked, 0.0)
+    count = jnp.maximum(valid.sum(), 1)
+    return nll.sum() / count, count

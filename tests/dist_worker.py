@@ -1,0 +1,162 @@
+"""Subprocess worker for distribution tests: runs under 16 fake CPU devices.
+
+Usage: python tests/dist_worker.py <mode>
+Prints one JSON line with results; exit code 0 on success.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+
+import json
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+
+
+def small_mesh():
+    return jax.make_mesh((2, 2, 4), ("pod", "data", "model"),
+                         axis_types=(AxisType.Auto,) * 3)
+
+
+def mode_train_step_executes():
+    """Sharded end-to-end train step on a 2x2x4 mesh matches 1-device run."""
+    from repro.configs.base import get_config
+    from repro.data.synthetic import LMStreamConfig, lm_batch
+    from repro.dist.sharding import ShardCtx
+    from repro.models.layers import Ctx, ExecCfg
+    from repro.models.model import model_specs
+    from repro.models.params import abstract_params, init_params
+    from repro.train.trainer import TrainConfig, make_train_step
+
+    cfg = get_config("qwen2_moe_a2_7b", reduced=True)  # exercises shard_map MoE
+    mesh = small_mesh()
+    ctx_d = Ctx(cfg, shard=ShardCtx(mesh), ex=ExecCfg(remat="none"))
+    ctx_1 = Ctx(cfg, ex=ExecCfg(remat="none"))
+    tc = TrainConfig(microbatches=1, compute_dtype=jnp.float32)
+
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+    batch = lm_batch(LMStreamConfig(cfg.vocab_size, 16, 8, seed=0), 0)
+    from repro.optim.adamw import init_opt_state
+
+    opt = init_opt_state(params)
+
+    # distribute params per sharding rules
+    sharded_params = jax.tree.map(lambda a: a, params)
+    abs_p = abstract_params(
+        model_specs(cfg), default_dtype=jnp.float32,
+        sharding_fn=ctx_d.shard.param_sharding,
+    )
+    sharded_params = jax.tree.map(
+        lambda a, s: jax.device_put(a, s.sharding), params, abs_p
+    )
+    step_d = jax.jit(make_train_step(ctx_d, tc))
+    step_1 = jax.jit(make_train_step(ctx_1, tc))
+    p_d, o_d, m_d = step_d(sharded_params, init_opt_state(sharded_params), batch)
+    p_1, o_1, m_1 = step_1(params, opt, batch)
+    dl = abs(float(m_d["loss"]) - float(m_1["loss"]))
+    # parameters after one step agree
+    diffs = [
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree.leaves(p_d), jax.tree.leaves(p_1))
+    ]
+    return {"loss_diff": dl, "max_param_diff": max(diffs)}
+
+
+def mode_compression():
+    from repro.dist.compression import compressed_psum
+
+    mesh = small_mesh()
+    key = jax.random.PRNGKey(0)
+    g_pods = jax.random.normal(key, (2, 64, 32))  # per-pod gradients
+
+    def per_pod(g, err):
+        out, new_err = compressed_psum({"w": g[0]}, {"w": err[0]}, "pod")
+        return out, jax.tree.map(lambda e: e[None], new_err)
+
+    out, new_err = jax.shard_map(
+        per_pod,
+        mesh=mesh,
+        in_specs=(P("pod"), P("pod")),
+        out_specs=(P(), P("pod")),
+        axis_names={"pod"},
+    )(g_pods, jnp.zeros((2, 64, 32)))
+    # expected: mean across pods within int8 quantisation error
+    want = np.asarray(g_pods.mean(0))
+    got = np.asarray(out["w"])
+    scale = float(jnp.abs(g_pods).max()) / 127.0
+    err_mag = float(np.abs(got - want).max())
+    # error feedback: residual equals what quantisation dropped locally
+    errs = np.asarray(new_err["w"])  # (2, 64, 32) per-pod residuals
+    return {
+        "reduce_err": err_mag,
+        "quant_step": scale,
+        "err_nonzero": float(np.abs(errs).max()),
+        "err_bounded": float(np.abs(errs).max()) <= scale * 0.51,
+    }
+
+
+def mode_elastic_ckpt():
+    from repro.dist import checkpoint as ckpt
+
+    mesh = small_mesh()
+    big = jax.device_put(
+        jnp.arange(16 * 32, dtype=jnp.float32).reshape(16, 32),
+        NamedSharding(mesh, P(("pod", "data"), "model")),
+    )
+    tree = {"w": big}
+    d = tempfile.mkdtemp()
+    ckpt.save_checkpoint(d, 1, tree)
+    # restore onto a DIFFERENT (smaller) mesh => elastic reshard
+    mesh2 = jax.make_mesh((2, 2), ("data", "model"),
+                          axis_types=(AxisType.Auto,) * 2)
+    like = {
+        "w": jax.ShapeDtypeStruct(
+            (16, 32), jnp.float32, sharding=NamedSharding(mesh2, P("data", "model"))
+        )
+    }
+    out = ckpt.restore_checkpoint(d, 1, like)
+    ok = bool(np.array_equal(np.asarray(jax.device_get(out["w"])),
+                             np.asarray(jax.device_get(big))))
+    n_shards = len(out["w"].sharding.device_set)
+    return {"restored_equal": ok, "new_mesh_devices": n_shards}
+
+
+def mode_compressed_train():
+    """Train step with pod-compressed grads lowers and runs; grads close to
+    uncompressed."""
+    from repro.configs.base import get_config
+    from repro.data.synthetic import LMStreamConfig, lm_batch
+    from repro.dist.sharding import ShardCtx
+    from repro.models.layers import Ctx, ExecCfg
+    from repro.models.model import model_specs
+    from repro.models.params import init_params
+    from repro.train.trainer import TrainConfig, init_train_state, make_train_step
+
+    cfg = get_config("granite_8b", reduced=True)
+    mesh = small_mesh()
+    ctx = Ctx(cfg, shard=ShardCtx(mesh), ex=ExecCfg(remat="none"))
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+    batch = lm_batch(LMStreamConfig(cfg.vocab_size, 16, 8, seed=0), 0)
+
+    tc_c = TrainConfig(microbatches=1, compute_dtype=jnp.float32,
+                       compress_pod_grads=True)
+    tc_p = TrainConfig(microbatches=1, compute_dtype=jnp.float32)
+    pc, oc, mc = jax.jit(make_train_step(ctx, tc_c))(
+        params, init_train_state(ctx, tc_c, params), batch
+    )
+    pp, op, mp = jax.jit(make_train_step(ctx, tc_p))(
+        params, init_train_state(ctx, tc_p, params), batch
+    )
+    dl = abs(float(mc["loss"]) - float(mp["loss"]))
+    gn = abs(float(mc["grad_norm"]) - float(mp["grad_norm"]))
+    return {"loss_diff": dl, "gnorm_rel_diff": gn / (float(mp["grad_norm"]) + 1e-9)}
+
+
+if __name__ == "__main__":
+    mode = sys.argv[1]
+    out = globals()[f"mode_{mode}"]()
+    print("RESULT " + json.dumps(out))

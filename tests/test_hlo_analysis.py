@@ -1,0 +1,78 @@
+"""Unit tests for the roofline HLO parser + skip rules + mesh contract."""
+import pytest
+
+from repro.configs.base import get_config
+from repro.launch import hlo_analysis as H
+from repro.launch.inputs import SHAPES, cell_is_runnable, shape_case
+
+
+HLO = """
+  %all-gather = f32[8192,8]{1,0} all-gather(%x), replica_groups=[4,4]<=[4,4]T(1,0), dimensions={0}
+  %all-reduce.5 = bf16[1024]{0} all-reduce(%y), replica_groups=[2,8]<=[16]
+  %tuple-ar = (f32[16384]{0}, f32[16384,256]{1,0}) all-reduce(%a, %b), replica_groups=[4,4]<=[4,4]T(1,0)
+  %rs = f32[128]{0} reduce-scatter(%z), replica_groups={{0,1,2,3},{4,5,6,7}}
+  %cp = u8[64]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %ag-start = f32[32]{0} all-gather-start(%v), replica_groups=[4,4]<=[16]
+  %ag-done = f32[32]{0} all-gather-done(%ag-start)
+  %not-a-collective = f32[10]{0} add(%p, %q)
+"""
+
+
+def test_collective_stats_parsing():
+    st = H.collective_stats(HLO)
+    assert st.by_op["all-gather"]["count"] == 2  # incl. -start, excl. -done
+    assert st.by_op["all-reduce"]["count"] == 2
+    # tuple all-reduce sums both components
+    tuple_bytes = 16384 * 4 + 16384 * 256 * 4
+    assert st.by_op["all-reduce"]["result_bytes"] == 1024 * 2 + tuple_bytes
+    # ring models
+    ag = 8192 * 8 * 4
+    assert abs(st.by_op["all-gather"]["link_bytes"] - (0.75 * ag + 0.75 * 32 * 4)) < 1
+    rs = st.by_op["reduce-scatter"]
+    assert rs["link_bytes"] == pytest.approx(128 * 4 * 4 * 3 / 4)  # N=4 groups-list
+    assert st.by_op["collective-permute"]["link_bytes"] == 64
+
+
+def test_roofline_terms_dominance():
+    t = H.roofline_terms(197e12, 0.0, 0.0)  # exactly 1s of compute
+    assert t["dominant"] == "compute" and t["roofline_fraction"] == 1.0
+    t = H.roofline_terms(197e12, 819e9 * 10, 0.0)
+    assert t["dominant"] == "memory"
+    assert t["roofline_fraction"] == pytest.approx(0.1)
+
+
+def test_model_flops_conventions():
+    cfg = get_config("granite_8b")
+    train = H.model_flops(cfg, shape_case("train_4k"))
+    decode = H.model_flops(cfg, shape_case("decode_32k"))
+    n = cfg.param_count()
+    assert train == 6.0 * n * 4096 * 256
+    assert decode == 2.0 * n * 128
+
+
+def test_long_500k_skip_rules():
+    runnable = {}
+    for arch in ("granite_8b", "mixtral_8x7b", "zamba2_1_2b", "rwkv6_3b",
+                 "phi3_medium_14b", "whisper_base"):
+        ok, _ = cell_is_runnable(get_config(arch), shape_case("long_500k"))
+        runnable[arch] = ok
+    assert runnable == {
+        "granite_8b": False,  # full quadratic attention
+        "mixtral_8x7b": True,  # SWA bounds the window
+        "zamba2_1_2b": True,  # SSM state O(1)
+        "rwkv6_3b": True,
+        "phi3_medium_14b": False,
+        "whisper_base": False,
+    }
+
+
+def test_production_mesh_contract():
+    # shapes/axes exactly as the assignment specifies (no jax init needed
+    # beyond the default single device: only validate the declared shape)
+    import inspect
+
+    from repro.launch import mesh
+
+    src = inspect.getsource(mesh.make_production_mesh)
+    assert "(2, 16, 16)" in src and "(16, 16)" in src
+    assert '("pod", "data", "model")' in src and '("data", "model")' in src

@@ -1,0 +1,153 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True on CPU) vs jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lut import LUTPlan, build_luts, pack_codes, plane_scales
+from repro.core.quantize import FixedPointFormat, Float16Format
+from repro.kernels.bitplane_pack.ops import bitplane_pack
+from repro.kernels.bitplane_pack.ref import bitplane_pack_ref
+from repro.kernels.binary_matmul.ops import binary_matmul
+from repro.kernels.binary_matmul.ref import binary_matmul_ref
+from repro.kernels.lut_affine.ops import lut_affine
+from repro.kernels.lut_affine.ref import lut_affine_ref
+
+
+# ---------------------------------------------------------------------------
+# lut_affine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,n,k,E,p",
+    [
+        (1, 1, 1, 2, 1),  # degenerate minimum
+        (4, 3, 7, 8, 10),  # ragged everything
+        (16, 11, 32, 64, 96),  # fp16-style planes
+        (3, 4, 130, 16, 130),  # k and p beyond one block
+        (130, 2, 5, 256, 257),  # batch beyond one block, odd p
+    ],
+)
+def test_lut_affine_matches_ref(B, n, k, E, p, dtype):
+    kc, kt, ks = jax.random.split(jax.random.PRNGKey(B * 7 + k), 3)
+    codes = jax.random.randint(kc, (B, n, k), 0, E)
+    tables = jax.random.normal(kt, (k, E, p), dtype=jnp.float32).astype(dtype)
+    scales = 2.0 ** jnp.arange(n, dtype=jnp.float32)
+    got = lut_affine(codes, tables, scales, interpret=True)
+    want = lut_affine_ref(codes, tables, scales)
+    # blocked accumulation reorders fp32 sums; scale atol to the output range
+    rel = 1e-5 if dtype == jnp.float32 else 2e-2
+    atol = rel * float(np.abs(np.asarray(want)).max() + 1.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rel, atol=atol)
+
+
+def test_lut_affine_leading_dims_and_bias():
+    kc, kt = jax.random.split(jax.random.PRNGKey(0))
+    codes = jax.random.randint(kc, (2, 3, 4, 8), 0, 16)  # (d0, d1, n, k)
+    tables = jax.random.normal(kt, (8, 16, 12))
+    scales = jnp.ones((4,))
+    bias = jnp.arange(12.0)
+    got = lut_affine(codes, tables, scales, bias=bias, interpret=True)
+    want = lut_affine_ref(codes.reshape(6, 4, 8), tables, scales).reshape(2, 3, 12) + bias
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_lut_affine_end_to_end_exact_vs_core():
+    """Kernel path == core oracle == quantised matmul, bitwise (int weights)."""
+    fmt = FixedPointFormat(4, 2, signed=True)
+    q, p, m = 50, 33, 3
+    plan = LUTPlan(q, p, m, fmt)
+    kw, kx = jax.random.split(jax.random.PRNGKey(5))
+    W = jax.random.randint(kw, (q, p), -8, 8).astype(jnp.float32)
+    x = jax.random.uniform(kx, (9, q), minval=-3.0, maxval=3.0)
+    tables = build_luts(W, plan)
+    codes = pack_codes(x, plan)
+    scales = jnp.asarray(plane_scales(plan), jnp.float32)
+    got = lut_affine(codes, tables, scales, interpret=True)
+    xq = fmt.dequantize(fmt.quantize(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(xq @ W), rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# bitplane_pack
+# ---------------------------------------------------------------------------
+
+
+@given(
+    B=st.integers(1, 9),
+    q=st.integers(1, 70),
+    m=st.integers(1, 4),
+    bits=st.integers(2, 8),
+    frac=st.integers(0, 4),
+    signed=st.booleans(),
+)
+@settings(max_examples=15, deadline=None)
+def test_pack_fixed_matches_ref(B, q, m, bits, frac, signed):
+    x = jax.random.uniform(
+        jax.random.PRNGKey(B * q), (B, q), minval=-4.0, maxval=4.0
+    )
+    kw = dict(kind="fixed", bits=bits, frac=frac, signed=signed, m=m)
+    got = bitplane_pack(x, interpret=True, **kw)
+    want = bitplane_pack_ref(x, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("B,q,m", [(1, 1, 1), (5, 33, 2), (8, 130, 4), (130, 16, 1)])
+def test_pack_float16_matches_ref(B, q, m):
+    x = jax.random.uniform(jax.random.PRNGKey(q), (B, q), maxval=100.0)
+    x = x * (jax.random.uniform(jax.random.PRNGKey(q + 1), (B, q)) > 0.1)
+    kw = dict(kind="float16", bits=16, frac=0, signed=False, m=m)
+    got = bitplane_pack(x, interpret=True, **kw)
+    want = bitplane_pack_ref(x, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_pack_float16_subnormals():
+    x = jnp.asarray([[5.96e-8, 1.2e-7, 6.0e-5, 0.0]])
+    kw = dict(kind="float16", bits=16, frac=0, signed=False, m=2)
+    got = bitplane_pack(x, interpret=True, **kw)
+    want = bitplane_pack_ref(x, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# binary_matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,n,q,p",
+    [(1, 1, 1, 1), (4, 8, 100, 30), (65, 11, 300, 140), (2, 16, 513, 257)],
+)
+def test_binary_matmul_matches_ref(B, n, q, p, dtype):
+    kp, kw = jax.random.split(jax.random.PRNGKey(n * q))
+    planes = jax.random.bernoulli(kp, 0.5, (B, n, q)).astype(jnp.int8)
+    W = (jax.random.normal(kw, (q, p)) / np.sqrt(q)).astype(dtype)
+    scales = 0.5 ** jnp.arange(n, dtype=jnp.float32)
+    got = binary_matmul(planes, W, scales, interpret=True)
+    want = binary_matmul_ref(planes, W, scales)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_binary_matmul_equals_lut_path():
+    """The MXU path computes the same function as the m=1 LUT path (exact,
+    integer weights): validates the beyond-paper optimisation's correctness
+    claim from DESIGN.md §2."""
+    fmt = FixedPointFormat(5, 3, signed=True)
+    q, p = 40, 17
+    plan = LUTPlan(q, p, 1, fmt)
+    kw, kx = jax.random.split(jax.random.PRNGKey(11))
+    W = jax.random.randint(kw, (q, p), -8, 8).astype(jnp.float32)
+    x = jax.random.uniform(kx, (6, q), minval=-2.0, maxval=2.0)
+    codes = pack_codes(x, plan)  # (6, n, k=q) with m=1: code == bit
+    scales = jnp.asarray(plane_scales(plan), jnp.float32)
+    via_bmm = binary_matmul(codes.astype(jnp.int8), W, scales, interpret=True)
+    tables = build_luts(W, plan)
+    via_lut = lut_affine(codes, tables, scales, interpret=True)
+    np.testing.assert_allclose(np.asarray(via_bmm), np.asarray(via_lut), rtol=0, atol=0)

@@ -1,0 +1,198 @@
+"""Property tests for the TableNet core: the LUT path must compute exactly
+the quantised affine map (the paper's central claim)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lut import (
+    LUTPlan,
+    apply_luts,
+    build_luts,
+    lut_affine_reference,
+    pack_codes,
+    plane_scales,
+    quantized_matmul_reference,
+)
+from repro.core.quantize import (
+    FixedPointFormat,
+    Float16Format,
+    build_stochastic_rounding_lut,
+    stochastic_round_via_lut,
+)
+
+
+def _int_weights(key, q, p, wbits=4):
+    """Integer-valued weights so fp32 accumulation is exact -> bitwise tests."""
+    return jax.random.randint(key, (q, p), -(2 ** (wbits - 1)), 2 ** (wbits - 1)).astype(
+        jnp.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# Quantizer invariants
+# ---------------------------------------------------------------------------
+
+
+@given(
+    bits=st.integers(2, 8),
+    frac=st.integers(0, 8),
+    signed=st.booleans(),
+)
+@settings(max_examples=25, deadline=None)
+def test_fixed_point_roundtrip_and_bitplanes(bits, frac, signed):
+    fmt = FixedPointFormat(bits, frac, signed)
+    codes = jnp.arange(fmt.code_min, fmt.code_max + 1, dtype=jnp.int32)
+    vals = fmt.dequantize(codes)
+    # quantize(dequantize(c)) == c for every representable code
+    np.testing.assert_array_equal(fmt.quantize(vals), codes)
+    # bitplane decomposition reconstructs the value exactly
+    planes = fmt.bitplanes(codes)  # (n, N)
+    scales = fmt.plane_scales()  # (n,)
+    recon = np.einsum("n,nN->N", scales, np.asarray(planes))
+    np.testing.assert_allclose(recon, np.asarray(vals), rtol=0, atol=0)
+
+
+def test_fixed_point_saturates():
+    fmt = FixedPointFormat(4, 2, signed=True)
+    assert int(fmt.quantize(jnp.float32(100.0))) == fmt.code_max
+    assert int(fmt.quantize(jnp.float32(-100.0))) == fmt.code_min
+
+
+def test_float16_decompose_exact():
+    f = Float16Format()
+    # every class of value: zero, subnormals, normals, large
+    x = jnp.asarray(
+        [0.0, 5.96e-8, 6.0e-5, 6.1e-5, 0.5, 1.0, 1.5, 333.25, 65504.0], jnp.float32
+    )
+    h = f.quantize(x)
+    exp, planes = f.decompose(h)
+    sigma = f.sigma(exp)
+    weights = 2.0 ** np.arange(f.num_planes)
+    recon = np.einsum("n,nN->N", weights, np.asarray(planes)) * np.asarray(sigma)
+    np.testing.assert_allclose(recon, np.asarray(h, np.float32), rtol=0, atol=0)
+
+
+def test_stochastic_rounding_unbiased():
+    fmt = FixedPointFormat(4, 0)
+    table = build_stochastic_rounding_lut(fmt, in_bits=8, R=4096, seed=0)
+    code = jnp.int32(0b0011_0100)  # 3.25 in 8-bit with 4 extra frac bits
+    outs = np.asarray(
+        [int(stochastic_round_via_lut(table, code, i)) for i in range(4096)]
+    )
+    assert set(outs) <= {3, 4}
+    np.testing.assert_allclose(outs.mean(), 3.25, atol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# LUT exactness: fixed point (bitwise, via integer-valued weights)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    q=st.integers(1, 40),
+    p=st.integers(1, 16),
+    m=st.integers(1, 6),
+    bits=st.integers(2, 6),
+    frac=st.integers(0, 4),
+    signed=st.booleans(),
+    mode=st.sampled_from(["bitplane", "full"]),
+    batch=st.integers(1, 4),
+)
+@settings(max_examples=40, deadline=None)
+def test_lut_exact_fixed(q, p, m, bits, frac, signed, mode, batch):
+    if mode == "full" and m * bits > 18:
+        m = max(1, 18 // bits)
+    fmt = FixedPointFormat(bits, frac, signed)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(q * 131 + p), 3)
+    W = _int_weights(k1, q, p)
+    b = _int_weights(k2, 1, p)[0]
+    lo, hi = fmt.min_value * 1.5, fmt.max_value * 1.5
+    x = jax.random.uniform(k3, (batch, q), minval=lo, maxval=hi)
+    plan = LUTPlan(q, p, m, fmt, mode=mode)
+    got = lut_affine_reference(x, W, b, plan)
+    want = quantized_matmul_reference(x, W, b, plan)
+    # integer weights + integer (scaled) inputs: fp32 arithmetic is exact
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# LUT exactness: binary16 (exact up to fp32 summation order)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    q=st.integers(1, 32),
+    p=st.integers(1, 12),
+    m=st.integers(1, 3),
+    mode=st.sampled_from(["bitplane", "full"]),
+)
+@settings(max_examples=25, deadline=None)
+def test_lut_exact_float16(q, p, m, mode):
+    if mode == "full":
+        m = 1
+    fmt = Float16Format()
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(q * 17 + p), 3)
+    W = _int_weights(k1, q, p)
+    b = jnp.zeros((p,), jnp.float32)
+    # powers of two as inputs -> products are exact in fp32
+    expo = jax.random.randint(k3, (2, q), -10, 10)
+    x = (2.0 ** expo.astype(jnp.float32)) * (
+        jax.random.uniform(k2, (2, q)) > 0.2
+    ).astype(jnp.float32)
+    plan = LUTPlan(q, p, m, fmt, mode=mode)
+    got = lut_affine_reference(x, W, b, plan)
+    want = quantized_matmul_reference(x, W, b, plan)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+def test_lut_float16_general_values_close():
+    """Arbitrary fp16 inputs: same mathematical value, fp32-order tolerance."""
+    fmt = Float16Format()
+    q, p = 128, 32
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    W = jax.random.normal(k1, (q, p)) / np.sqrt(q)
+    b = jax.random.normal(k2, (p,)) * 0.1
+    x = jax.random.uniform(k3, (8, q), maxval=4.0)
+    plan = LUTPlan(q, p, 2, fmt)
+    got = lut_affine_reference(x, W, b, plan)
+    want = quantized_matmul_reference(x, W, b, plan)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-6)
+
+
+def test_signed_msb_subtraction_matches_paper_schematic():
+    """The negative-MSB plane scale == paper's 'shift left n-1 and subtract'."""
+    fmt = FixedPointFormat(4, 0, signed=True)
+    plan = LUTPlan(3, 2, 3, fmt)
+    W = jnp.asarray([[1.0, 2.0], [3.0, -4.0], [5.0, 6.0]])
+    x = jnp.asarray([[-8.0, 7.0, -1.0]])
+    got = lut_affine_reference(x, W, None, plan)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ W), rtol=0, atol=0)
+
+
+def test_packed_code_width_and_reuse():
+    """Bitplane tables are plane-independent: one table set serves all planes."""
+    fmt = FixedPointFormat(5, 2)
+    plan = LUTPlan(10, 3, 2, fmt)
+    tables = build_luts(jnp.ones((10, 3)), plan)
+    assert tables.shape == (5, 4, 3)  # k=5 chunks, 2^2 entries, p=3
+    codes = pack_codes(jnp.ones((7, 10)), plan)
+    assert codes.shape == (7, 5, 5)  # (batch, planes, chunks)
+    assert int(codes.max()) < plan.num_entries
+
+
+def test_apply_luts_bias_once_equivalent_to_b_over_k():
+    """Paper stores b/k per table; we add b once — identical result."""
+    fmt = FixedPointFormat(3, 1)
+    q, p, m = 8, 4, 2
+    plan = LUTPlan(q, p, m, fmt)
+    key = jax.random.PRNGKey(3)
+    W = _int_weights(key, q, p)
+    b = jnp.asarray([4.0, -8.0, 12.0, 16.0])
+    x = jax.random.uniform(jax.random.PRNGKey(4), (5, q), maxval=3.0)
+    tables = build_luts(W, plan)
+    codes = pack_codes(x, plan)
+    ours = apply_luts(tables, codes, plan, bias=b)
+    want = quantized_matmul_reference(x, W, b, plan)
+    np.testing.assert_allclose(np.asarray(ours), np.asarray(want), rtol=0, atol=0)

@@ -1,0 +1,121 @@
+"""Chunked-parallel scan forms vs naive recurrent references (SSD + WKV),
+plus chunked-vs-decode-step consistency. These are the numerics that make
+zamba2/rwkv6 trainable and 500k-serveable."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.rwkv import wkv_chunked, wkv_decode_step
+from repro.models.ssm import ssd_chunked, ssd_decode_step
+
+
+def ssd_recurrent_ref(x, dt, A, Bm, Cm):
+    """O(L) recurrence: h_t = exp(dt_t A) h_{t-1} + dt_t x_t B_t^T; y = C h."""
+    B_, L, H, P = x.shape
+    N = Bm.shape[-1]
+    h = np.zeros((B_, H, P, N), np.float64)
+    x, dt, A, Bm, Cm = (np.asarray(t, np.float64) for t in (x, dt, A, Bm, Cm))
+    ys = []
+    for t in range(L):
+        dA = np.exp(dt[:, t] * A)  # (B, H)
+        h = h * dA[:, :, None, None] + np.einsum(
+            "bhp,bn->bhpn", x[:, t] * dt[:, t][..., None], Bm[:, t]
+        )
+        ys.append(np.einsum("bn,bhpn->bhp", Cm[:, t], h))
+    return np.stack(ys, 1), h
+
+
+def wkv_recurrent_ref(r, k, v, logw, u):
+    """y_t = r_t (S_t + diag(u) k_t v_t^T); S_{t+1} = diag(w_t) S_t + k_t v_t^T."""
+    B, L, H, K = r.shape
+    V = v.shape[-1]
+    S = np.zeros((B, H, K, V), np.float64)
+    r, k, v, logw, u = (np.asarray(t, np.float64) for t in (r, k, v, logw, u))
+    ys = []
+    for t in range(L):
+        kv = np.einsum("bhk,bhv->bhkv", k[:, t], v[:, t])
+        ys.append(np.einsum("bhk,bhkv->bhv", r[:, t], S + u[None, :, :, None] * kv))
+        S = S * np.exp(logw[:, t])[..., None] + kv
+    return np.stack(ys, 1), S
+
+
+@pytest.mark.parametrize("L,chunk", [(8, 4), (32, 8), (64, 64), (48, 16)])
+def test_ssd_chunked_matches_recurrence(L, chunk):
+    B, H, P, N = 2, 3, 4, 5
+    ks = jax.random.split(jax.random.PRNGKey(L), 5)
+    x = jax.random.normal(ks[0], (B, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, L, N))
+    Cm = jax.random.normal(ks[4], (B, L, N))
+    y, final = ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+    y_ref, h_ref = ssd_recurrent_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final), h_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunked_with_initial_state_and_decode():
+    """prefill(L) then decode(1) == chunked over (L+1)."""
+    B, L, H, P, N = 1, 16, 2, 4, 8
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    x = jax.random.normal(ks[0], (B, L + 1, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L + 1, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, L + 1, N))
+    Cm = jax.random.normal(ks[4], (B, L + 1, N))
+    y_all, _ = ssd_chunked(x, dt, A, Bm, Cm, chunk=1)
+    _, state = ssd_chunked(x[:, :L], dt[:, :L], A, Bm[:, :L], Cm[:, :L], chunk=4)
+    y1, _ = ssd_decode_step(
+        x[:, L:], dt[:, L:], A, Bm[:, L:], Cm[:, L:], state
+    )
+    np.testing.assert_allclose(
+        np.asarray(y1[:, 0]), np.asarray(y_all[:, L]), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("L,chunk", [(8, 4), (32, 8), (64, 32), (40, 8)])
+def test_wkv_chunked_matches_recurrence(L, chunk):
+    B, H, K, V = 2, 3, 8, 6
+    ks = jax.random.split(jax.random.PRNGKey(L * 3), 5)
+    r = jax.random.normal(ks[0], (B, L, H, K))
+    k = jax.random.normal(ks[1], (B, L, H, K))
+    v = jax.random.normal(ks[2], (B, L, H, V))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, L, H, K)))
+    u = jax.random.normal(ks[4], (H, K)) * 0.3
+    y, final = wkv_chunked(r, k, v, logw, u, chunk=chunk)
+    y_ref, S_ref = wkv_recurrent_ref(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final), S_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_wkv_extreme_decay_no_overflow():
+    """Strong decays must not overflow the chunked form (regression for the
+    factored exp(-cum) formulation)."""
+    B, L, H, K, V = 1, 64, 2, 4, 4
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    r = jax.random.normal(ks[0], (B, L, H, K))
+    k = jax.random.normal(ks[1], (B, L, H, K))
+    v = jax.random.normal(ks[2], (B, L, H, V))
+    logw = jnp.full((B, L, H, K), -50.0)  # near-total decay per step
+    u = jnp.zeros((H, K))
+    y, final = wkv_chunked(r, k, v, logw, u, chunk=32)
+    assert bool(jnp.isfinite(y).all()) and bool(jnp.isfinite(final).all())
+    y_ref, _ = wkv_recurrent_ref(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_wkv_decode_continues_chunked():
+    B, L, H, K, V = 2, 24, 2, 4, 4
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    r = jax.random.normal(ks[0], (B, L + 1, H, K))
+    k = jax.random.normal(ks[1], (B, L + 1, H, K))
+    v = jax.random.normal(ks[2], (B, L + 1, H, V))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, L + 1, H, K)))
+    u = jax.random.normal(ks[4], (H, K)) * 0.3
+    y_all, _ = wkv_chunked(r, k, v, logw, u, chunk=1)
+    _, S = wkv_chunked(r[:, :L], k[:, :L], v[:, :L], logw[:, :L], u, chunk=8)
+    y1, _ = wkv_decode_step(r[:, L:], k[:, L:], v[:, L:], logw[:, L:], u, S)
+    np.testing.assert_allclose(
+        np.asarray(y1[:, 0]), np.asarray(y_all[:, L]), rtol=1e-4, atol=1e-4
+    )

@@ -1,0 +1,148 @@
+"""Trainer substrate: loss goes down, checkpoint/restart resumes bit-exactly,
+failure replay works, preemption saves state, data is deterministic."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.data.pipeline import lm_stream, prefetch
+from repro.data.synthetic import LMStreamConfig, image_batch, lm_batch
+from repro.dist import checkpoint as ckpt
+from repro.models.layers import Ctx, ExecCfg
+from repro.models.model import model_specs
+from repro.models.params import init_params
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def _tiny_setup(tmp, steps=8, arch="granite_8b"):
+    cfg = get_config(arch, reduced=True)
+    ctx = Ctx(cfg, ex=ExecCfg(remat="none"))
+    tc = TrainConfig(
+        peak_lr=1e-2, warmup_steps=2, total_steps=steps, checkpoint_every=4,
+        out_dir=str(tmp), microbatches=1,
+    )
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+    data = lm_stream(cfg.vocab_size, 16, 4, seed=1)
+    return cfg, ctx, tc, params, data
+
+
+def test_loss_decreases(tmp_path):
+    cfg, ctx, tc, params, data = _tiny_setup(tmp_path, steps=30)
+    log = Trainer(ctx, tc, params, data).run(30)
+    first = np.mean([r["loss"] for r in log[:5]])
+    last = np.mean([r["loss"] for r in log[-5:]])
+    assert last < first - 0.1, (first, last)
+
+
+def test_data_is_deterministic():
+    c = LMStreamConfig(512, 16, 4, seed=3)
+    a, b = lm_batch(c, 7), lm_batch(c, 7)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    c2 = lm_batch(c, 8)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c2["tokens"]))
+    i1, l1 = image_batch(8, 5, seed=2)
+    i2, l2 = image_batch(8, 5, seed=2)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_prefetch_preserves_order():
+    it = prefetch(iter(range(20)), size=4)
+    assert list(it) == list(range(20))
+
+
+def test_checkpoint_roundtrip_and_atomicity(tmp_path):
+    tree = {
+        "a": jnp.arange(12.0).reshape(3, 4),
+        "nested": {"b": jnp.ones((2,), jnp.int32), "c": jnp.float32(3.5)},
+    }
+    d = str(tmp_path / "ck")
+    ckpt.save_checkpoint(d, 5, tree)
+    ckpt.save_checkpoint(d, 10, tree)
+    assert ckpt.latest_step(d) == 10
+    like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+    out = ckpt.restore_checkpoint(d, 10, like)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+    # keep_last GC
+    for s in (15, 20, 25):
+        ckpt.save_checkpoint(d, s, tree, keep_last=2)
+    steps = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+    assert steps == ["step_00000020", "step_00000025"]
+    # no tmp litter
+    assert not [x for x in os.listdir(d) if x.startswith(".tmp")]
+
+
+def test_restart_resumes_from_checkpoint(tmp_path):
+    cfg, ctx, tc, params, data = _tiny_setup(tmp_path, steps=8)
+    t1 = Trainer(ctx, tc, params, data)
+    t1.run(8)
+    assert ckpt.latest_step(os.path.join(str(tmp_path), "checkpoints")) == 8
+    # "crash" and restart from scratch objects; should resume at step 8
+    params2 = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+    data2 = lm_stream(cfg.vocab_size, 16, 4, seed=1, start_step=8)
+    t2 = Trainer(ctx, tc, params2, data2)
+    assert t2.start_step == 8
+    # params restored == trained params (bit-exact restore)
+    for a, b in zip(jax.tree.leaves(t1.params), jax.tree.leaves(t2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_failure_triggers_restore_and_replay(tmp_path):
+    cfg, ctx, tc, params, data = _tiny_setup(tmp_path, steps=8)
+
+    boom = {"armed": True}
+
+    class FlakyIter:
+        def __init__(self, inner):
+            self.inner = inner
+            self.n = 0
+
+        def __iter__(self):
+            return self
+
+        def __next__(self):
+            self.n += 1
+            b = next(self.inner)
+            if self.n == 6 and boom["armed"]:
+                boom["armed"] = False
+                # poison one batch -> NaN loss -> step failure path
+                return {k: v for k, v in b.items()} | {
+                    "tokens": b["tokens"] * 0 - 1  # invalid ids -> NaN-free? use big
+                }
+            return b
+
+    # a tokens tensor of -1 indexes embed[-1] (valid) — instead force failure
+    # by monkeypatching the step fn after construction:
+    t = Trainer(ctx, tc, params, lm_stream(cfg.vocab_size, 16, 4, seed=1))
+    real_step = t.step_fn
+    calls = {"n": 0}
+
+    def flaky(p, o, b):
+        calls["n"] += 1
+        if calls["n"] == 6:
+            raise RuntimeError("injected node failure")
+        return real_step(p, o, b)
+
+    t.step_fn = flaky
+    log = t.run(8)
+    assert log[-1]["step"] == 8  # completed despite the injected failure
+    assert calls["n"] >= 9  # replayed steps after restore
+
+
+def test_preemption_checkpoints_and_exits(tmp_path):
+    cfg, ctx, tc, params, data = _tiny_setup(tmp_path, steps=100)
+    t = Trainer(ctx, tc, params, data)
+    orig = t.step_fn
+
+    def step_then_preempt(p, o, b):
+        out = orig(p, o, b)
+        t.request_preemption()
+        return out
+
+    t.step_fn = step_then_preempt
+    log = t.run(100)
+    assert len(log) == 1  # exited at the first boundary
+    assert ckpt.latest_step(os.path.join(str(tmp_path), "checkpoints")) == 1

@@ -1,0 +1,59 @@
+"""Regenerate the §Dry-run/§Roofline tables inside EXPERIMENTS.md from
+results/dryrun.json (between the AUTOGEN markers)."""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.roofline_report import markdown_table  # noqa: E402
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def dryrun_summary(records) -> str:
+    ok = [r for r in records if r["status"] == "ok"]
+    sk = [r for r in records if r["status"] == "skipped"]
+    lines = [
+        f"* cells compiled OK: **{len(ok)}** (both meshes), skipped per spec: "
+        f"**{len(sk)}**, failures: **{len(records) - len(ok) - len(sk)}**",
+        "",
+        "| arch | shape | mesh | per-device HLO GFLOPs | per-device HBM GiB "
+        "| per-device link MiB | args GiB | temp GiB | compile s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        m = r["memory"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['flops_per_device'] / 1e9:.1f} "
+            f"| {r['hbm_bytes_per_device'] / 2**30:.2f} "
+            f"| {r['collectives']['link_bytes'] / 2**20:.1f} "
+            f"| {m.get('argument_mib', 0) / 1024:.2f} "
+            f"| {m.get('temp_mib', 0) / 1024:.2f} "
+            f"| {r.get('compile_s', 0):.0f} |"
+        )
+    skips = [f"  * {r['arch']} {r['shape']}: {r['reason']}" for r in sk
+             if r["mesh"] == "single"]
+    return "\n".join(lines) + "\n\nSkipped cells (spec rule):\n" + "\n".join(sorted(set(skips)))
+
+
+def main():
+    with open(os.path.join(ROOT, "results", "dryrun.json")) as f:
+        records = json.load(f)
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(path) as f:
+        text = f.read()
+    for tag, content in [
+        ("DRYRUN", dryrun_summary(records)),
+        ("ROOFLINE", markdown_table(records)),
+    ]:
+        start, end = f"<!-- AUTOGEN:{tag} -->", f"<!-- /AUTOGEN:{tag} -->"
+        i, j = text.index(start) + len(start), text.index(end)
+        text = text[:i] + "\n" + content + "\n" + text[j:]
+    with open(path, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()
