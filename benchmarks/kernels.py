@@ -26,10 +26,14 @@ def _time(fn, *args, iters=5) -> float:
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
-def rows() -> list[tuple[str, float, str]]:
+SHAPES = [(32, 256, 256, 1), (8, 512, 512, 1)]
+TINY_SHAPES = [(4, 32, 32, 1)]  # CI smoke: seconds, not minutes
+
+
+def rows(tiny: bool = False) -> list[tuple[str, float, str]]:
     out = []
     fmt = Float16Format(signed=True)
-    for B, q, p, m in [(32, 256, 256, 1), (8, 512, 512, 1)]:
+    for B, q, p, m in (TINY_SHAPES if tiny else SHAPES):
         plan = LUTPlan(q, p, m, fmt)
         key = jax.random.PRNGKey(0)
         W = jax.random.normal(key, (q, p)) / q**0.5
@@ -56,3 +60,33 @@ def rows() -> list[tuple[str, float, str]]:
             )
             out.append((f"kern/binary_matmul_{tag}", round(t_bmm, 1), "us/call interpret"))
     return out
+
+
+def main():
+    """CI smoke-bench entry point: run (optionally tiny) shapes, emit JSON."""
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="single small shape (CI smoke-bench)")
+    ap.add_argument("--out", default=None, help="write JSON rows to this path")
+    args = ap.parse_args()
+    payload = [
+        {"name": name, "value": value, "unit": unit}
+        for name, value, unit in rows(tiny=args.tiny)
+    ]
+    text = json.dumps(payload, indent=1)
+    print(text)
+    if args.out:
+        import os
+
+        parent = os.path.dirname(args.out)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Version shims for the jax API surface this repo targets.
+
+The codebase is written against the modern jax names — ``jax.shard_map``
+with ``axis_names=`` / ``check_vma=``, ``jax.sharding.AxisType``,
+``jax.make_mesh(..., axis_types=...)`` and ``jax.lax.pvary`` — but must also
+run on the 0.4.x line shipped in the pinned toolchain image, where partial
+manual mode is spelled ``jax.experimental.shard_map.shard_map(..., auto=...)``
+and the varying-manual-axes type system does not exist.  Import these
+wrappers instead of reaching into jax directly.
+"""
+from __future__ import annotations
+
+import enum
+
+import jax
+
+try:  # jax >= 0.6: typed mesh axes
+    from jax.sharding import AxisType
+except ImportError:  # 0.4.x: every mesh axis is implicitly Auto (GSPMD)
+    AxisType = enum.Enum("AxisType", ["Auto", "Explicit", "Manual"])
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` tolerating ``axis_types`` on old jax.
+
+    This repo only ever uses ``AxisType.Auto``, which is the only (implicit)
+    behaviour 0.4.x offers, so dropping the argument is semantics-preserving.
+    """
+    try:
+        return jax.make_mesh(
+            axis_shapes,
+            axis_names,
+            axis_types=axis_types,
+            devices=devices,
+        )
+    except TypeError:
+        return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None, check_vma=False):
+    """Modern keyword surface for shard_map on either jax line.
+
+    On 0.4.x, ``axis_names`` (the axes the body handles manually) maps to
+    the old complementary ``auto`` set; replication checking stays off —
+    the 0.4.x checker predates the VMA system the callers are written for.
+    0.4.x also lacks an eager impl for partial-auto shard_map, so that case
+    is jit-wrapped (a no-op when the caller already traces: jit-of-jit
+    inlines).
+    """
+    if hasattr(jax, "shard_map"):  # jax >= 0.6
+        kwargs = {} if axis_names is None else {"axis_names": set(axis_names)}
+        return jax.shard_map(
+            f,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_vma=check_vma,
+            **kwargs,
+        )
+    from jax.experimental.shard_map import shard_map as shard_map_04
+
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    mapped = shard_map_04(
+        f,
+        mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        check_rep=False,
+        auto=auto,
+    )
+    return jax.jit(mapped) if auto else mapped
+
+
+def pvary(x, axis_name):
+    """``jax.lax.pvary`` where it exists; identity on 0.4.x.
+
+    On 0.4.x with ``check_rep=False`` shard_map never inserts the implicit
+    transpose-psum that ``pvary`` exists to suppress, so identity is the
+    correct degenerate form.
+    """
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, axis_name)
+    return x

@@ -1,0 +1,6 @@
+"""Distribution layer: logical-axis sharding rules, compressed collectives,
+and elastic checkpoints.  See README.md in this package for the contracts.
+"""
+from repro.dist import checkpoint, compression, sharding  # noqa: F401
+from repro.dist.compression import compressed_psum  # noqa: F401
+from repro.dist.sharding import RULE_SETS, ShardCtx  # noqa: F401

@@ -1,0 +1,145 @@
+"""Atomic, elastic checkpoints.
+
+Layout: ``<dir>/step_00000123/`` holding ``arrays.npz`` (leaves in tree
+order, stored as raw byte buffers so exotic dtypes like bfloat16 survive
+numpy serialisation) and ``meta.json`` (per-leaf dtype/shape manifest).
+
+* **atomic** — writes land in a ``.tmp_*`` sibling that is ``os.rename``d
+  into place; a crash mid-write can never produce a step directory that
+  :func:`latest_step` would pick up (it also requires ``meta.json``).
+* **elastic** — checkpoints store full logical arrays (gathered to host),
+  so :func:`restore_checkpoint` can place them onto *any* sharding the
+  ``like`` tree requests: a different mesh shape, fewer devices, or a
+  single host.  Restoring 16-way-sharded training state onto a 4-device
+  serving mesh is a plain restore.
+* **GC** — ``keep_last=N`` prunes all but the newest N steps after a
+  successful commit.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_PREFIX = "step_"
+
+
+def _step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"{_PREFIX}{step:08d}")
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    tree: Any,
+    keep_last: Optional[int] = None,
+) -> str:
+    """Commit ``tree`` (any pytree of arrays/scalars) as ``step``."""
+    os.makedirs(directory, exist_ok=True)
+    leaves = jax.tree.leaves(tree)
+    arrays = [np.asarray(jax.device_get(leaf)) for leaf in leaves]
+    tmp = tempfile.mkdtemp(prefix=".tmp_", dir=directory)
+    try:
+        np.savez(
+            os.path.join(tmp, "arrays.npz"),
+            **{
+                f"leaf_{i}": np.frombuffer(a.tobytes(), np.uint8)
+                for i, a in enumerate(arrays)
+            },
+        )
+        recs = [{"dtype": str(a.dtype), "shape": list(a.shape)} for a in arrays]
+        meta = {"step": step, "leaves": recs}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        final = _step_dir(directory, step)
+        aside = None
+        if os.path.exists(final):
+            # never rmtree a committed step before the replacement lands: a
+            # crash in between would lose it; park it aside instead
+            aside = tmp + ".old"
+            os.rename(final, aside)
+        os.rename(tmp, final)  # the commit point
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    if aside is not None:
+        shutil.rmtree(aside, ignore_errors=True)
+    if keep_last is not None:
+        assert keep_last >= 1, f"keep_last must be >= 1, got {keep_last}"
+        steps = sorted(_list_steps(directory))
+        for old in steps[: len(steps) - keep_last]:
+            shutil.rmtree(_step_dir(directory, old), ignore_errors=True)
+    return _step_dir(directory, step)
+
+
+def _list_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for name in os.listdir(directory):
+        if not name.startswith(_PREFIX):
+            continue
+        if not os.path.exists(os.path.join(directory, name, "meta.json")):
+            continue  # partial/corrupt: never committed
+        try:
+            steps.append(int(name[len(_PREFIX):]))
+        except ValueError:
+            continue
+    return steps
+
+
+def latest_step(directory: str) -> Optional[int]:
+    """Newest committed step, or None for a missing/empty/partial-only dir."""
+    steps = _list_steps(directory)
+    return max(steps) if steps else None
+
+
+def _place(arr: np.ndarray, like) -> jax.Array:
+    """Put one host array onto whatever placement ``like`` requests."""
+    sharding = getattr(like, "sharding", None)
+    if sharding is not None:
+        return jax.device_put(arr, sharding)
+    return jnp.asarray(arr)
+
+
+def restore_checkpoint(directory: str, step: int, like: Any) -> Any:
+    """Restore ``step`` shaped/placed like the ``like`` tree.
+
+    ``like`` leaves may be concrete arrays or ``ShapeDtypeStruct``s; a leaf
+    carrying a sharding gets the loaded value ``device_put`` onto it —
+    including shardings over a different mesh than the checkpoint was saved
+    from (elastic restore).
+    """
+    path = _step_dir(directory, step)
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    like_leaves, treedef = jax.tree.flatten(like)
+    if len(like_leaves) != len(meta["leaves"]):
+        raise ValueError(
+            f"checkpoint {path} has {len(meta['leaves'])} leaves, "
+            f"restore target has {len(like_leaves)}"
+        )
+    out = []
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        for i, (rec, leaf) in enumerate(zip(meta["leaves"], like_leaves)):
+            buf = z[f"leaf_{i}"].tobytes()
+            arr = np.frombuffer(buf, np.dtype(rec["dtype"])).reshape(rec["shape"])
+            if tuple(arr.shape) != tuple(np.shape(leaf)):
+                raise ValueError(
+                    f"leaf {i}: checkpoint shape {arr.shape} != "
+                    f"target shape {np.shape(leaf)}"
+                )
+            want = getattr(leaf, "dtype", None)
+            if want is not None and np.dtype(want) != arr.dtype:
+                raise ValueError(
+                    f"leaf {i}: checkpoint dtype {arr.dtype} != "
+                    f"target dtype {np.dtype(want)}"
+                )
+            out.append(_place(arr, leaf))
+    return treedef.unflatten(out)

@@ -1,0 +1,143 @@
+"""Logical-axis sharding: named rule sets + the ``ShardCtx`` carried in ``Ctx``.
+
+Models never name mesh axes directly.  Parameters declare *logical* axes
+(``embed``, ``heads_flat``, ``mlp``, ...) in their ``PSpec``; activations are
+annotated through :meth:`ShardCtx.constrain` with per-dimension logical
+names.  A *rule set* — an ordered tuple of ``(logical_axis, mesh_axes)``
+pairs — maps those names onto whatever mesh the job actually has.  The same
+model code therefore runs unmodified on one device (every method degrades to
+a no-op), the 16-fake-device test mesh, and the 512-chip production mesh.
+
+Resolution semantics (applied per tensor, per dimension):
+
+* rules may name mesh axes the current mesh lacks (e.g. ``pod`` on a
+  single-pod mesh) — absent axes are silently dropped;
+* a mesh axis is used at most once per tensor (first dimension wins);
+* an assignment must divide the dimension evenly, else trailing mesh axes
+  are peeled off until it does (falling back to unsharded).
+
+``RULE_SETS`` registers the named sets the launcher selects between:
+``default`` (TP over ``model``, batch over ``pod``+``data``, and FSDP-style
+parameter sharding of the ``embed`` dimension over ``data``) and
+``no_fsdp`` (same minus the parameter sharding — every non-TP parameter
+dimension stays replicated).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import cached_property
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = tuple[tuple[str, tuple[str, ...]], ...]
+
+DEFAULT_RULES: Rules = (
+    ("batch", ("pod", "data")),
+    ("embed", ("data",)),  # FSDP: shard the param embed dim over data
+    ("heads_flat", ("model",)),
+    ("heads", ("model",)),
+    ("kv_heads", ("model",)),
+    ("mlp", ("model",)),
+    ("vocab", ("model",)),
+    ("qseq", ("model",)),
+    ("seq_kv", ("model",)),
+    ("experts", ()),
+    ("layers", ()),
+)
+
+NO_FSDP_RULES: Rules = tuple(
+    (name, () if name == "embed" else axes) for name, axes in DEFAULT_RULES
+)
+
+RULE_SETS: dict[str, Rules] = {
+    "default": DEFAULT_RULES,
+    "no_fsdp": NO_FSDP_RULES,
+}
+
+
+def rules_without_axis(rules: Rules, mesh_axis: str) -> Rules:
+    """Drop one mesh axis from every rule — e.g. strip ``pod`` before
+    entering a shard_map that handles the pod axis manually (inside it,
+    ``pod`` is no longer a GSPMD axis and must not appear in constraints).
+    """
+    return tuple(
+        (name, tuple(a for a in axes if a != mesh_axis)) for name, axes in rules
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Mesh + rule set, with every query safe on a mesh-less context."""
+
+    mesh: Optional[Mesh] = None
+    rules: Rules = DEFAULT_RULES
+
+    @cached_property
+    def _rule_map(self) -> dict[str, tuple[str, ...]]:
+        return dict(self.rules)
+
+    def _mesh_axes(self, logical: Any) -> tuple[str, ...]:
+        """Mesh axes (present in this mesh) one logical axis maps to."""
+        if self.mesh is None or logical is None:
+            return ()
+        rule = self._rule_map.get(logical, ())
+        return tuple(a for a in rule if a in self.mesh.shape)
+
+    # -- size queries ------------------------------------------------------
+    def axis_size(self, *names: str) -> int:
+        """Product of the named mesh axes' sizes; 0 if none exist."""
+        if self.mesh is None:
+            return 0
+        present = [self.mesh.shape[n] for n in names if n in self.mesh.shape]
+        return math.prod(present) if present else 0
+
+    @property
+    def data_axes(self) -> tuple[str, ...]:
+        return self._mesh_axes("batch")
+
+    @property
+    def model_axes(self) -> tuple[str, ...]:
+        return self._mesh_axes("mlp")
+
+    def heads_shardable(self, n: int) -> bool:
+        tp = self.axis_size(*self.model_axes) if self.model_axes else 0
+        return tp > 1 and n % tp == 0
+
+    # -- spec / sharding construction --------------------------------------
+    def spec(self, axes, shape) -> P:
+        """PartitionSpec for per-dim logical axis names against a shape."""
+        assert self.mesh is not None
+        used: set[str] = set()
+        parts = []
+        for dim, logical in zip(shape, axes):
+            cand = tuple(a for a in self._mesh_axes(logical) if a not in used)
+            while cand and dim % math.prod(self.mesh.shape[a] for a in cand):
+                cand = cand[:-1]  # peel until the assignment divides evenly
+            used.update(cand)
+            parts.append(cand if len(cand) > 1 else (cand[0] if cand else None))
+        return P(*parts)
+
+    def sharding(self, axes, shape) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(axes, shape))
+
+    def param_sharding(self, spec) -> Optional[NamedSharding]:
+        """Sharding for one parameter declaration (``PSpec``-like: has
+        ``.axes`` logical names and ``.shape``)."""
+        if self.mesh is None:
+            return None
+        return self.sharding(spec.axes, spec.shape)
+
+    def constrain(self, x: jax.Array, *axes) -> jax.Array:
+        """``with_sharding_constraint`` under the rule set; identity when
+        there is no mesh (or a trivial one)."""
+        if self.mesh is None or math.prod(self.mesh.shape.values()) == 1:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x,
+            NamedSharding(self.mesh, self.spec(axes, x.shape)),
+        )

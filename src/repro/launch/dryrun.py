@@ -178,6 +178,8 @@ import numpy as np
 def _raw_costs(compiled) -> "np.ndarray":
     """[flops, hbm_bytes, link_bytes] of one compiled per-device module."""
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax 0.4.x returns [dict]
+        ca = ca[0] if ca else {}
     flops = float(ca.get("flops", 0.0))
     hbm = float(ca.get("bytes accessed", 0.0))
     if not hbm:

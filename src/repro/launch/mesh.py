@@ -7,13 +7,14 @@ dry-run must set XLA_FLAGS before that happens).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_host_mesh(data: int | None = None, model: int = 1):
@@ -22,5 +23,5 @@ def make_host_mesh(data: int | None = None, model: int = 1):
     if data is None:
         data = n // model
     assert data * model <= n, (data, model, n)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((data, model), ("data", "model"),
+                     axis_types=(AxisType.Auto, AxisType.Auto))

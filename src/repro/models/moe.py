@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 from repro.models.layers import Ctx, linear, linear_spec, mlp, mlp_specs
 from repro.models.params import PSpec
@@ -95,7 +96,7 @@ def moe_ffn(p: dict, x: jax.Array, ctx: Ctx):
             dp = ()
         tok_spec = P(dp, None) if dp else P(None, None)
         fn = functools.partial(_moe_local, cfg=cfg, psum_axes=tp)
-        out, aux = jax.shard_map(
+        out, aux = shard_map(
             fn,
             mesh=sh.mesh,
             in_specs=(

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import pvary, shard_map
 from repro.configs.base import ModelConfig
 from repro.dist import checkpoint as ckpt
 from repro.dist.compression import compressed_psum
@@ -89,12 +90,9 @@ def make_grad_fn(ctx: Ctx, tc: TrainConfig):
     if tc.compress_pod_grads and ctx.shard.mesh is not None:
         # inside the pod-manual shard_map, "pod" is no longer a GSPMD axis:
         # the inner forward's sharding rules must not mention it
-        from repro.dist.sharding import ShardCtx
+        from repro.dist.sharding import ShardCtx, rules_without_axis
 
-        inner_rules = tuple(
-            (name, tuple(a for a in axes if a != "pod"))
-            for name, axes in ctx.shard.rules
-        )
+        inner_rules = rules_without_axis(ctx.shard.rules, "pod")
         inner_ctx = dataclasses.replace(
             ctx, shard=ShardCtx(ctx.shard.mesh, inner_rules)
         )
@@ -140,7 +138,7 @@ def make_grad_fn(ctx: Ctx, tc: TrainConfig):
             # inserts an implicit (uncompressed!) psum over "pod" for
             # grads of replicated inputs — pvary keeps the partials local
             # so the only cross-pod traffic is the int8 payload below
-            params = jax.tree.map(lambda a: jax.lax.pvary(a, "pod"), params)
+            params = jax.tree.map(lambda a: pvary(a, "pod"), params)
             g, loss, aux = grads_of(params, batch)
             # error-feedback state has an explicit leading pod dim
             g, new_err = compressed_psum(
@@ -152,7 +150,7 @@ def make_grad_fn(ctx: Ctx, tc: TrainConfig):
         b_specs = jax.tree.map(lambda _: P("pod"), batch)
         n_specs = jax.tree.map(lambda _: P(), params)
         e_specs = jax.tree.map(lambda _: P("pod"), err)
-        return jax.shard_map(
+        return shard_map(
             per_pod,
             mesh=mesh,
             in_specs=(n_specs, b_specs, e_specs),

@@ -1,0 +1,63 @@
+"""Property-test shim: real hypothesis when installed, otherwise a tiny
+deterministic fallback sampler.
+
+The pinned toolchain image does not ship hypothesis and tier-1 must collect
+cleanly without it; skipping the property tests outright would silently drop
+coverage, so the fallback draws ``max_examples`` pseudo-random samples from
+the declared strategies with a fixed seed instead (no shrinking, no database
+— just execution).
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:
+    import random
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # type: ignore[no-redef]
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: r.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    def settings(max_examples=20, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # no functools.wraps: pytest must see the zero-arg signature,
+            # not the strategy parameters (it would demand fixtures for them)
+            def run(*args, **kwargs):
+                rng = random.Random(0)
+                n = getattr(run, "_max_examples",
+                            getattr(fn, "_max_examples", 20))
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            return run
+
+        return deco
+
+
+strategies = st

@@ -11,15 +11,19 @@ import json
 import sys
 import tempfile
 
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import AxisType, make_mesh, shard_map
 
 
 def small_mesh():
-    return jax.make_mesh((2, 2, 4), ("pod", "data", "model"),
-                         axis_types=(AxisType.Auto,) * 3)
+    return make_mesh((2, 2, 4), ("pod", "data", "model"),
+                     axis_types=(AxisType.Auto,) * 3)
 
 
 def mode_train_step_executes():
@@ -77,7 +81,7 @@ def mode_compression():
         out, new_err = compressed_psum({"w": g[0]}, {"w": err[0]}, "pod")
         return out, jax.tree.map(lambda e: e[None], new_err)
 
-    out, new_err = jax.shard_map(
+    out, new_err = shard_map(
         per_pod,
         mesh=mesh,
         in_specs=(P("pod"), P("pod")),
@@ -111,8 +115,8 @@ def mode_elastic_ckpt():
     d = tempfile.mkdtemp()
     ckpt.save_checkpoint(d, 1, tree)
     # restore onto a DIFFERENT (smaller) mesh => elastic reshard
-    mesh2 = jax.make_mesh((2, 2), ("data", "model"),
-                          axis_types=(AxisType.Auto,) * 2)
+    mesh2 = make_mesh((2, 2), ("data", "model"),
+                      axis_types=(AxisType.Auto,) * 2)
     like = {
         "w": jax.ShapeDtypeStruct(
             (16, 32), jnp.float32, sharding=NamedSharding(mesh2, P("data", "model"))

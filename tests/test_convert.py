@@ -17,6 +17,8 @@ from repro.models.model import model_forward, model_specs
 from repro.models.paper_models import PAPER_MODELS
 from repro.models.params import init_params
 
+pytestmark = pytest.mark.slow  # full conversion passes: ~97s on CPU
+
 
 def _fp16_reference(forward, params, x, ctx):
     """Reference = same model with inputs to each linear pre-quantised to

@@ -7,6 +7,8 @@ import sys
 
 import pytest
 
+pytestmark = [pytest.mark.dist, pytest.mark.slow]
+
 _WORKER = os.path.join(os.path.dirname(__file__), "dist_worker.py")
 
 

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.lut import LUTPlan, build_luts, pack_codes, plane_scales
 from repro.core.quantize import FixedPointFormat, Float16Format
@@ -13,6 +13,8 @@ from repro.kernels.binary_matmul.ops import binary_matmul
 from repro.kernels.binary_matmul.ref import binary_matmul_ref
 from repro.kernels.lut_affine.ops import lut_affine
 from repro.kernels.lut_affine.ref import lut_affine_ref
+
+pytestmark = pytest.mark.slow  # interpret-mode Pallas sweeps: ~45s on CPU
 
 
 # ---------------------------------------------------------------------------
@@ -52,7 +54,8 @@ def test_lut_affine_leading_dims_and_bias():
     bias = jnp.arange(12.0)
     got = lut_affine(codes, tables, scales, bias=bias, interpret=True)
     want = lut_affine_ref(codes.reshape(6, 4, 8), tables, scales).reshape(2, 3, 12) + bias
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+    # blocked accumulation reorders fp32 sums (same slack as matches_ref)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
 
 
 def test_lut_affine_end_to_end_exact_vs_core():

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.lut import (
     LUTPlan,
@@ -21,6 +21,8 @@ from repro.core.quantize import (
     build_stochastic_rounding_lut,
     stochastic_round_via_lut,
 )
+
+pytestmark = pytest.mark.slow  # property sweeps over LUT plans: ~minutes on CPU
 
 
 def _int_weights(key, q, p, wbits=4):

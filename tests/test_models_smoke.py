@@ -12,6 +12,8 @@ from repro.models.model import model_forward, model_specs
 from repro.models.params import count_params, init_params
 from repro.train.losses import cross_entropy
 
+pytestmark = pytest.mark.slow  # compiles every family: ~75s on CPU
+
 ARCHS = list_configs()
 
 

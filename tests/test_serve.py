@@ -23,6 +23,8 @@ from repro.serve.engine import (
     make_prefill_step,
 )
 
+pytestmark = pytest.mark.slow  # prefill/decode compiles: ~79s on CPU
+
 FAMS = [
     ("granite_8b", "gqa"),
     ("mixtral_8x7b", "swa+moe"),
