@@ -6,6 +6,7 @@ and give relative cost context between the LUT modes.
 """
 from __future__ import annotations
 
+import statistics
 import time
 
 import jax
@@ -14,16 +15,20 @@ import jax.numpy as jnp
 from repro.core.lut import LUTPlan, apply_luts, build_luts, pack_codes, plane_scales
 from repro.core.quantize import Float16Format
 from repro.kernels.binary_matmul.ops import binary_matmul
-from repro.kernels.lut_affine.ops import lut_affine
+from repro.kernels.lut_affine.ops import lut_affine, lut_affine_grouped
 
 
 def _time(fn, *args, iters=5) -> float:
-    fn(*args)  # compile
-    t0 = time.perf_counter()
+    """Median per-call wall time in us.  Each iteration blocks on its own
+    result — timing the loop with a single trailing ``block_until_ready``
+    lets async dispatch overlap iterations and understates the mean."""
+    jax.block_until_ready(fn(*args))  # compile
+    times = []
     for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6  # us
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return statistics.median(times) * 1e6  # us
 
 
 SHAPES = [(32, 256, 256, 1), (8, 512, 512, 1)]
@@ -33,6 +38,8 @@ TINY_SHAPES = [(4, 32, 32, 1)]  # CI smoke: seconds, not minutes
 def rows(tiny: bool = False) -> list[tuple[str, float, str]]:
     out = []
     fmt = Float16Format(signed=True)
+    # tiny shapes are cheap: many iters so the CI gate medians are stable
+    iters = 25 if tiny else 5
     for B, q, p, m in (TINY_SHAPES if tiny else SHAPES):
         plan = LUTPlan(q, p, m, fmt)
         key = jax.random.PRNGKey(0)
@@ -43,20 +50,45 @@ def rows(tiny: bool = False) -> list[tuple[str, float, str]]:
         scales = jnp.asarray(plane_scales(plan), jnp.float32)
 
         t_ref = _time(
-            jax.jit(lambda c, t: apply_luts(t, c, plan)), codes, tables
+            jax.jit(lambda c, t: apply_luts(t, c, plan)), codes, tables, iters=iters
         )
         t_kern = _time(
-            lambda c, t: lut_affine(c, t, scales, interpret=True), codes, tables
+            lambda c, t: lut_affine(c, t, scales, interpret=True),
+            codes,
+            tables,
+            iters=iters,
         )
-        t_mat = _time(jax.jit(lambda a, w: a @ w), x, W)
+        t_mat = _time(jax.jit(lambda a, w: a @ w), x, W, iters=iters)
         tag = f"B{B}_q{q}_p{p}_m{m}"
         out.append((f"kern/lut_affine_jnp_{tag}", round(t_ref, 1), "us/call"))
         out.append((f"kern/lut_affine_pallas_{tag}", round(t_kern, 1), "us/call interpret"))
         out.append((f"kern/matmul_ref_{tag}", round(t_mat, 1), "us/call"))
+
+        # QKV-style fusion: 3 same-shape projections, one grid vs 3 dispatches
+        tables3 = jnp.stack([tables, tables, tables])
+        t_grp = _time(
+            lambda c, t: lut_affine_grouped(c, t, scales, interpret=True),
+            codes,
+            tables3,
+            iters=iters,
+        )
+        t_3x = _time(
+            lambda c, t: jnp.stack(
+                [lut_affine(c, t[g], scales, interpret=True) for g in range(3)]
+            ),
+            codes,
+            tables3,
+            iters=iters,
+        )
+        out.append((f"kern/lut_affine_grouped3_{tag}", round(t_grp, 1), "us/call interpret"))
+        out.append((f"kern/lut_affine_dispatch3_{tag}", round(t_3x, 1), "us/call interpret"))
         if m == 1:
             planes = codes.astype(jnp.int8)
             t_bmm = _time(
-                lambda pl, w: binary_matmul(pl, w, scales, interpret=True), planes, W
+                lambda pl, w: binary_matmul(pl, w, scales, interpret=True),
+                planes,
+                W,
+                iters=iters,
             )
             out.append((f"kern/binary_matmul_{tag}", round(t_bmm, 1), "us/call interpret"))
     return out

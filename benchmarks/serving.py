@@ -1,40 +1,117 @@
-"""Serving throughput bench (reduced LM, CPU): standard vs LUT-converted.
+"""Serving throughput bench (reduced LM, CPU): dense vs planned-LUT decode.
+
+Measures steady-state *decode* tokens/s (prefill once, then timed decode
+steps) for:
+
+* ``dense``        — standard matmul projections
+* ``lut_planned``  — per-layer ``plan_model`` conversion, one LUT dispatch
+                     per projection per decode step (the pre-fusion path)
+* ``lut_grouped``  — same converted params routed through the fused
+                     ``lut_affine_grouped`` path (``ExecCfg.lut_grouped``):
+                     same-shape projections (QKV, gate/up) pack the input
+                     once and execute as one grouped gather
 
 On TPU the LUT gather path is memory-bound and the bitplane-MXU path
-compute-bound (see EXPERIMENTS.md §Perf); this CPU bench just demonstrates
-both paths end-to-end and reports tokens/s for context.
+compute-bound (see EXPERIMENTS.md §Perf); this CPU bench demonstrates the
+paths end-to-end and tracks the grouped-vs-dispatch ratio in CI
+(``BENCH_serving.json``).
 """
 from __future__ import annotations
 
+import statistics
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import get_config
 from repro.core.convert import convert_params
+from repro.core.planner import plan_model
 from repro.models.layers import Ctx, ExecCfg
 from repro.models.model import model_specs
 from repro.models.params import init_params
-from repro.serve.engine import generate
+from repro.serve.engine import make_cache, make_decode_step, make_prefill_step
 
 
-def rows() -> list[tuple[str, float, str]]:
-    cfg = get_config("granite_8b", reduced=True)
-    ctx = Ctx(cfg, ex=ExecCfg(remat="none"))
-    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
-    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0, cfg.vocab_size)
-
-    out = []
-    for name, p, c in [
-        ("standard", params, ctx),
-        ("lut_gather", convert_params(params, chunk_size=1)[0], ctx),
-        ("binary_matmul", params, Ctx(cfg, ex=ExecCfg(remat="none", linear_mode="binary_matmul"))),
-    ]:
+def _decode_tps(params, ctx: Ctx, prompts, steps: int, reps: int = 3) -> float:
+    """Median decode tokens/s over ``reps`` timed runs of ``steps`` steps."""
+    B, S = prompts.shape
+    cache = make_cache(ctx.cfg, B, S + steps * (reps + 2), ctx)
+    prefill = jax.jit(make_prefill_step(ctx))
+    decode = jax.jit(make_decode_step(ctx))
+    logits, cache = prefill(params, {"tokens": prompts}, cache)
+    tok = jax.numpy.argmax(logits[:, -1], -1).astype(jax.numpy.int32)[:, None]
+    # warmup: compile + one full round
+    for _ in range(2):
+        tok, _, cache = decode(params, cache, tok)
+    jax.block_until_ready(tok)
+    rates = []
+    for _ in range(reps):
         t0 = time.perf_counter()
-        toks = generate(p, c, prompts, max_new=16)
-        jax.block_until_ready(toks)
-        dt = time.perf_counter() - t0
-        tps = 4 * 16 / dt
-        out.append((f"serve/{name}_tok_per_s", round(tps, 2), "4 seqs x 16 new"))
+        for _ in range(steps):
+            tok, _, cache = decode(params, cache, tok)
+        jax.block_until_ready(tok)
+        rates.append(B * steps / (time.perf_counter() - t0))
+    return statistics.median(rates)
+
+
+def rows(tiny: bool = False) -> list[tuple[str, float, str]]:
+    cfg = get_config("granite_8b", reduced=True)
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+
+    # per-layer planning: half the uniform-chunk-2 footprint forces the
+    # greedy pass to mix chunk sizes rather than apply one plan everywhere
+    uniform = plan_model(params, float("inf"), max_chunk=2)
+    budget = uniform.total_lut_bytes // 2
+    mplan = plan_model(params, budget, max_chunk=2)
+    lut_params, report = convert_params(params, plan=mplan)
+
+    B, S = (2, 4) if tiny else (4, 8)
+    steps = 8 if tiny else 16
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+
+    modes = [
+        ("dense", params, ExecCfg(remat="none")),
+        ("lut_planned", lut_params, ExecCfg(remat="none")),
+        ("lut_grouped", lut_params, ExecCfg(remat="none", lut_grouped=True)),
+    ]
+    shape_note = f"B{B} x {steps} decode steps"
+    out: list[tuple[str, float, str]] = [
+        ("serve/plan_budget_mib", round(budget / 2**20, 2), "global LUT budget"),
+        ("serve/plan_table_mib", round(mplan.total_lut_bytes / 2**20, 2),
+         f"{len(mplan.layers)} planned layers"),
+        ("serve/plan_shift_add_ops", float(mplan.total_shift_add_ops),
+         f"vs {uniform.total_shift_add_ops} uniform"),
+    ]
+    for name, p, ex in modes:
+        tps = _decode_tps(p, Ctx(cfg, ex=ex), prompts, steps)
+        out.append((f"serve/{name}_tok_per_s", round(tps, 2), shape_note))
     return out
+
+
+def main():
+    """CI entry point: run (optionally tiny) shapes, emit BENCH_serving.json."""
+    import argparse
+    import json
+    import os
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="small batch/few steps (CI smoke-bench)")
+    ap.add_argument("--out", default=None, help="write JSON rows to this path")
+    args = ap.parse_args()
+    payload = [
+        {"name": name, "value": value, "unit": unit}
+        for name, value, unit in rows(tiny=args.tiny)
+    ]
+    text = json.dumps(payload, indent=1)
+    print(text)
+    if args.out:
+        parent = os.path.dirname(args.out)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,17 @@
-"""Quickstart: train a small LM, convert it to TableNet LUTs, serve it.
+"""Quickstart: train a small LM, plan its LUT budget per layer, convert,
+and serve it multiplier-free.
 
-  PYTHONPATH=src python examples/quickstart.py
+  PYTHONPATH=src python examples/quickstart.py      (runs in <30s on CPU)
 """
+import shutil
+
 import jax
 
 from repro.configs.base import get_config
 from repro.core.convert import convert_params, conversion_summary
+from repro.core.planner import ModelPlan, plan_model
 from repro.data.pipeline import lm_stream
+from repro.dist.checkpoint import latest_step, load_aux, save_checkpoint
 from repro.models.layers import Ctx, ExecCfg
 from repro.models.model import model_specs
 from repro.models.params import count_params, init_params
@@ -20,20 +25,37 @@ def main():
     params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
     print(f"model: {cfg.name} (reduced) — {count_params(model_specs(cfg)):,} params")
 
-    tc = TrainConfig(peak_lr=1e-2, warmup_steps=5, total_steps=40,
-                     checkpoint_every=20, out_dir="/tmp/quickstart_run")
+    shutil.rmtree("/tmp/quickstart_run", ignore_errors=True)  # fresh demo run
+    tc = TrainConfig(peak_lr=1e-2, warmup_steps=5, total_steps=24,
+                     checkpoint_every=12, out_dir="/tmp/quickstart_run")
     data = lm_stream(cfg.vocab_size, seq_len=32, global_batch=8, seed=0)
-    log = Trainer(ctx, tc, params, data).run(40)
-    print(f"trained 40 steps: loss {log[0]['loss']:.3f} -> {log[-1]['loss']:.3f}")
-
-    # paper's post-training conversion: every linear becomes LUTs
+    log = Trainer(ctx, tc, params, data).run(24)
+    print(f"trained 24 steps: loss {log[0]['loss']:.3f} -> {log[-1]['loss']:.3f}")
     trainer_params = Trainer(ctx, tc, params, data).params  # restored from ckpt
-    lut_params, report = convert_params(trainer_params, chunk_size=1)
+
+    # paper's post-training conversion, now per-layer planned: spend half the
+    # uniform-chunk-2 LUT budget where it buys the most shift/add reduction
+    uniform = plan_model(trainer_params, float("inf"), max_chunk=2)
+    plan = plan_model(trainer_params, uniform.total_lut_bytes // 2, max_chunk=2)
+    print("uniform plan  :", uniform.summary())
+    print("planned (0.5x):", plan.summary())
+    lut_params, report = convert_params(trainer_params, plan=plan)
     print("TableNet conversion:", conversion_summary(report))
+
+    # the plan rides along with the checkpoint and survives restore
+    ckpt_dir = "/tmp/quickstart_run/lut_ckpt"
+    save_checkpoint(ckpt_dir, 0, trainer_params,
+                    aux={"model_plan": plan.to_json()})
+    restored = ModelPlan.from_json(
+        load_aux(ckpt_dir, latest_step(ckpt_dir))["model_plan"]
+    )
+    assert dict(restored.layers) == dict(plan.layers)
 
     prompts = jax.random.randint(jax.random.PRNGKey(7), (2, 8), 0, cfg.vocab_size)
     ref = generate(trainer_params, ctx, prompts, max_new=8)
-    lut = generate(lut_params, ctx, prompts, max_new=8)
+    # grouped serving: QKV / gate-up fuse into one LUT dispatch per step
+    lut_ctx = Ctx(cfg, ex=ExecCfg(remat="none", lut_grouped=True))
+    lut = generate(lut_params, lut_ctx, prompts, max_new=8)
     print("standard serve :", ref.tolist())
     print("LUT serve      :", lut.tolist())
     print("(multiplier-free arithmetic — see DESIGN.md §2)")

@@ -11,7 +11,7 @@ import dataclasses
 from typing import Sequence
 
 from repro.core.lut import LUTPlan
-from repro.core.planner import PlanPoint, enumerate_plans, tradeoff_curve
+from repro.core.planner import enumerate_plans
 from repro.core.quantize import FixedPointFormat, Float16Format
 
 KiB = 2**10
@@ -47,8 +47,10 @@ def network_cost(
 ):
     """Aggregate (tables, bytes, evals, shift-adds) over dense layers."""
     tables = bytes_ = evals = adds = 0
-    for l in layers:
-        plan = LUTPlan(l.in_features, l.out_features, chunk_size, fmt, mode=mode)
+    for shape in layers:
+        plan = LUTPlan(
+            shape.in_features, shape.out_features, chunk_size, fmt, mode=mode
+        )
         tables += plan.num_chunks
         bytes_ += plan.total_lut_bytes
         evals += plan.lut_evaluations

@@ -15,13 +15,14 @@ untouched; the expert stacks can be converted per-expert via
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lut import LUTPlan, build_luts
+from repro.core.planner import ModelPlan, path_key
 from repro.core.quantize import Float16Format
 
 
@@ -46,7 +47,10 @@ def _is_linear_node(node: Any) -> bool:
 
 def _build_tables(w, plan: LUTPlan, dtype):
     """build_luts vmapped over any leading (layer/expert) dims."""
-    fn = lambda m: build_luts(m.astype(jnp.float32), plan)
+
+    def fn(m):
+        return build_luts(m.astype(jnp.float32), plan)
+
     for _ in range(w.ndim - 2):
         fn = jax.vmap(fn)
     return fn(w).astype(dtype)
@@ -60,9 +64,18 @@ def convert_params(
     table_dtype=jnp.float32,
     convert_experts: bool = False,
     signed: bool = True,  # LM activations are signed; paper models may use False
+    plan: Optional[ModelPlan] = None,
 ) -> tuple[dict, ConvertReport]:
     """Returns (converted tree, report).  ``predicate(path, node)`` can veto
-    individual layers (default: convert everything eligible)."""
+    individual layers (default: convert everything eligible).
+
+    With ``plan`` (a :class:`repro.core.planner.ModelPlan`, e.g. from
+    ``plan_model``) each layer uses its *own* plan, looked up by tree path;
+    layers absent from the plan are skipped.  Without it, one uniform
+    ``(chunk_size, fp16-bitplane)`` plan applies everywhere.  Expert stacks
+    (``convert_experts=True``) always use the uniform plan — ``plan_model``
+    does not enumerate them.
+    """
     stats = {"converted": 0, "skipped": 0, "w_bytes": 0, "t_bytes": 0}
     fmt = Float16Format(signed=signed)
 
@@ -73,8 +86,20 @@ def convert_params(
             if q < min_features or (predicate and not predicate(path, node)):
                 stats["skipped"] += 1
                 return node
-            plan = LUTPlan(q, p, chunk_size, fmt, mode="bitplane")
-            tables = _build_tables(w, plan, table_dtype)
+            if plan is not None:
+                layer_plan = plan.layers.get(path_key(path))
+                if layer_plan is None:
+                    stats["skipped"] += 1
+                    return node
+                if (layer_plan.in_features, layer_plan.out_features) != (q, p):
+                    raise ValueError(
+                        f"plan for {path_key(path)} is "
+                        f"{layer_plan.in_features}x{layer_plan.out_features}, "
+                        f"layer is {q}x{p}"
+                    )
+            else:
+                layer_plan = LUTPlan(q, p, chunk_size, fmt, mode="bitplane")
+            tables = _build_tables(w, layer_plan, table_dtype)
             stats["converted"] += 1
             stats["w_bytes"] += w.size * w.dtype.itemsize
             stats["t_bytes"] += tables.size * tables.dtype.itemsize

@@ -25,7 +25,6 @@ Everything here is the pure-jnp *oracle*; the Pallas kernels in
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Union
 
 import jax

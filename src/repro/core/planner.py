@@ -5,12 +5,19 @@ plan under a memory budget.  All accounting is closed-form from
 :class:`repro.core.lut.LUTPlan`; the formulas were validated against every
 number the paper states for the linear classifier and the MLP (see
 ``tests/test_analysis.py``).
+
+Beyond the per-layer helpers, :func:`plan_model` runs the whole-model pass:
+it walks a parameter tree, enumerates the Pareto frontier of plans for every
+eligible linear layer, and greedily spends a *global* LUT byte budget where
+it buys the largest reduction in shift/add work — emitting a serializable
+:class:`ModelPlan` that :func:`repro.core.convert.convert_params` applies
+per layer.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Iterable, Sequence
+from typing import Any, Callable, Iterable, Iterator, Mapping, Sequence
 
 from repro.core.lut import LUTPlan
 from repro.core.quantize import FixedPointFormat, Float16Format
@@ -106,3 +113,184 @@ def default_serving_plan(
     (the paper's finding: fp16 inner activations preserve accuracy where
     fixed point does not), bitplane mode, moderate chunks."""
     return LUTPlan(in_features, out_features, chunk_size, Float16Format())
+
+
+# ---------------------------------------------------------------------------
+# Whole-model planning: per-layer plans under a global byte budget
+# ---------------------------------------------------------------------------
+
+
+def _fmt_to_json(fmt) -> dict:
+    if isinstance(fmt, Float16Format):
+        return {"kind": "float16", "signed": fmt.signed}
+    return {
+        "kind": "fixed",
+        "total_bits": fmt.total_bits,
+        "frac_bits": fmt.frac_bits,
+        "signed": fmt.signed,
+    }
+
+
+def _fmt_from_json(d: Mapping) -> Any:
+    if d["kind"] == "float16":
+        return Float16Format(signed=d["signed"])
+    return FixedPointFormat(d["total_bits"], d["frac_bits"], signed=d["signed"])
+
+
+def plan_to_json(plan: LUTPlan) -> dict:
+    return {
+        "in_features": plan.in_features,
+        "out_features": plan.out_features,
+        "chunk_size": plan.chunk_size,
+        "fmt": _fmt_to_json(plan.fmt),
+        "mode": plan.mode,
+        "out_bits": plan.out_bits,
+    }
+
+
+def plan_from_json(d: Mapping) -> LUTPlan:
+    return LUTPlan(
+        d["in_features"],
+        d["out_features"],
+        d["chunk_size"],
+        _fmt_from_json(d["fmt"]),
+        mode=d["mode"],
+        out_bits=d["out_bits"],
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelPlan:
+    """Per-layer LUT plans keyed by the layer's ``"/"``-joined tree path.
+
+    JSON-serializable (``to_json``/``from_json``) so it rides along with
+    checkpoints (``dist.checkpoint.save_checkpoint(..., aux=...)``) and
+    reconverts identically after an elastic restore.
+    """
+
+    layers: Mapping[str, LUTPlan]
+    budget_bytes: int | None = None
+
+    @property
+    def total_lut_bytes(self) -> int:
+        return sum(p.total_lut_bytes for p in self.layers.values())
+
+    @property
+    def total_shift_add_ops(self) -> int:
+        return sum(p.shift_add_ops for p in self.layers.values())
+
+    def to_json(self) -> dict:
+        return {
+            "budget_bytes": self.budget_bytes,
+            "layers": {k: plan_to_json(p) for k, p in sorted(self.layers.items())},
+        }
+
+    @classmethod
+    def from_json(cls, d: Mapping) -> "ModelPlan":
+        return cls(
+            layers={k: plan_from_json(v) for k, v in d["layers"].items()},
+            budget_bytes=d.get("budget_bytes"),
+        )
+
+    def summary(self) -> str:
+        return (
+            f"ModelPlan: {len(self.layers)} layers, "
+            f"{self.total_lut_bytes / 2**20:.1f} MiB tables, "
+            f"{self.total_shift_add_ops:,} shift/add ops"
+        )
+
+
+def path_key(path: Sequence) -> str:
+    return "/".join(str(p) for p in path)
+
+
+def iter_linear_layers(
+    params: dict,
+    min_features: int = 1,
+    predicate: Callable[[tuple, dict], bool] | None = None,
+) -> Iterator[tuple[str, tuple[int, int]]]:
+    """Yield ``(path_key, (in_features, out_features))`` for every linear node
+    ``convert_params`` would convert (same eligibility rules)."""
+    from repro.core.convert import _is_linear_node  # local: avoid import cycle
+
+    def walk(path: tuple, node: Any):
+        if _is_linear_node(node):
+            w = node["w"]
+            q, p = w.shape[-2:]
+            if q >= min_features and (predicate is None or predicate(path, node)):
+                yield path_key(path), (int(q), int(p))
+            return
+        if isinstance(node, dict):
+            for k in node:
+                yield from walk(path + (k,), node[k])
+
+    yield from walk((), params)
+
+
+def plan_model(
+    params: dict,
+    max_lut_bytes: int | float,
+    fmt=None,
+    modes: Sequence[str] = ("bitplane",),
+    max_chunk: int | None = None,
+    min_features: int = 1,
+    predicate: Callable[[tuple, dict], bool] | None = None,
+    signed: bool = True,
+) -> ModelPlan:
+    """Choose a per-layer plan for every eligible linear under a global budget.
+
+    Greedy knapsack over each layer's Pareto frontier: every layer starts at
+    its smallest-bytes plan; the budget is then spent on whichever single
+    layer upgrade buys the most shift/add reduction per byte (ties broken by
+    smallest byte cost, then path order — fully deterministic).  The
+    accuracy proxy is the format itself: binary16 bitplane plans are exact
+    for fp16 inputs at *every* chunk size, so within one format the search
+    reduces to bytes-vs-ops; narrower fixed-point formats trade accuracy and
+    are selected by passing a different ``fmt``.
+
+    Raises ``ValueError`` if even the minimal per-layer plans exceed
+    ``max_lut_bytes``.
+    """
+    fmt = fmt if fmt is not None else Float16Format(signed=signed)
+    shapes = dict(iter_linear_layers(params, min_features, predicate))
+    frontiers: dict[str, list[PlanPoint]] = {}
+    frontier_cache: dict[tuple[int, int], list[PlanPoint]] = {}
+    for key, (q, p) in shapes.items():
+        if (q, p) not in frontier_cache:
+            pts = enumerate_plans(q, p, fmt, modes=modes, max_chunk=max_chunk)
+            frontier_cache[(q, p)] = tradeoff_curve(pts)
+        frontier = frontier_cache[(q, p)]
+        if not frontier:
+            raise ValueError(f"no feasible LUT plan for layer {key} ({q}x{p})")
+        frontiers[key] = frontier
+
+    choice = {key: 0 for key in frontiers}
+    spent = sum(fr[0].lut_bytes for fr in frontiers.values())
+    if spent > max_lut_bytes:
+        raise ValueError(
+            f"budget {max_lut_bytes} bytes < minimal model footprint "
+            f"{spent} bytes ({len(frontiers)} layers)"
+        )
+
+    while True:
+        best = None  # (ops_saved_per_byte, -bytes_added, key, frontier index)
+        for key in sorted(frontiers):
+            fr = frontiers[key]
+            cur = fr[choice[key]]
+            for j in range(choice[key] + 1, len(fr)):
+                d_bytes = fr[j].lut_bytes - cur.lut_bytes
+                if spent + d_bytes > max_lut_bytes:
+                    break  # frontier bytes increase monotonically
+                d_ops = cur.shift_add_ops - fr[j].shift_add_ops
+                score = (d_ops / d_bytes, -d_bytes)
+                if best is None or score > best[:2]:
+                    best = (*score, key, j)
+        if best is None:
+            break
+        _, _, key, j = best
+        spent += frontiers[key][j].lut_bytes - frontiers[key][choice[key]].lut_bytes
+        choice[key] = j
+
+    layers = {key: frontiers[key][choice[key]].plan for key in frontiers}
+    budget = None if math.isinf(max_lut_bytes) else int(max_lut_bytes)
+    return ModelPlan(layers=layers, budget_bytes=budget)

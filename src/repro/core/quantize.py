@@ -23,7 +23,6 @@ training steps stay replayable under fault tolerance).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -39,8 +39,16 @@ def save_checkpoint(
     step: int,
     tree: Any,
     keep_last: Optional[int] = None,
+    aux: Optional[dict] = None,
 ) -> str:
-    """Commit ``tree`` (any pytree of arrays/scalars) as ``step``."""
+    """Commit ``tree`` (any pytree of arrays/scalars) as ``step``.
+
+    ``aux`` is an optional JSON-serializable payload committed atomically
+    with the arrays (stored inside ``meta.json``) — e.g. a serialized
+    ``core.planner.ModelPlan`` so a converted model restores with the exact
+    per-layer LUT plans it was built with.  Read it back with
+    :func:`load_aux`.
+    """
     os.makedirs(directory, exist_ok=True)
     leaves = jax.tree.leaves(tree)
     arrays = [np.asarray(jax.device_get(leaf)) for leaf in leaves]
@@ -55,6 +63,8 @@ def save_checkpoint(
         )
         recs = [{"dtype": str(a.dtype), "shape": list(a.shape)} for a in arrays]
         meta = {"step": step, "leaves": recs}
+        if aux is not None:
+            meta["aux"] = aux
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump(meta, f)
         final = _step_dir(directory, step)
@@ -98,6 +108,12 @@ def latest_step(directory: str) -> Optional[int]:
     """Newest committed step, or None for a missing/empty/partial-only dir."""
     steps = _list_steps(directory)
     return max(steps) if steps else None
+
+
+def load_aux(directory: str, step: int) -> Optional[dict]:
+    """The ``aux`` payload committed with ``step`` (None if absent)."""
+    with open(os.path.join(_step_dir(directory, step), "meta.json")) as f:
+        return json.load(f).get("aux")
 
 
 def _place(arr: np.ndarray, like) -> jax.Array:

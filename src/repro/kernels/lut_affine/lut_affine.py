@@ -56,6 +56,73 @@ def _kernel(codes_ref, tables_ref, scales_ref, out_ref, *, block_k: int, planes:
     out_ref[...] += acc
 
 
+def _grouped_kernel(
+    codes_ref, tables_ref, scales_ref, out_ref, *, block_k: int, planes: int
+):
+    """One (group, batch, out, chunk) grid step.
+
+    The codes block is *shared* across the group dimension — the fused
+    projections all read the same packed input — so revisiting it per group
+    costs no extra packing, only the per-group table tile changes.
+
+    codes_ref : (bb, n, kb) int32       VMEM
+    tables_ref: (1, kb, E, pb) f32/bf16 VMEM (leading 1 = this group)
+    scales_ref: (n, 1) f32              VMEM
+    out_ref   : (1, bb, pb) f32         VMEM (revisited across chunk tiles)
+    """
+    kt = pl.program_id(3)
+
+    @pl.when(kt == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    def plane_body(j, acc):
+        plane = jnp.zeros(out_ref.shape[1:], jnp.float32)
+        for c in range(block_k):  # static unroll over the chunk tile
+            idx = codes_ref[:, j, c]  # (bb,) int32
+            rows = jnp.take(tables_ref[0, c], idx, axis=0)  # (bb, pb)
+            plane = plane + rows.astype(jnp.float32)
+        return acc + scales_ref[j, 0] * plane
+
+    acc = jax.lax.fori_loop(
+        0, planes, plane_body, jnp.zeros(out_ref.shape[1:], jnp.float32)
+    )
+    out_ref[0] += acc
+
+
+def lut_affine_grouped_pallas(
+    codes: jax.Array,  # (B, n, k) int32, shared by the whole group
+    tables: jax.Array,  # (G, k, E, p)
+    scales: jax.Array,  # (n,) f32
+    *,
+    block_b: int,
+    block_p: int,
+    block_k: int,
+    interpret: bool,
+) -> jax.Array:
+    """All ``G`` same-shape projections of one decode step in a single grid:
+    one Pallas dispatch instead of ``G`` (QKV / gate-up fusion)."""
+    B, n, k = codes.shape
+    G, k2, E, p = tables.shape
+    assert k == k2, (k, k2)
+    assert B % block_b == 0 and p % block_p == 0 and k % block_k == 0
+    grid = (G, B // block_b, p // block_p, k // block_k)
+
+    kernel = functools.partial(_grouped_kernel, block_k=block_k, planes=n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, n, block_k), lambda g, b, q, c: (b, 0, c)),
+            pl.BlockSpec((1, block_k, E, block_p), lambda g, b, q, c: (g, c, 0, q)),
+            pl.BlockSpec((n, 1), lambda g, b, q, c: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_b, block_p), lambda g, b, q, c: (g, b, q)),
+        out_shape=jax.ShapeDtypeStruct((G, B, p), jnp.float32),
+        interpret=interpret,
+    )(codes, tables, scales.reshape(n, 1).astype(jnp.float32))
+
+
 def lut_affine_pallas(
     codes: jax.Array,  # (B, n, k) int32
     tables: jax.Array,  # (k, E, p)

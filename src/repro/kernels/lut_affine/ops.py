@@ -11,7 +11,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import ceil_to, default_interpret, pad_axis
-from repro.kernels.lut_affine.lut_affine import lut_affine_pallas
+from repro.kernels.lut_affine.lut_affine import (
+    lut_affine_grouped_pallas,
+    lut_affine_pallas,
+)
 
 _VMEM_BUDGET = 4 * 2**20  # bytes of live blocks per grid step
 
@@ -54,7 +57,8 @@ def lut_affine(
     if interpret is None:
         interpret = default_interpret()
     *lead, n, k = codes.shape
-    _, E, p = tables.shape
+    k2, E, p = tables.shape
+    assert k == k2, f"codes have {k} chunks, tables {k2}"  # before padding
     B = 1
     for d in lead:
         B *= d
@@ -72,3 +76,56 @@ def lut_affine(
     if bias is not None:
         out = out + bias.astype(out.dtype)
     return out.reshape(*lead, p)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_p", "block_k", "interpret")
+)
+def _lut_affine_grouped_padded(
+    codes, tables, scales, block_b, block_p, block_k, interpret
+):
+    return lut_affine_grouped_pallas(
+        codes,
+        tables,
+        scales,
+        block_b=block_b,
+        block_p=block_p,
+        block_k=block_k,
+        interpret=interpret,
+    )
+
+
+def lut_affine_grouped(
+    codes: jax.Array,  # (..., n, k) int32 — one packed input for the group
+    tables: jax.Array,  # (G, k, E, p) — stacked same-shape projections
+    scales: jax.Array,  # (n,)
+    biases: jax.Array | None = None,  # (G, p)
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused batched decode path: ``out[g, ..., :] = lut_affine(codes,
+    tables[g], scales) (+ biases[g])`` for all ``G`` projections in ONE
+    Pallas grid — one dispatch per decode step for a whole QKV or gate/up
+    group instead of one per projection."""
+    if interpret is None:
+        interpret = default_interpret()
+    *lead, n, k = codes.shape
+    G, k2, E, p = tables.shape
+    assert k == k2, f"codes have {k} chunks, tables {k2}"  # before padding
+    B = 1
+    for d in lead:
+        B *= d
+    codes2 = codes.reshape(B, n, k)
+
+    block_b, block_p, block_k = _pick_blocks(B, k, E, p, n)
+    Bp, pp, kp = ceil_to(B, block_b), ceil_to(p, block_p), ceil_to(k, block_k)
+    codes2 = pad_axis(pad_axis(codes2, 0, Bp), 2, kp)
+    # padded chunks index entry 0 of a zero table -> contribute nothing
+    tables_p = pad_axis(pad_axis(tables, 1, kp), 3, pp)
+
+    out = _lut_affine_grouped_padded(
+        codes2, tables_p, scales, block_b, block_p, block_k, interpret
+    )[:, :B, :p]
+    if biases is not None:
+        out = out + biases[:, None, :].astype(out.dtype)
+    return out.reshape(G, *lead, p)

@@ -14,3 +14,12 @@ def lut_affine_ref(
     gathered = tables[jnp.arange(k), codes]  # (B, n, k, p)
     per_plane = jnp.sum(gathered.astype(jnp.float32), axis=-2)  # (B, n, p)
     return jnp.einsum("bnp,n->bp", per_plane, scales.astype(jnp.float32))
+
+
+def lut_affine_grouped_ref(
+    codes: jax.Array,  # (B, n, k) int32 — shared across the group
+    tables: jax.Array,  # (G, k, E, p)
+    scales: jax.Array,  # (n,)
+) -> jax.Array:
+    """(G, B, p): every group member applied to the same packed input."""
+    return jax.vmap(lambda t: lut_affine_ref(codes, t, scales))(tables)

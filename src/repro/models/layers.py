@@ -31,6 +31,7 @@ class ExecCfg:
 
     linear_mode: str = "standard"  # standard | lut_gather | onehot_mxu | binary_matmul
     lut_chunk: int = 2  # elements per LUT for converted layers
+    lut_grouped: bool = False  # fuse same-shape converted projections (QKV/gate-up)
     fixed_bits: int = 8  # binary_matmul input format
     fixed_frac: int = 6
     use_pallas: bool = False  # Pallas kernels vs jnp oracles
@@ -153,6 +154,59 @@ def linear(p: dict, x: jax.Array, ctx: Ctx) -> jax.Array:
     return y
 
 
+def fused_linears(ps: list[dict], x: jax.Array, ctx: Ctx) -> list[jax.Array]:
+    """Apply several projections to the *same* input.
+
+    When ``ctx.ex.lut_grouped`` is set, converted (LUT) members with
+    identical table shapes — QKV with equal head counts, gate/up, or K/V —
+    pack the input once and execute as ONE grouped gather (a single Pallas
+    dispatch under ``use_pallas``) instead of one kernel per projection.
+    Everything else falls back to :func:`linear` member-wise, so the result
+    is always elementwise identical to the unfused path.  ``onehot_mxu``
+    has no grouped equivalent (bf16 MXU math differs from the f32 gather),
+    so that mode never fuses — identical-results wins over fusion.
+    """
+    outs: list[jax.Array | None] = [None] * len(ps)
+    groups: dict[tuple, list[int]] = {}
+    if ctx.ex.lut_grouped and ctx.ex.linear_mode != "onehot_mxu":
+        for i, pp in enumerate(ps):
+            if isinstance(pp, dict) and "tables" in pp and pp["tables"].ndim == 3:
+                groups.setdefault(tuple(pp["tables"].shape), []).append(i)
+    fused = [idxs for idxs in groups.values() if len(idxs) > 1]
+    in_fused = {i for idxs in fused for i in idxs}
+    for i, pp in enumerate(ps):
+        if i not in in_fused:
+            outs[i] = linear(pp, x, ctx)
+    for idxs in fused:
+        _, entries, p_out = ps[idxs[0]]["tables"].shape
+        plan = _lut_plan_for(x.shape[-1], p_out, entries)
+        codes = pack_codes(x, plan)
+        scales = jnp.asarray(plane_scales(plan), jnp.float32)
+        # stacked per call: a real concat under jit (tables are traced
+        # params).  Measured grouped decode still beats per-projection
+        # dispatch; storing pre-stacked groups at conversion time would
+        # remove this copy but changes the param-tree layout (ROADMAP).
+        tables = jnp.stack([ps[i]["tables"] for i in idxs])
+        has_bias = [ps[i].get("b") is not None for i in idxs]
+        biases = (
+            jnp.stack([ps[i]["b"] for i in idxs]) if all(has_bias) else None
+        )
+        if ctx.ex.use_pallas:
+            from repro.kernels.lut_affine.ops import lut_affine_grouped
+
+            y = lut_affine_grouped(codes, tables, scales, biases=biases)
+        else:
+            y = jax.vmap(lambda t: apply_luts(t, codes, plan))(tables)
+            if biases is not None:
+                y = y + biases[(slice(None),) + (None,) * (y.ndim - 2)]
+        for g, i in enumerate(idxs):
+            yi = y[g]
+            if biases is None and has_bias[g]:
+                yi = yi + ps[i]["b"]
+            outs[i] = yi.astype(x.dtype)
+    return outs  # type: ignore[return-value]
+
+
 # ---------------------------------------------------------------------------
 # Positions
 # ---------------------------------------------------------------------------
@@ -255,14 +309,16 @@ def attention(
     """
     cfg, sh = ctx.cfg, ctx.shard
     B, S, _ = x.shape
-    q = _split_heads(linear(p["wq"], x, ctx), cfg.num_heads)
     if cross_kv is None:
-        k = _split_heads(linear(p["wk"], x, ctx), cfg.num_kv_heads)
-        v = _split_heads(linear(p["wv"], x, ctx), cfg.num_kv_heads)
+        yq, yk, yv = fused_linears([p["wq"], p["wk"], p["wv"]], x, ctx)
+        q = _split_heads(yq, cfg.num_heads)
+        k = _split_heads(yk, cfg.num_kv_heads)
+        v = _split_heads(yv, cfg.num_kv_heads)
         if cfg.pos == "rope":
             q = rope(q, positions, cfg.rope_theta)
             k = rope(k, positions, cfg.rope_theta)
     else:
+        q = _split_heads(linear(p["wq"], x, ctx), cfg.num_heads)
         k, v = cross_kv
         if cfg.pos == "rope":
             q = rope(q, positions, cfg.rope_theta)
@@ -434,8 +490,7 @@ def mlp(p: dict, x: jax.Array, ctx: Ctx) -> jax.Array:
         h = jnp.square(jax.nn.relu(h)) if ctx.cfg.act == "relu2" else jax.nn.gelu(h)
         h = sh.constrain(h, "batch", None, "mlp")
         return sh.constrain(linear(p["w_out"], h, ctx), "batch", None, None)
-    g = linear(p["w_gate"], x, ctx)
-    u = linear(p["w_up"], x, ctx)
+    g, u = fused_linears([p["w_gate"], p["w_up"]], x, ctx)
     h = jax.nn.silu(g) * u
     h = sh.constrain(h, "batch", None, "mlp")
     return sh.constrain(linear(p["w_down"], h, ctx), "batch", None, None)

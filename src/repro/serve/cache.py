@@ -44,18 +44,19 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> dict:
         # different lengths
         "index": PSpec((batch,), ("batch",), init="zeros", dtype=jnp.int32),
     }
-    kv = lambda n_layers: {
-        "k": PSpec(
-            (n_layers, batch, T, cfg.num_kv_heads, cfg.head_dim),
-            ("layers", "batch", "seq_kv", None, None),
-            init="zeros",
-        ),
-        "v": PSpec(
-            (n_layers, batch, T, cfg.num_kv_heads, cfg.head_dim),
-            ("layers", "batch", "seq_kv", None, None),
-            init="zeros",
-        ),
-    }
+    def kv(n_layers):
+        return {
+            "k": PSpec(
+                (n_layers, batch, T, cfg.num_kv_heads, cfg.head_dim),
+                ("layers", "batch", "seq_kv", None, None),
+                init="zeros",
+            ),
+            "v": PSpec(
+                (n_layers, batch, T, cfg.num_kv_heads, cfg.head_dim),
+                ("layers", "batch", "seq_kv", None, None),
+                init="zeros",
+            ),
+        }
     if cfg.family in ("dense", "moe", "vlm"):
         if cfg.attention == "mla":
             tree["layers"] = {
@@ -78,9 +79,10 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> dict:
         tree["shared_attn"] = kv(n_shared)
     elif cfg.family == "ssm":  # rwkv6
         H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+        shift_axes = ("layers", "batch", None)
         tree["layers"] = {
-            "shift_a": PSpec((L, batch, cfg.d_model), ("layers", "batch", None), init="zeros"),
-            "shift_c": PSpec((L, batch, cfg.d_model), ("layers", "batch", None), init="zeros"),
+            "shift_a": PSpec((L, batch, cfg.d_model), shift_axes, init="zeros"),
+            "shift_c": PSpec((L, batch, cfg.d_model), shift_axes, init="zeros"),
             "wkv": PSpec(
                 (L, batch, H, hd, hd),
                 ("layers", "batch", "heads", None, None),
@@ -170,10 +172,11 @@ def _onehot_write(buf: jax.Array, new: jax.Array, slots: jax.Array) -> jax.Array
     return buf * keep + add
 
 
-def _write_slots(meta_index: jax.Array, positions: jax.Array, T: int, window) -> jax.Array:
+def _write_slots(meta_index, positions: jax.Array, T: int, window) -> jax.Array:
     if window is not None:
         return positions % T
-    return meta_index[:, None] + jnp.arange(positions.shape[1], dtype=jnp.int32)[None, :]
+    steps = jnp.arange(positions.shape[1], dtype=jnp.int32)
+    return meta_index[:, None] + steps[None, :]
 
 
 def update_kv_cache(cache: dict, k, v, positions, ctx):
@@ -211,7 +214,9 @@ def update_mla_cache(cache: dict, c_kv, k_rope, positions, ctx):
     else:
         slots = _write_slots(meta["index"] - S, positions, T, None)
         new_c = _onehot_write(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), slots)
-        new_r = _onehot_write(cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), slots)
+        new_r = _onehot_write(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), slots
+        )
     new_c = ctx.shard.constrain(new_c, "batch", "seq_kv", None)
     new_r = ctx.shard.constrain(new_r, "batch", "seq_kv", None)
     return {"c_kv": new_c, "k_rope": new_r}, new_c, new_r, meta["pos"], meta["valid"]

@@ -1,9 +1,15 @@
 """Serving engine: prefill/decode steps + a slot-based continuous batcher.
 
 The TableNet integration is first-class: pass ``lut_params`` (from
-``core.convert.convert_params``) and every converted projection executes via
+``core.convert.convert_params``, ideally per-layer-planned via
+``core.planner.plan_model``) and every converted projection executes via
 the paper's LUT path — ``ExecCfg(use_pallas=True)`` routes through the
-Pallas kernel on real devices, the jnp oracle otherwise.
+Pallas kernel on real devices, the jnp oracle otherwise, and
+``ExecCfg(lut_grouped=True)`` additionally fuses same-shape projections
+(QKV, gate/up) into one grouped dispatch per decode step
+(``kernels.lut_affine.lut_affine_grouped``) instead of one per projection.
+Both ``make_decode_step`` and ``BatchingEngine`` inherit the choice from
+the ``Ctx`` they are built with.
 
 ``decode_step`` is what the decode_32k / long_500k dry-run cells lower: one
 new token against a seq_len-deep cache, caches seq-sharded over the model
@@ -12,31 +18,35 @@ axis (DESIGN.md §4).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, Iterator, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.layers import Ctx, ExecCfg
+from repro.models.layers import Ctx
 from repro.models.model import model_forward
 from repro.models.params import abstract_params, init_params
 from repro.serve.cache import cache_specs
 
 
-def make_cache(cfg: ModelConfig, batch: int, max_len: int, ctx: Ctx,
-               dtype=jnp.bfloat16):
+def make_cache(
+    cfg: ModelConfig, batch: int, max_len: int, ctx: Ctx, dtype=jnp.bfloat16
+):
     specs = cache_specs(cfg, batch, max_len)
     return init_params(specs, jax.random.PRNGKey(0), default_dtype=dtype)
 
 
-def abstract_cache(cfg: ModelConfig, batch: int, max_len: int, ctx: Ctx,
-                   dtype=jnp.bfloat16):
+def abstract_cache(
+    cfg: ModelConfig, batch: int, max_len: int, ctx: Ctx, dtype=jnp.bfloat16
+):
     specs = cache_specs(cfg, batch, max_len)
     return abstract_params(
-        specs, default_dtype=dtype,
-        sharding_fn=(ctx.shard.param_sharding if ctx.shard.mesh is not None else None),
+        specs,
+        default_dtype=dtype,
+        sharding_fn=(
+            ctx.shard.param_sharding if ctx.shard.mesh is not None else None
+        ),
     )
 
 
@@ -66,8 +76,13 @@ def make_decode_step(ctx: Ctx, sample: str = "greedy") -> Callable:
 
 
 def generate(
-    params, ctx: Ctx, prompts: jax.Array, max_new: int, max_len: int | None = None,
-    enc_embeds: jax.Array | None = None, embeds: jax.Array | None = None,
+    params,
+    ctx: Ctx,
+    prompts: jax.Array,
+    max_new: int,
+    max_len: int | None = None,
+    enc_embeds: jax.Array | None = None,
+    embeds: jax.Array | None = None,
 ) -> jax.Array:
     """Greedy generation (reference implementation used by tests/examples)."""
     B, S = prompts.shape
@@ -108,8 +123,14 @@ class BatchingEngine:
     queued requests between decode steps (per-slot prefill).  Single-host
     reference implementation of the serving layer's scheduling semantics."""
 
-    def __init__(self, params, ctx: Ctx, num_slots: int, max_len: int,
-                 eos_id: Optional[int] = None):
+    def __init__(
+        self,
+        params,
+        ctx: Ctx,
+        num_slots: int,
+        max_len: int,
+        eos_id: Optional[int] = None,
+    ):
         self.params, self.ctx = params, ctx
         self.num_slots, self.max_len = num_slots, max_len
         self.eos_id = eos_id
@@ -153,13 +174,13 @@ class BatchingEngine:
             tok = int(nxt[s, 0])
             req.generated.append(tok)
             self._remaining[s] -= 1
-            if self._remaining[s] <= 0 or (self.eos_id is not None and tok == self.eos_id):
+            hit_eos = self.eos_id is not None and tok == self.eos_id
+            if self._remaining[s] <= 0 or hit_eos:
                 req.done = True
                 self.slots[s] = None
         return True
 
     def run(self) -> list[Request]:
-        finished = []
         all_reqs = list(self.queue)
         while self.step():
             pass

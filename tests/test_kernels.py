@@ -11,8 +11,8 @@ from repro.kernels.bitplane_pack.ops import bitplane_pack
 from repro.kernels.bitplane_pack.ref import bitplane_pack_ref
 from repro.kernels.binary_matmul.ops import binary_matmul
 from repro.kernels.binary_matmul.ref import binary_matmul_ref
-from repro.kernels.lut_affine.ops import lut_affine
-from repro.kernels.lut_affine.ref import lut_affine_ref
+from repro.kernels.lut_affine.ops import lut_affine, lut_affine_grouped
+from repro.kernels.lut_affine.ref import lut_affine_grouped_ref, lut_affine_ref
 
 pytestmark = pytest.mark.slow  # interpret-mode Pallas sweeps: ~45s on CPU
 
@@ -72,6 +72,54 @@ def test_lut_affine_end_to_end_exact_vs_core():
     got = lut_affine(codes, tables, scales, interpret=True)
     xq = fmt.dequantize(fmt.quantize(x))
     np.testing.assert_allclose(np.asarray(got), np.asarray(xq @ W), rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# lut_affine_grouped (fused batched decode path)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "G,B,n,k,E,p",
+    [
+        (1, 1, 1, 1, 2, 1),  # degenerate minimum
+        (3, 4, 3, 7, 8, 10),  # QKV-style group, ragged everything
+        (2, 16, 11, 32, 64, 96),  # gate/up-style group, fp16 planes
+        (4, 3, 4, 130, 16, 130),  # k and p beyond one block
+        (2, 130, 2, 5, 256, 257),  # batch beyond one block, odd p
+    ],
+)
+def test_lut_affine_grouped_matches_ref(G, B, n, k, E, p, dtype):
+    kc, kt = jax.random.split(jax.random.PRNGKey(G * 13 + B * 7 + k), 2)
+    codes = jax.random.randint(kc, (B, n, k), 0, E)
+    tables = jax.random.normal(kt, (G, k, E, p), dtype=jnp.float32).astype(dtype)
+    scales = 2.0 ** jnp.arange(n, dtype=jnp.float32)
+    got = lut_affine_grouped(codes, tables, scales, interpret=True)
+    want = lut_affine_grouped_ref(codes, tables, scales)
+    # same slack as the ungrouped kernel: blocked fp32 accumulation order
+    rel = 1e-5 if dtype == jnp.float32 else 2e-2
+    atol = rel * float(np.abs(np.asarray(want)).max() + 1.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rel, atol=atol)
+    # fused grid == G separate dispatches of the per-projection kernel
+    per = jnp.stack(
+        [lut_affine(codes, tables[g], scales, interpret=True) for g in range(G)]
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(per), rtol=rel, atol=atol)
+
+
+def test_lut_affine_grouped_leading_dims_and_bias():
+    kc, kt = jax.random.split(jax.random.PRNGKey(1))
+    codes = jax.random.randint(kc, (2, 3, 4, 8), 0, 16)  # (d0, d1, n, k)
+    tables = jax.random.normal(kt, (3, 8, 16, 12))
+    scales = jnp.ones((4,))
+    biases = jnp.arange(36.0).reshape(3, 12)
+    got = lut_affine_grouped(codes, tables, scales, biases=biases, interpret=True)
+    assert got.shape == (3, 2, 3, 12)
+    want = lut_affine_grouped_ref(codes.reshape(6, 4, 8), tables, scales).reshape(
+        3, 2, 3, 12
+    ) + biases[:, None, None, :]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
 
 
 # ---------------------------------------------------------------------------

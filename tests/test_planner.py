@@ -1,0 +1,133 @@
+"""plan_model() budget edge cases, determinism, and ModelPlan round-trips
+(JSON, checkpoint aux, and checkpoint -> restore -> convert)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.convert import convert_params
+from repro.core.lut import LUTPlan
+from repro.core.planner import (
+    ModelPlan,
+    enumerate_plans,
+    iter_linear_layers,
+    plan_model,
+    tradeoff_curve,
+)
+from repro.core.quantize import Float16Format
+from repro.dist.checkpoint import load_aux, restore_checkpoint, save_checkpoint
+from repro.models.layers import Ctx, ExecCfg
+from repro.models.model import model_forward, model_specs
+from repro.models.params import init_params
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = get_config("granite_8b", reduced=True)
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# Budget edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_budget_below_minimal_footprint_raises(lm):
+    _, params = lm
+    with pytest.raises(ValueError, match="budget"):
+        plan_model(params, 10)
+
+
+def test_unbounded_budget_picks_fewest_ops_plan_per_layer(lm):
+    _, params = lm
+    mp = plan_model(params, float("inf"), max_chunk=2)
+    fmt = Float16Format(signed=True)
+    for key, (q, p) in iter_linear_layers(params):
+        frontier = tradeoff_curve(
+            enumerate_plans(q, p, fmt, modes=("bitplane",), max_chunk=2)
+        )
+        # fewest-ops point on the frontier is the last (largest) one
+        assert mp.layers[key] == frontier[-1].plan, key
+    assert mp.total_shift_add_ops == sum(
+        p.shift_add_ops for p in mp.layers.values()
+    )
+
+
+def test_partial_budget_mixes_chunk_sizes(lm):
+    _, params = lm
+    full = plan_model(params, float("inf"), max_chunk=2)
+    half = plan_model(params, full.total_lut_bytes // 2, max_chunk=2)
+    chunks = {p.chunk_size for p in half.layers.values()}
+    assert chunks == {1, 2}, chunks  # greedy split the budget, not uniform
+    assert half.total_lut_bytes <= full.total_lut_bytes // 2
+    # spending less memory must cost ops, never save them
+    assert half.total_shift_add_ops > full.total_shift_add_ops
+
+
+def test_plan_model_is_deterministic(lm):
+    _, params = lm
+    budget = plan_model(params, float("inf"), max_chunk=2).total_lut_bytes // 2
+    a = plan_model(params, budget, max_chunk=2)
+    b = plan_model(params, budget, max_chunk=2)
+    assert list(a.layers) == list(b.layers)
+    assert a.layers == dict(b.layers)
+    assert a.to_json() == b.to_json()
+
+
+# ---------------------------------------------------------------------------
+# Serialization round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_model_plan_json_round_trip(lm):
+    _, params = lm
+    mp = plan_model(params, float("inf"), max_chunk=2)
+    back = ModelPlan.from_json(mp.to_json())
+    assert dict(back.layers) == dict(mp.layers)
+    assert back.budget_bytes == mp.budget_bytes
+    # LUTPlan fields survive exactly (frozen dataclass equality)
+    key = next(iter(mp.layers))
+    assert isinstance(back.layers[key], LUTPlan)
+
+
+@pytest.mark.slow  # converts + compiles a reduced LM forward: ~30s
+def test_plan_checkpoint_restore_convert_round_trip(lm, tmp_path):
+    """ModelPlan -> checkpoint aux -> restore -> convert reproduces the
+    conversion bit-for-bit, and the converted model matches the dense
+    reference within the fp16-input tolerance."""
+    cfg, params = lm
+    full = plan_model(params, float("inf"), max_chunk=2)
+    mp = plan_model(params, full.total_lut_bytes // 2, max_chunk=2)
+
+    ckpt = str(tmp_path / "ckpt")
+    save_checkpoint(ckpt, 7, params, aux={"model_plan": mp.to_json()})
+    like = jax.tree.map(lambda a: a, params)
+    restored = restore_checkpoint(ckpt, 7, like)
+    mp_back = ModelPlan.from_json(load_aux(ckpt, 7)["model_plan"])
+    assert dict(mp_back.layers) == dict(mp.layers)
+
+    lut_a, rep_a = convert_params(params, plan=mp)
+    lut_b, rep_b = convert_params(restored, plan=mp_back)
+    assert rep_a == rep_b
+    for a, b in zip(jax.tree.leaves(lut_a), jax.tree.leaves(lut_b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # the 0.5x-budget planned conversion passes the convert equivalence bar
+    ctx = Ctx(cfg, ex=ExecCfg(remat="none"))
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (2, 8), 0, cfg.vocab_size)
+    ref, _, _ = model_forward(params, {"tokens": tokens}, ctx)
+    got, _, _ = model_forward(lut_b, {"tokens": tokens}, ctx)
+    ref_n, got_n = np.asarray(ref, np.float32), np.asarray(got, np.float32)
+    denom = np.abs(ref_n).max() + 1e-6
+    assert np.abs(got_n - ref_n).max() / denom < 0.05
+
+
+def test_plan_mismatched_shape_raises(lm):
+    _, params = lm
+    mp = plan_model(params, float("inf"), max_chunk=1)
+    key = next(iter(mp.layers))
+    bad = dict(mp.layers)
+    bad[key] = LUTPlan(3, 5, 1, Float16Format(signed=True))
+    with pytest.raises(ValueError, match="plan for"):
+        convert_params(params, plan=ModelPlan(layers=bad))

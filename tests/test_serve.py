@@ -122,6 +122,20 @@ def test_lut_mode_generation_runs():
     np.testing.assert_array_equal(np.asarray(got[:, 0]), np.asarray(ref[:, 0]))
 
 
+def test_lut_grouped_decode_matches_ungrouped():
+    """ExecCfg.lut_grouped fuses QKV / gate-up into one grouped dispatch;
+    the generated tokens must be identical to the per-projection path."""
+    cfg, ctx, params, tokens, _ = _setup("granite_8b", B=1, S=6)
+    lut_params, report = convert_params(params, chunk_size=1)
+    assert report.converted > 0
+    ref = generate(lut_params, ctx, tokens, max_new=4)
+    gctx = dataclasses.replace(
+        ctx, ex=dataclasses.replace(ctx.ex, lut_grouped=True)
+    )
+    got = generate(lut_params, gctx, tokens, max_new=4)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
 def test_batching_engine_matches_oneshot():
     cfg, ctx, params, _, _ = _setup("granite_8b")
     prompts = [

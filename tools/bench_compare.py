@@ -1,0 +1,127 @@
+"""Compare benchmark JSON against a committed baseline; gate CI on regressions.
+
+Input files are lists of ``{"name", "value", "unit"}`` rows as emitted by
+``benchmarks/kernels.py --out`` / ``benchmarks/serving.py --out``.
+
+Checks (any failure exits 1 with a per-row report):
+
+* ``--baseline BASE --threshold 1.5`` — every time-like row (unit contains
+  "us") present in both files must satisfy ``new <= threshold * old``.
+  ``--normalize`` divides each timing by the same file's ``lut_affine_jnp``
+  row for its shape tag first, so the comparison is a ratio of ratios and
+  robust to absolute machine speed differences between the baseline host
+  and the CI runner.  ``matmul_ref`` rows are context only (never gated):
+  the tiny matmul is dispatch-overhead dominated and far too noisy.
+* ``--require-ge A B [--ge-slack 0.9]`` — in the new file,
+  ``value[A] >= ge_slack * value[B]`` (e.g. grouped decode tokens/s must not
+  fall below per-projection dispatch).
+
+Usage:
+  python tools/bench_compare.py NEW.json --normalize \
+      --baseline benchmarks/baselines/kernels.json
+  python tools/bench_compare.py NEW.json \
+      --require-ge serve/lut_grouped_tok_per_s serve/lut_planned_tok_per_s
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+_TAG = re.compile(r"_(B\d+_q\d+_p\d+_m\d+)$")
+# normalizer: the jitted jnp-oracle row — the most run-to-run-stable timing
+_REF_PREFIX = "kern/lut_affine_jnp_"
+# context-only rows, never gated: the tiny matmul is dispatch-overhead
+# dominated and swings an order of magnitude run to run
+_UNGATED_PREFIXES = ("kern/matmul_ref_",)
+
+
+def load(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        rows = json.load(f)
+    return {r["name"]: r for r in rows}
+
+
+def _normalized(rows: dict[str, dict]) -> dict[str, float]:
+    """Each timing divided by its shape tag's lut_affine_jnp row (the
+    _REF_PREFIX normalizer) from the same file; raw value if absent."""
+    out = {}
+    for name, r in rows.items():
+        m = _TAG.search(name)
+        ref = rows.get(f"{_REF_PREFIX}{m.group(1)}") if m else None
+        if ref is not None and ref["name"] != name and ref["value"] > 0:
+            out[name] = r["value"] / ref["value"]
+        else:
+            out[name] = r["value"]
+    return out
+
+
+def compare(base: dict, new: dict, threshold: float, normalize: bool) -> list[str]:
+    failures = []
+    bvals = _normalized(base) if normalize else {k: v["value"] for k, v in base.items()}
+    nvals = _normalized(new) if normalize else {k: v["value"] for k, v in new.items()}
+    compared = 0
+    for name, brow in sorted(base.items()):
+        if "us" not in brow.get("unit", "") or name not in new:
+            continue
+        if name.startswith(_UNGATED_PREFIXES):
+            continue
+        if name.startswith(_REF_PREFIX) and normalize:
+            continue  # the normalizer itself
+        compared += 1
+        old_v, new_v = bvals[name], nvals[name]
+        ratio = new_v / old_v if old_v > 0 else float("inf")
+        status = "FAIL" if ratio > threshold else "ok"
+        print(f"  {status:4s} {name}: {old_v:.3g} -> {new_v:.3g} ({ratio:.2f}x)")
+        if ratio > threshold:
+            failures.append(f"{name} regressed {ratio:.2f}x (> {threshold}x)")
+    if compared == 0:
+        failures.append("no comparable rows between baseline and new file")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new", help="freshly produced benchmark JSON")
+    ap.add_argument("--baseline", help="committed baseline JSON to compare against")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="fail when new > threshold * baseline (time rows)")
+    ap.add_argument("--normalize", action="store_true",
+                    help="divide timings by each file's own lut_affine_jnp rows")
+    ap.add_argument("--require-ge", nargs=2, metavar=("A", "B"), action="append",
+                    default=[], help="require value[A] >= ge-slack * value[B] in NEW")
+    ap.add_argument("--ge-slack", type=float, default=0.9)
+    args = ap.parse_args()
+
+    new = load(args.new)
+    failures: list[str] = []
+    if args.baseline:
+        print(
+            f"comparing {args.new} against {args.baseline} "
+            f"(threshold {args.threshold}x, normalize={args.normalize})"
+        )
+        failures += compare(load(args.baseline), new, args.threshold, args.normalize)
+    for a, b in args.require_ge:
+        if a not in new or b not in new:
+            failures.append(f"--require-ge: missing row {a if a not in new else b}")
+            continue
+        va, vb = new[a]["value"], new[b]["value"]
+        ok = va >= args.ge_slack * vb
+        print(
+            f"  {'ok' if ok else 'FAIL'} {a} ({va:.3g}) >= "
+            f"{args.ge_slack} * {b} ({vb:.3g})"
+        )
+        if not ok:
+            failures.append(f"{a}={va:.3g} < {args.ge_slack} * {b}={vb:.3g}")
+    if failures:
+        print("\nbench-gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("bench-gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
