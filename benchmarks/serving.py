@@ -4,12 +4,15 @@ Measures steady-state *decode* tokens/s (prefill once, then timed decode
 steps) for:
 
 * ``dense``        — standard matmul projections
-* ``lut_planned``  — per-layer ``plan_model`` conversion, one LUT dispatch
-                     per projection per decode step (the pre-fusion path)
-* ``lut_grouped``  — same converted params routed through the fused
-                     ``lut_affine_grouped`` path (``ExecCfg.lut_grouped``):
-                     same-shape projections (QKV, gate/up) pack the input
-                     once and execute as one grouped gather
+* ``lut_planned``  — per-layer ``plan_model`` conversion in the flat
+                     per-projection layout (``group_siblings=False``), one
+                     LUT dispatch per projection per decode step
+* ``lut_grouped_prestacked`` — the same plan converted with pre-stacked
+                     sibling groups (``LUTGroup`` leaves, the default
+                     layout) and routed through ``ExecCfg.lut_grouped``:
+                     same-shape projections (K/V, gate/up) pack the input
+                     once and execute as one grouped gather straight from
+                     the stored ``(G, k, E, p)`` leaf — no per-step stack
 
 On TPU the LUT gather path is memory-bound and the bitplane-MXU path
 compute-bound (see EXPERIMENTS.md §Perf); this CPU bench demonstrates the
@@ -32,26 +35,58 @@ from repro.models.params import init_params
 from repro.serve.engine import make_cache, make_decode_step, make_prefill_step
 
 
-def _decode_tps(params, ctx: Ctx, prompts, steps: int, reps: int = 3) -> float:
-    """Median decode tokens/s over ``reps`` timed runs of ``steps`` steps."""
+def _decode_state(params, ctx: Ctx, prompts, steps: int, reps: int) -> dict:
+    """Prefill + compile + warm a decode loop; returns resumable state."""
     B, S = prompts.shape
     cache = make_cache(ctx.cfg, B, S + steps * (reps + 2), ctx)
     prefill = jax.jit(make_prefill_step(ctx))
     decode = jax.jit(make_decode_step(ctx))
     logits, cache = prefill(params, {"tokens": prompts}, cache)
     tok = jax.numpy.argmax(logits[:, -1], -1).astype(jax.numpy.int32)[:, None]
-    # warmup: compile + one full round
+    # warmup: compile + one settled round
     for _ in range(2):
         tok, _, cache = decode(params, cache, tok)
     jax.block_until_ready(tok)
-    rates = []
+    return {"params": params, "decode": decode, "cache": cache, "tok": tok}
+
+
+def _timed_window(state: dict, steps: int) -> float:
+    """Advance one timed window of ``steps`` decode steps; returns seconds."""
+    tok, cache = state["tok"], state["cache"]
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        tok, _, cache = state["decode"](state["params"], cache, tok)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    state["tok"], state["cache"] = tok, cache
+    return dt
+
+
+def _decode_tps(named_runs, prompts, steps: int, reps: int = 7) -> dict:
+    """Decode tokens/s per mode, measured in interleaved paired rounds.
+
+    The CI boxes share cores, and machine-load drift between one mode's
+    measurement and the next can exceed the few-percent effect under test
+    (grouped vs per-projection dispatch).  So the modes' timed windows are
+    interleaved into rounds (back-to-back, ~100ms apart) and each mode
+    reports its MEDIAN window across rounds: load drift is common-mode
+    across a round, and the median discards the stalled windows entirely.
+    Sequential per-mode phases with independent best-of were measured to
+    wobble past the gate's 0.9 slack on shared runners."""
+    B = prompts.shape[0]
+    states = {
+        name: _decode_state(params, ctx, prompts, steps, reps)
+        for name, params, ctx in named_runs
+    }
+    rounds = []
     for _ in range(reps):
-        t0 = time.perf_counter()
-        for _ in range(steps):
-            tok, _, cache = decode(params, cache, tok)
-        jax.block_until_ready(tok)
-        rates.append(B * steps / (time.perf_counter() - t0))
-    return statistics.median(rates)
+        rounds.append(
+            {name: _timed_window(state, steps) for name, state in states.items()}
+        )
+    return {
+        name: B * steps / statistics.median(r[name] for r in rounds)
+        for name in states
+    }
 
 
 def rows(tiny: bool = False) -> list[tuple[str, float, str]]:
@@ -63,16 +98,22 @@ def rows(tiny: bool = False) -> list[tuple[str, float, str]]:
     uniform = plan_model(params, float("inf"), max_chunk=2)
     budget = uniform.total_lut_bytes // 2
     mplan = plan_model(params, budget, max_chunk=2)
-    lut_params, report = convert_params(params, plan=mplan)
+    # same per-layer plans, two layouts: flat per-projection vs pre-stacked
+    lut_params, _ = convert_params(params, plan=mplan, group_siblings=False)
+    lut_grouped_params, report = convert_params(params, plan=mplan)
 
     B, S = (2, 4) if tiny else (4, 8)
-    steps = 8 if tiny else 16
+    steps = 32 if tiny else 16
     prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
 
     modes = [
         ("dense", params, ExecCfg(remat="none")),
         ("lut_planned", lut_params, ExecCfg(remat="none")),
-        ("lut_grouped", lut_params, ExecCfg(remat="none", lut_grouped=True)),
+        (
+            "lut_grouped_prestacked",
+            lut_grouped_params,
+            ExecCfg(remat="none", lut_grouped=True),
+        ),
     ]
     shape_note = f"B{B} x {steps} decode steps"
     out: list[tuple[str, float, str]] = [
@@ -81,9 +122,11 @@ def rows(tiny: bool = False) -> list[tuple[str, float, str]]:
          f"{len(mplan.layers)} planned layers"),
         ("serve/plan_shift_add_ops", float(mplan.total_shift_add_ops),
          f"vs {uniform.total_shift_add_ops} uniform"),
+        ("serve/plan_groups", float(len(mplan.groups)),
+         f"{report.grouped} LUTGroup nodes emitted"),
     ]
-    for name, p, ex in modes:
-        tps = _decode_tps(p, Ctx(cfg, ex=ex), prompts, steps)
+    named_runs = [(name, p, Ctx(cfg, ex=ex)) for name, p, ex in modes]
+    for name, tps in _decode_tps(named_runs, prompts, steps).items():
         out.append((f"serve/{name}_tok_per_s", round(tps, 2), shape_note))
     return out
 

@@ -7,10 +7,31 @@ tables, exactly as the paper prescribes post-training.  The zoo's
 path, so a converted model serves **multiplier-free** (in the paper's
 arithmetic sense — see DESIGN.md §2) with no other code changes.
 
+Converted layout
+----------------
+A converted node is a registered pytree class carrying the tables *and an
+explicit plan record* (chunk size / number format / mode) as static
+metadata — execution never re-infers the plan from table shapes (shape
+sniffing is genuinely ambiguous once fixed-point plans enter the picture:
+an unsigned fixed-point chunk-7 bitplane table and a signed-fp16 chunk-1
+table both have 2**7 entries).
+
+* :class:`LUTLinear` — one projection: ``tables (..., k, entries, p)``.
+* :class:`LUTGroup` — fusable sibling projections (QKV with equal head
+  counts, K/V, gate/up) **pre-stacked at conversion time** into one
+  ``tables (..., G, k, entries, p)`` leaf, replacing the member keys with
+  a single ``"a+b"`` key.  Serving indexes the stored group directly — no
+  per-decode-step stack/concat of table-sized operands ever appears under
+  jit (asserted at the jaxpr level in ``tests/test_grouped_layout.py``).
+
 Non-affine recurrences (SSD / WKV — data-dependent transition weights) and
-raw tensors (embeddings, routers, norm scales, 3-D expert stacks) are left
-untouched; the expert stacks can be converted per-expert via
-``convert_experts=True`` (vmapped table build).
+raw tensors (embeddings, routers, norm scales) are left untouched; 3-D
+expert stacks can be converted per-expert via ``convert_experts=True``
+(vmapped table build) under the same eligibility rules
+(``min_features``/``predicate``) the planner applies.  Expert conversion
+is a size/op-accounting path: ``models.moe.moe_ffn`` has no LUT execution
+for expert stacks yet and raises ``NotImplementedError`` on converted
+experts rather than crashing inside ``ragged_dot``.
 """
 from __future__ import annotations
 
@@ -19,11 +40,89 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.lut import LUTPlan, build_luts
 from repro.core.planner import ModelPlan, path_key
 from repro.core.quantize import Float16Format
+
+# Sibling key sets that execute against the SAME input at their call sites
+# (models.layers.attention / models.layers.mlp / models.encdec) and are
+# therefore fusable into one grouped dispatch.  Detection takes the maximal
+# same-shape subset, so GQA (wq wider than wk/wv) still fuses K/V.
+FUSABLE_SIBLINGS = (("wq", "wk", "wv"), ("w_gate", "w_up"))
+
+EXPERT_WEIGHT_KEYS = ("w_gate", "w_up", "w_down")
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass(eq=False)
+class LUTLinear:
+    """A converted projection: kernel-ready tables + its conversion plan.
+
+    ``plan`` is pytree *aux data* (static under jit), so the execution path
+    reads chunk/format/mode directly instead of sniffing table shapes.
+    """
+
+    tables: Any  # (..., k, entries, p)
+    plan: LUTPlan
+    b: Any = None  # (..., p) or None
+
+    def tree_flatten_with_keys(self):
+        return (
+            (
+                (jax.tree_util.GetAttrKey("tables"), self.tables),
+                (jax.tree_util.GetAttrKey("b"), self.b),
+            ),
+            self.plan,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, plan, children):
+        tables, b = children
+        return cls(tables, plan, b)
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass(eq=False)
+class LUTGroup:
+    """Pre-stacked fusable sibling projections sharing one plan.
+
+    ``tables`` holds every member's tables stacked on a group axis just
+    before the chunk axis — ``(..., G, k, entries, p)`` — which is exactly
+    the layout ``kernels.lut_affine.lut_affine_grouped`` consumes, so a
+    grouped decode step reads the stored leaf with zero copies.
+
+    ``b`` is ``None`` (no member has a bias), a stacked ``(..., G, p)``
+    array (every member has one), or a per-member tuple with ``None``
+    holes (mixed) — mixed-bias groups still fuse.
+    """
+
+    tables: Any  # (..., G, k, entries, p)
+    plan: LUTPlan
+    members: tuple  # sibling keys in call-site order, e.g. ("wk", "wv")
+    b: Any = None  # None | (..., G, p) | tuple[(..., p) | None, ...]
+
+    def tree_flatten_with_keys(self):
+        return (
+            (
+                (jax.tree_util.GetAttrKey("tables"), self.tables),
+                (jax.tree_util.GetAttrKey("b"), self.b),
+            ),
+            (self.plan, self.members),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        plan, members = aux
+        tables, b = children
+        return cls(tables, plan, members, b)
+
+    def member_bias(self, g: int):
+        if self.b is None:
+            return None
+        if isinstance(self.b, tuple):
+            return self.b[g]
+        return self.b[..., g, :]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +131,7 @@ class ConvertReport:
     skipped: int
     weight_bytes: int
     table_bytes: int
+    grouped: int = 0  # number of LUTGroup nodes emitted
 
 
 def _is_linear_node(node: Any) -> bool:
@@ -43,6 +143,37 @@ def _is_linear_node(node: Any) -> bool:
         and node["w"].ndim in (2, 3)
         and set(node) <= {"w", "b"}
     )
+
+
+def _is_expert_stack(node: Any) -> bool:
+    return (
+        isinstance(node, dict)
+        and {"w_gate", "w_up", "w_down", "router"} <= set(node)
+        and hasattr(node["w_gate"], "ndim")
+        and node["w_gate"].ndim in (3, 4)
+    )
+
+
+def sibling_groups(node: dict) -> list[tuple[str, ...]]:
+    """Fusable sibling sets present in ``node``: for each candidate key set
+    in :data:`FUSABLE_SIBLINGS`, the same-``w``-shape classes with >= 2
+    members (shape equality includes any leading scan/layer dims).  Shared
+    with the planner so grouping decisions never drift between the two."""
+    out: list[tuple[str, ...]] = []
+    for base in FUSABLE_SIBLINGS:
+        present = [n for n in base if n in node and _is_linear_node(node[n])]
+        by_shape: dict[tuple, list[str]] = {}
+        for n in present:
+            by_shape.setdefault(tuple(node[n]["w"].shape), []).append(n)
+        for members in by_shape.values():
+            if len(members) > 1:
+                out.append(tuple(members))
+    return out
+
+
+def group_key(members: tuple) -> str:
+    """Tree key a :class:`LUTGroup` is stored under (e.g. ``"wk+wv"``)."""
+    return "+".join(members)
 
 
 def _build_tables(w, plan: LUTPlan, dtype):
@@ -65,89 +196,163 @@ def convert_params(
     convert_experts: bool = False,
     signed: bool = True,  # LM activations are signed; paper models may use False
     plan: Optional[ModelPlan] = None,
+    group_siblings: bool = True,
 ) -> tuple[dict, ConvertReport]:
     """Returns (converted tree, report).  ``predicate(path, node)`` can veto
     individual layers (default: convert everything eligible).
 
     With ``plan`` (a :class:`repro.core.planner.ModelPlan`, e.g. from
     ``plan_model``) each layer uses its *own* plan, looked up by tree path;
-    layers absent from the plan are skipped.  Without it, one uniform
-    ``(chunk_size, fp16-bitplane)`` plan applies everywhere.  Expert stacks
-    (``convert_experts=True``) always use the uniform plan — ``plan_model``
-    does not enumerate them.
+    layers absent from the plan are skipped — but a plan entry that the
+    converter never consumes (a path the tree lacks, the predicate vetoes,
+    or an expert entry without ``convert_experts=True``) **raises**, so
+    planner/converter eligibility can never silently disagree.
+
+    ``group_siblings=True`` (the default) emits fusable sibling projections
+    as one pre-stacked :class:`LUTGroup` per group: always under the
+    uniform plan, and exactly the groups ``plan.groups`` declares under a
+    planned conversion (``plan_model`` never splits a group across plans).
+    Pass ``group_siblings=False`` for the flat per-projection layout.
     """
-    stats = {"converted": 0, "skipped": 0, "w_bytes": 0, "t_bytes": 0}
+    stats = {"converted": 0, "skipped": 0, "w_bytes": 0, "t_bytes": 0, "groups": 0}
     fmt = Float16Format(signed=signed)
+    used_plan_keys: set[str] = set()
+    declared_groups = (
+        {frozenset(g) for g in plan.groups} if plan is not None else None
+    )
+
+    def member_plan(path: tuple, node: dict) -> Optional[LUTPlan]:
+        """The plan this linear converts under, or None to leave it dense."""
+        w = node["w"]
+        q, p = w.shape[-2:]
+        if q < min_features or (predicate and not predicate(path, node)):
+            return None
+        if plan is None:
+            return LUTPlan(q, p, chunk_size, fmt, mode="bitplane")
+        layer_plan = plan.layers.get(path_key(path))
+        if layer_plan is None:
+            return None
+        if (layer_plan.in_features, layer_plan.out_features) != (q, p):
+            raise ValueError(
+                f"plan for {path_key(path)} is "
+                f"{layer_plan.in_features}x{layer_plan.out_features}, "
+                f"layer is {q}x{p}"
+            )
+        used_plan_keys.add(path_key(path))
+        return layer_plan
+
+    def convert_one(node: dict, layer_plan: LUTPlan) -> LUTLinear:
+        w = node["w"]
+        tables = _build_tables(w, layer_plan, table_dtype)
+        stats["converted"] += 1
+        stats["w_bytes"] += w.size * w.dtype.itemsize
+        stats["t_bytes"] += tables.size * tables.dtype.itemsize
+        return LUTLinear(tables=tables, plan=layer_plan, b=node.get("b"))
+
+    def convert_group(path: tuple, node: dict, members: tuple) -> Optional[LUTGroup]:
+        """One LUTGroup for ``members``, or None when they can't share a
+        plan (then they convert individually, like before grouping)."""
+        key_tuple = frozenset(path_key(path + (m,)) for m in members)
+        declared = declared_groups is not None and key_tuple in declared_groups
+        if declared_groups is not None and not declared:
+            return None  # planned conversion: only plan-declared groups fuse
+        plans = [member_plan(path + (m,), node[m]) for m in members]
+        if any(p is None for p in plans):
+            if declared:
+                raise ValueError(
+                    f"plan declares group {group_key(members)} at "
+                    f"{path_key(path)} but not every member is convertible"
+                )
+            return None
+        if any(p != plans[0] for p in plans[1:]):
+            # a hand-edited plan split the group; plan_model never does
+            raise ValueError(
+                f"group {group_key(members)} at {path_key(path)} has "
+                f"mismatched member plans — grouped siblings must share one"
+            )
+        singles = [convert_one(node[m], plans[0]) for m in members]
+        tables = jnp.stack(
+            [s.tables for s in singles], axis=singles[0].tables.ndim - 3
+        )
+        biases = [s.b for s in singles]
+        if all(b is not None for b in biases):
+            b = jnp.stack(biases, axis=biases[0].ndim - 1)
+        elif any(b is not None for b in biases):
+            b = tuple(biases)  # mixed-bias group: per-member leaves
+        else:
+            b = None
+        stats["groups"] += 1
+        return LUTGroup(tables=tables, plan=plans[0], members=members, b=b)
+
+    def convert_expert_member(path: tuple, key: str, w3) -> Any:
+        # same eligibility/plan rules as plain linears (member_plan), so
+        # planner and converter can never disagree on expert stacks
+        layer_plan = member_plan(path + (key,), {"w": w3})
+        if layer_plan is None:
+            stats["skipped"] += 1
+            return w3
+        return convert_one({"w": w3}, layer_plan)
 
     def walk(path: tuple, node: Any):
         if _is_linear_node(node):
-            w = node["w"]
-            q, p = w.shape[-2:]
-            if q < min_features or (predicate and not predicate(path, node)):
+            layer_plan = member_plan(path, node)
+            if layer_plan is None:
                 stats["skipped"] += 1
                 return node
-            if plan is not None:
-                layer_plan = plan.layers.get(path_key(path))
-                if layer_plan is None:
-                    stats["skipped"] += 1
-                    return node
-                if (layer_plan.in_features, layer_plan.out_features) != (q, p):
-                    raise ValueError(
-                        f"plan for {path_key(path)} is "
-                        f"{layer_plan.in_features}x{layer_plan.out_features}, "
-                        f"layer is {q}x{p}"
-                    )
-            else:
-                layer_plan = LUTPlan(q, p, chunk_size, fmt, mode="bitplane")
-            tables = _build_tables(w, layer_plan, table_dtype)
-            stats["converted"] += 1
-            stats["w_bytes"] += w.size * w.dtype.itemsize
-            stats["t_bytes"] += tables.size * tables.dtype.itemsize
-            out = {"tables": tables}
-            if "b" in node:
-                out["b"] = node["b"]
-            return out
-        if convert_experts and isinstance(node, dict) and _is_expert_stack(node):
-            node = _convert_expert_stack(node, chunk_size, table_dtype, stats, fmt)
+            return convert_one(node, layer_plan)
+        if not isinstance(node, dict):
+            return node
+        if convert_experts and _is_expert_stack(node):
             return {
-                k: (v if k in ("w_gate", "w_up", "w_down") else walk(path + (k,), v))
+                k: (
+                    convert_expert_member(path, k, v)
+                    if k in EXPERT_WEIGHT_KEYS
+                    else walk(path + (k,), v)
+                )
                 for k, v in node.items()
             }
-        if isinstance(node, dict):
-            return {k: walk(path + (k,), v) for k, v in node.items()}
-        return node
+        grouped: dict[str, LUTGroup] = {}
+        consumed: set[str] = set()
+        if group_siblings:
+            for members in sibling_groups(node):
+                g = convert_group(path, node, members)
+                if g is not None:
+                    grouped[group_key(members)] = g
+                    consumed |= set(members)
+        out: dict[str, Any] = {}
+        for k, v in node.items():
+            if k in consumed:
+                gk = next(gk for gk, g in grouped.items() if k in g.members)
+                if gk not in out:
+                    out[gk] = grouped[gk]
+                continue
+            out[k] = walk(path + (k,), v)
+        return out
 
     out = walk((), params)
+    if plan is not None:
+        unused = sorted(set(plan.layers) - used_plan_keys)
+        if unused:
+            raise ValueError(
+                "plan entries the converter never consumed (planner/converter "
+                f"eligibility mismatch — check predicate/min_features/"
+                f"convert_experts): {unused}"
+            )
     report = ConvertReport(
-        stats["converted"], stats["skipped"], stats["w_bytes"], stats["t_bytes"]
+        stats["converted"],
+        stats["skipped"],
+        stats["w_bytes"],
+        stats["t_bytes"],
+        stats["groups"],
     )
     return out, report
-
-
-def _is_expert_stack(node: dict) -> bool:
-    return {"w_gate", "w_up", "w_down", "router"} <= set(node) and (
-        hasattr(node["w_gate"], "ndim") and node["w_gate"].ndim in (3, 4)
-    )
-
-
-def _convert_expert_stack(node: dict, chunk: int, dtype, stats, fmt) -> dict:
-    out = dict(node)
-    for key in ("w_gate", "w_up", "w_down"):
-        w3 = node[key]  # (E, q, p) or stacked (L, E, q, p)
-        q, p = w3.shape[-2:]
-        plan = LUTPlan(q, p, chunk, fmt, mode="bitplane")
-        tables = _build_tables(w3, plan, dtype)
-        out[key] = {"tables": tables}  # (..., E, k, entries, p)
-        stats["converted"] += 1
-        stats["w_bytes"] += w3.size * w3.dtype.itemsize
-        stats["t_bytes"] += tables.size * np.dtype(dtype).itemsize
-    return out
 
 
 def conversion_summary(report: ConvertReport) -> str:
     ratio = report.table_bytes / max(report.weight_bytes, 1)
     return (
-        f"converted {report.converted} linears ({report.skipped} skipped): "
+        f"converted {report.converted} linears ({report.skipped} skipped, "
+        f"{report.grouped} pre-stacked groups): "
         f"{report.weight_bytes / 2**20:.1f} MiB weights -> "
         f"{report.table_bytes / 2**20:.1f} MiB tables ({ratio:.0f}x)"
     )

@@ -163,6 +163,12 @@ def plan_from_json(d: Mapping) -> LUTPlan:
 class ModelPlan:
     """Per-layer LUT plans keyed by the layer's ``"/"``-joined tree path.
 
+    ``groups`` lists the fusable sibling sets (tuples of layer path keys)
+    the plan was built around: every member of a group carries the *same*
+    ``LUTPlan`` (the knapsack upgrades groups atomically), and
+    ``convert_params`` emits each one as a single pre-stacked
+    ``core.convert.LUTGroup`` node.
+
     JSON-serializable (``to_json``/``from_json``) so it rides along with
     checkpoints (``dist.checkpoint.save_checkpoint(..., aux=...)``) and
     reconverts identically after an elastic restore.
@@ -170,6 +176,7 @@ class ModelPlan:
 
     layers: Mapping[str, LUTPlan]
     budget_bytes: int | None = None
+    groups: tuple = ()  # tuple[tuple[str, ...], ...] of layer path keys
 
     @property
     def total_lut_bytes(self) -> int:
@@ -183,6 +190,7 @@ class ModelPlan:
         return {
             "budget_bytes": self.budget_bytes,
             "layers": {k: plan_to_json(p) for k, p in sorted(self.layers.items())},
+            "groups": [list(g) for g in self.groups],
         }
 
     @classmethod
@@ -190,11 +198,13 @@ class ModelPlan:
         return cls(
             layers={k: plan_from_json(v) for k, v in d["layers"].items()},
             budget_bytes=d.get("budget_bytes"),
+            groups=tuple(tuple(g) for g in d.get("groups", [])),
         )
 
     def summary(self) -> str:
         return (
-            f"ModelPlan: {len(self.layers)} layers, "
+            f"ModelPlan: {len(self.layers)} layers "
+            f"({len(self.groups)} fused groups), "
             f"{self.total_lut_bytes / 2**20:.1f} MiB tables, "
             f"{self.total_shift_add_ops:,} shift/add ops"
         )
@@ -208,21 +218,73 @@ def iter_linear_layers(
     params: dict,
     min_features: int = 1,
     predicate: Callable[[tuple, dict], bool] | None = None,
+    convert_experts: bool = False,
 ) -> Iterator[tuple[str, tuple[int, int]]]:
     """Yield ``(path_key, (in_features, out_features))`` for every linear node
-    ``convert_params`` would convert (same eligibility rules)."""
-    from repro.core.convert import _is_linear_node  # local: avoid import cycle
+    ``convert_params`` would convert (same eligibility rules).
+
+    With ``convert_experts=True`` the raw MoE expert-stack weights are
+    enumerated too (as ``.../w_gate`` etc.), mirroring
+    ``convert_params(convert_experts=True)`` — the converter raises if a
+    plan carries entries it never consumes, so keep the two flags in sync.
+    """
+    # local imports: avoid an import cycle with repro.core.convert
+    from repro.core.convert import (
+        EXPERT_WEIGHT_KEYS,
+        _is_expert_stack,
+        _is_linear_node,
+    )
+
+    def eligible(path: tuple, node: dict) -> bool:
+        q = node["w"].shape[-2]
+        return q >= min_features and (predicate is None or predicate(path, node))
 
     def walk(path: tuple, node: Any):
         if _is_linear_node(node):
-            w = node["w"]
-            q, p = w.shape[-2:]
-            if q >= min_features and (predicate is None or predicate(path, node)):
+            if eligible(path, node):
+                q, p = node["w"].shape[-2:]
                 yield path_key(path), (int(q), int(p))
             return
-        if isinstance(node, dict):
-            for k in node:
-                yield from walk(path + (k,), node[k])
+        if not isinstance(node, dict):
+            return
+        if convert_experts and _is_expert_stack(node):
+            for k, v in node.items():
+                if k in EXPERT_WEIGHT_KEYS:
+                    mpath = path + (k,)
+                    if eligible(mpath, {"w": v}):
+                        q, p = v.shape[-2:]
+                        yield path_key(mpath), (int(q), int(p))
+                else:
+                    yield from walk(path + (k,), v)
+            return
+        for k in node:
+            yield from walk(path + (k,), node[k])
+
+    yield from walk((), params)
+
+
+def iter_sibling_groups(
+    params: dict,
+    min_features: int = 1,
+    predicate: Callable[[tuple, dict], bool] | None = None,
+) -> Iterator[tuple[str, ...]]:
+    """Yield fusable sibling groups as tuples of layer path keys — the same
+    detection ``convert_params(group_siblings=True)`` runs (shared helper),
+    restricted to members that pass the eligibility rules."""
+    from repro.core.convert import _is_linear_node, sibling_groups
+
+    def eligible(path: tuple, node: dict) -> bool:
+        q = node["w"].shape[-2]
+        return q >= min_features and (predicate is None or predicate(path, node))
+
+    def walk(path: tuple, node: Any):
+        if not isinstance(node, dict) or _is_linear_node(node):
+            return
+        for members in sibling_groups(node):
+            if all(eligible(path + (m,), node[m]) for m in members):
+                yield tuple(path_key(path + (m,)) for m in members)
+        for k, v in node.items():
+            yield from walk(path + (k,), v)
 
     yield from walk((), params)
 
@@ -236,61 +298,94 @@ def plan_model(
     min_features: int = 1,
     predicate: Callable[[tuple, dict], bool] | None = None,
     signed: bool = True,
+    group_siblings: bool = True,
+    convert_experts: bool = False,
 ) -> ModelPlan:
     """Choose a per-layer plan for every eligible linear under a global budget.
 
-    Greedy knapsack over each layer's Pareto frontier: every layer starts at
+    Greedy knapsack over each item's Pareto frontier: every item starts at
     its smallest-bytes plan; the budget is then spent on whichever single
-    layer upgrade buys the most shift/add reduction per byte (ties broken by
+    item upgrade buys the most shift/add reduction per byte (ties broken by
     smallest byte cost, then path order — fully deterministic).  The
     accuracy proxy is the format itself: binary16 bitplane plans are exact
     for fp16 inputs at *every* chunk size, so within one format the search
     reduces to bytes-vs-ops; narrower fixed-point formats trade accuracy and
     are selected by passing a different ``fmt``.
 
+    With ``group_siblings=True`` (default) fusable sibling projections
+    (QKV / K-V / gate-up — see ``core.convert.FUSABLE_SIBLINGS``) form ONE
+    knapsack item: their bytes and ops are accounted together and an
+    upgrade moves every member at once, so the knapsack can never split a
+    group onto different plans and silently defeat conversion-time fusion.
+    The group memberships are recorded on ``ModelPlan.groups``.
+
     Raises ``ValueError`` if even the minimal per-layer plans exceed
     ``max_lut_bytes``.
     """
     fmt = fmt if fmt is not None else Float16Format(signed=signed)
-    shapes = dict(iter_linear_layers(params, min_features, predicate))
-    frontiers: dict[str, list[PlanPoint]] = {}
+    shapes = dict(
+        iter_linear_layers(params, min_features, predicate, convert_experts)
+    )
+    groups: list[tuple[str, ...]] = (
+        sorted(iter_sibling_groups(params, min_features, predicate))
+        if group_siblings
+        else []
+    )
+    in_group = {key for g in groups for key in g}
+    # a knapsack item is a group (all members move together) or a lone layer
+    items: list[tuple[str, ...]] = groups + [
+        (key,) for key in shapes if key not in in_group
+    ]
+    items.sort()
+
+    frontiers: dict[tuple[str, ...], list[PlanPoint]] = {}
     frontier_cache: dict[tuple[int, int], list[PlanPoint]] = {}
-    for key, (q, p) in shapes.items():
+    for item in items:
+        q, p = shapes[item[0]]
+        assert all(shapes[k] == (q, p) for k in item), item
         if (q, p) not in frontier_cache:
             pts = enumerate_plans(q, p, fmt, modes=modes, max_chunk=max_chunk)
             frontier_cache[(q, p)] = tradeoff_curve(pts)
         frontier = frontier_cache[(q, p)]
         if not frontier:
-            raise ValueError(f"no feasible LUT plan for layer {key} ({q}x{p})")
-        frontiers[key] = frontier
+            raise ValueError(f"no feasible LUT plan for {item[0]} ({q}x{p})")
+        frontiers[item] = frontier
 
-    choice = {key: 0 for key in frontiers}
-    spent = sum(fr[0].lut_bytes for fr in frontiers.values())
+    choice = {item: 0 for item in items}
+    spent = sum(len(item) * frontiers[item][0].lut_bytes for item in items)
     if spent > max_lut_bytes:
         raise ValueError(
             f"budget {max_lut_bytes} bytes < minimal model footprint "
-            f"{spent} bytes ({len(frontiers)} layers)"
+            f"{spent} bytes ({len(shapes)} layers)"
         )
 
     while True:
-        best = None  # (ops_saved_per_byte, -bytes_added, key, frontier index)
-        for key in sorted(frontiers):
-            fr = frontiers[key]
-            cur = fr[choice[key]]
-            for j in range(choice[key] + 1, len(fr)):
-                d_bytes = fr[j].lut_bytes - cur.lut_bytes
+        best = None  # (ops_saved_per_byte, -bytes_added, item, frontier index)
+        for item in items:
+            fr = frontiers[item]
+            cur = fr[choice[item]]
+            for j in range(choice[item] + 1, len(fr)):
+                d_bytes = len(item) * (fr[j].lut_bytes - cur.lut_bytes)
                 if spent + d_bytes > max_lut_bytes:
                     break  # frontier bytes increase monotonically
-                d_ops = cur.shift_add_ops - fr[j].shift_add_ops
+                d_ops = len(item) * (cur.shift_add_ops - fr[j].shift_add_ops)
                 score = (d_ops / d_bytes, -d_bytes)
                 if best is None or score > best[:2]:
-                    best = (*score, key, j)
+                    best = (*score, item, j)
         if best is None:
             break
-        _, _, key, j = best
-        spent += frontiers[key][j].lut_bytes - frontiers[key][choice[key]].lut_bytes
-        choice[key] = j
+        _, _, item, j = best
+        spent += len(item) * (
+            frontiers[item][j].lut_bytes - frontiers[item][choice[item]].lut_bytes
+        )
+        choice[item] = j
 
-    layers = {key: frontiers[key][choice[key]].plan for key in frontiers}
+    layers = {
+        key: frontiers[item][choice[item]].plan for item in items for key in item
+    }
     budget = None if math.isinf(max_lut_bytes) else int(max_lut_bytes)
-    return ModelPlan(layers=layers, budget_bytes=budget)
+    return ModelPlan(
+        layers=dict(sorted(layers.items())),
+        budget_bytes=budget,
+        groups=tuple(groups),
+    )

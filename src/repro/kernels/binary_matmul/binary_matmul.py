@@ -19,8 +19,6 @@ revisited output block.  fp32 accumulation throughout.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

@@ -4,7 +4,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.binary_matmul.binary_matmul import binary_matmul_pallas
 from repro.kernels.common import ceil_to, default_interpret, pad_axis

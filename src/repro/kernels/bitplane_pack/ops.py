@@ -4,7 +4,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.bitplane_pack.bitplane_pack import bitplane_pack_pallas
 from repro.kernels.common import ceil_to, default_interpret, pad_axis
@@ -13,7 +12,14 @@ from repro.kernels.common import ceil_to, default_interpret, pad_axis
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "kind", "bits", "frac", "signed", "m", "block_b", "block_k", "interpret",
+        "kind",
+        "bits",
+        "frac",
+        "signed",
+        "m",
+        "block_b",
+        "block_k",
+        "interpret",
     ),
 )
 def _packed(x, kind, bits, frac, signed, m, block_b, block_k, interpret):

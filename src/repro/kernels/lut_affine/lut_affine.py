@@ -52,7 +52,9 @@ def _kernel(codes_ref, tables_ref, scales_ref, out_ref, *, block_k: int, planes:
             plane = plane + rows.astype(jnp.float32)
         return acc + scales_ref[j, 0] * plane
 
-    acc = jax.lax.fori_loop(0, planes, plane_body, jnp.zeros(out_ref.shape, jnp.float32))
+    acc = jax.lax.fori_loop(
+        0, planes, plane_body, jnp.zeros(out_ref.shape, jnp.float32)
+    )
     out_ref[...] += acc
 
 

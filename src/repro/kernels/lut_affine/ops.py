@@ -8,7 +8,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.common import ceil_to, default_interpret, pad_axis
 from repro.kernels.lut_affine.lut_affine import (
@@ -19,11 +18,21 @@ from repro.kernels.lut_affine.lut_affine import (
 _VMEM_BUDGET = 4 * 2**20  # bytes of live blocks per grid step
 
 
-def _pick_blocks(B: int, k: int, E: int, p: int, n: int):
+def _pick_blocks(B: int, k: int, E: int, p: int, n: int, G: int = 1):
+    """Block sizes keeping live table tiles under ``_VMEM_BUDGET``.
+
+    ``G`` is the group dimension of :func:`lut_affine_grouped`: grouped
+    dispatches keep ``G`` projections' table tiles in flight across the
+    group-major grid, so the budget accounting scales by ``G`` (omitting it
+    let grouped blocks exceed the budget by up to ``G``x).
+    """
     block_p = min(ceil_to(p, 128), 512)
+    # tables dominate VMEM: G * kb * E * pb * 4 <= budget.  Shrink in
+    # 128-multiples only — Mosaic needs lane-dim blocks of 128.
+    while block_p > 128 and G * E * block_p * 4 > _VMEM_BUDGET:
+        block_p = max(128, (block_p // 2 + 127) // 128 * 128)
     block_b = min(ceil_to(B, 8), 128)
-    # tables dominate VMEM: kb * E * pb * 4 <= budget
-    max_kb = max(1, _VMEM_BUDGET // (E * block_p * 4))
+    max_kb = max(1, _VMEM_BUDGET // (G * E * block_p * 4))
     block_k = 1
     while block_k * 2 <= min(max_kb, k):
         block_k *= 2
@@ -97,7 +106,7 @@ def _lut_affine_grouped_padded(
 
 def lut_affine_grouped(
     codes: jax.Array,  # (..., n, k) int32 — one packed input for the group
-    tables: jax.Array,  # (G, k, E, p) — stacked same-shape projections
+    tables: jax.Array,  # (G, k, E, p) — same-shape projections, pre-stacked
     scales: jax.Array,  # (n,)
     biases: jax.Array | None = None,  # (G, p)
     *,
@@ -106,7 +115,9 @@ def lut_affine_grouped(
     """Fused batched decode path: ``out[g, ..., :] = lut_affine(codes,
     tables[g], scales) (+ biases[g])`` for all ``G`` projections in ONE
     Pallas grid — one dispatch per decode step for a whole QKV or gate/up
-    group instead of one per projection."""
+    group instead of one per projection.  ``tables`` is exactly the leaf a
+    converted ``core.convert.LUTGroup`` stores (stacked once at conversion
+    time), so serving never re-stacks per step."""
     if interpret is None:
         interpret = default_interpret()
     *lead, n, k = codes.shape
@@ -117,7 +128,7 @@ def lut_affine_grouped(
         B *= d
     codes2 = codes.reshape(B, n, k)
 
-    block_b, block_p, block_k = _pick_blocks(B, k, E, p, n)
+    block_b, block_p, block_k = _pick_blocks(B, k, E, p, n, G=G)
     Bp, pp, kp = ceil_to(B, block_b), ceil_to(p, block_p), ceil_to(k, block_k)
     codes2 = pad_axis(pad_axis(codes2, 0, Bp), 2, kp)
     # padded chunks index entry 0 of a zero table -> contribute nothing

@@ -79,7 +79,10 @@ def abstract_lut_params(cfg, ctx: Ctx, chunk_size: int = 1,
                         fsdp_tables: bool = False):
     """Shape/sharding stand-ins for a TableNet-converted parameter tree:
     eval_shape through the conversion pass, tables sharded on their output
-    dim like the weights they replace."""
+    dim like the weights they replace.  Works for both per-projection
+    ``LUTLinear`` and pre-stacked ``LUTGroup`` leaves: either way the
+    ``tables`` leaf ends in ``(..., k, entries, p)`` with ``p`` last and
+    ``k`` third-from-last, which is all the sharding rules key on."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.core.convert import convert_params
@@ -91,7 +94,10 @@ def abstract_lut_params(cfg, ctx: Ctx, chunk_size: int = 1,
     )
 
     def shard(path, leaf):
-        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        # dict levels carry DictKey (.key); LUTLinear/LUTGroup children
+        # carry GetAttrKey (.name)
+        name = getattr(path[-1], "key", None) or getattr(path[-1], "name", None)
+        name = name if name is not None else str(path[-1])
         if name == "tables":
             p_out = leaf.shape[-1]
             tp = "model" if ctx.shard.axis_size("model") and p_out % ctx.shard.axis_size("model") == 0 else None

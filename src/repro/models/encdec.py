@@ -17,7 +17,7 @@ from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models.layers import Ctx
 from repro.models.params import PSpec
-from repro.models.transformer import _remat_policy, lm_logits, stack_specs
+from repro.models.transformer import _remat_policy, stack_specs
 
 
 def encdec_specs(cfg: ModelConfig) -> dict:
@@ -55,9 +55,10 @@ def encode(params: dict, enc_embeds: jax.Array, ctx: Ctx) -> jax.Array:
     # bidirectional self-attention (full-visibility mask)
     def enc_attn_body(carry, lp):
         h = L.apply_norm(lp["ln1"], carry, cfg)
-        q = L._split_heads(L.linear(lp["attn"]["wq"], h, ctx), cfg.num_heads)
-        k = L._split_heads(L.linear(lp["attn"]["wk"], h, ctx), cfg.num_kv_heads)
-        v = L._split_heads(L.linear(lp["attn"]["wv"], h, ctx), cfg.num_kv_heads)
+        yq, yk, yv = L.fused_linears(lp["attn"], ("wq", "wk", "wv"), h, ctx)
+        q = L._split_heads(yq, cfg.num_heads)
+        k = L._split_heads(yk, cfg.num_kv_heads)
+        v = L._split_heads(yv, cfg.num_kv_heads)
         if ctx.shard.heads_shardable(cfg.num_heads):
             q = ctx.shard.constrain(q, "batch", None, "heads", None)
             k = ctx.shard.constrain(k, "batch", None, "kv_heads", None)
@@ -66,7 +67,8 @@ def encode(params: dict, enc_embeds: jax.Array, ctx: Ctx) -> jax.Array:
             q = ctx.shard.constrain(q, "batch", "qseq", None, None)
         mask = jnp.ones((B, 1, S, S), bool)
         o = L._sdpa(q, k, v, mask, ctx)
-        x2 = carry + ctx.shard.constrain(L.linear(lp["attn"]["wo"], o, ctx), "batch", None, None)
+        wo_out = L.linear(lp["attn"]["wo"], o, ctx)
+        x2 = carry + ctx.shard.constrain(wo_out, "batch", None, None)
         return x2 + L.mlp(lp["mlp"], L.apply_norm(lp["ln2"], x2, cfg), ctx), None
 
     fn = enc_attn_body
@@ -78,13 +80,15 @@ def encode(params: dict, enc_embeds: jax.Array, ctx: Ctx) -> jax.Array:
 
 
 def _cross_kv_from(params_layer: dict, enc_out: jax.Array, ctx: Ctx):
-    k = L._split_heads(L.linear(params_layer["wk"], enc_out, ctx), ctx.cfg.num_kv_heads)
-    v = L._split_heads(L.linear(params_layer["wv"], enc_out, ctx), ctx.cfg.num_kv_heads)
+    yk, yv = L.fused_linears(params_layer, ("wk", "wv"), enc_out, ctx)
+    k = L._split_heads(yk, ctx.cfg.num_kv_heads)
+    v = L._split_heads(yv, ctx.cfg.num_kv_heads)
     return k, v
 
 
-def decode_blocks(params, x, ctx: Ctx, positions, cache_layers, meta, enc_out,
-                  cross_cache=None):
+def decode_blocks(
+    params, x, ctx: Ctx, positions, cache_layers, meta, enc_out, cross_cache=None
+):
     cfg = ctx.cfg
 
     def body(carry, xs):
@@ -110,8 +114,7 @@ def decode_blocks(params, x, ctx: Ctx, positions, cache_layers, meta, enc_out,
         cache_layers if cache_layers is not None else {},
         cross_cache if cross_cache is not None else {},
     )
-    x, new_caches = jax.lax.scan(body, x, xs,
-                                 unroll=True if ctx.ex.inner_unroll else 1)
+    x, new_caches = jax.lax.scan(body, x, xs, unroll=True if ctx.ex.inner_unroll else 1)
     return x, (new_caches if cache_layers is not None else None)
 
 

@@ -54,8 +54,12 @@ def hybrid_specs(cfg: ModelConfig) -> dict:
 def _mamba_segment(params_slice, x, ctx: Ctx, cache_slice):
     def body(carry, xs):
         lp, lc = xs
-        h, new_c = mamba_block(lp["mix"], L.apply_norm(lp["ln"], carry, ctx.cfg), ctx,
-                               cache=lc if lc else None)
+        h, new_c = mamba_block(
+            lp["mix"],
+            L.apply_norm(lp["ln"], carry, ctx.cfg),
+            ctx,
+            cache=lc if lc else None,
+        )
         return carry + h, (new_c if new_c is not None else {})
 
     if ctx.ex.remat != "none":
@@ -108,9 +112,7 @@ def forward(
             sp = params["shared"]
             lc = None
             if shared_kv is not None:
-                lc = dict(
-                    jax.tree.map(lambda a: a[i], shared_kv), _meta=meta
-                )
+                lc = dict(jax.tree.map(lambda a: a[i], shared_kv), _meta=meta)
             h, new_kv = L.attention(
                 sp["attn"], L.apply_norm(sp["ln1"], x, cfg), ctx, positions, cache=lc
             )

@@ -2,25 +2,28 @@
 attention (GQA / sliding-window / MLA / cross) for both full-sequence and
 cached-decode paths, and MLPs.
 
-Every projection goes through :func:`linear`, which is where the paper's
-technique plugs into the zoo: converted parameter trees carry ``tables``
-instead of ``w`` and execute via the LUT path (jnp oracle under GSPMD, the
-Pallas kernel on real single-device runs); ``binary_matmul`` mode runs the
-beyond-paper bitplane-MXU path against the original weights.
+Every projection goes through :func:`linear` (or :func:`fused_linears` for
+sibling projections over one input), which is where the paper's technique
+plugs into the zoo: converted parameter trees carry ``core.convert``
+``LUTLinear`` / pre-stacked ``LUTGroup`` nodes — each with its conversion
+plan attached as static metadata — and execute via the LUT path (jnp
+oracle under GSPMD, the Pallas kernel on real single-device runs);
+``binary_matmul`` mode runs the beyond-paper bitplane-MXU path against the
+original weights.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Optional
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.convert import LUTGroup, LUTLinear
 from repro.core.lut import LUTPlan, apply_luts, pack_codes, plane_scales
-from repro.core.quantize import FixedPointFormat, Float16Format
+from repro.core.quantize import FixedPointFormat
 from repro.dist.sharding import ShardCtx
 from repro.models.params import PSpec
 
@@ -89,45 +92,50 @@ def linear_spec(
     return s
 
 
-def _lut_plan_for(q: int, p_out: int, num_entries: int) -> LUTPlan:
-    """Reconstruct the conversion-time plan from the stored table shape.
-    Index widths are multiples of 7 (signed fp16) or 6 (unsigned) — disjoint
-    sets below the practical limit, so the format is inferable."""
-    lb = int(math.log2(num_entries))
-    fmt = Float16Format(signed=lb % 7 == 0)
-    m = lb // fmt.fields_per_element
-    assert 2 ** (m * fmt.fields_per_element) == num_entries, num_entries
-    return LUTPlan(q, p_out, m, fmt, mode="bitplane")
+def _lut_apply(
+    tables: jax.Array,  # (k, entries, p)
+    b: jax.Array | None,
+    plan: LUTPlan,
+    x: jax.Array,
+    ctx: Ctx,
+    codes: jax.Array | None = None,  # pre-packed (shared across a group)
+    scales: jax.Array | None = None,
+) -> jax.Array:
+    """One converted projection under the plan stored at conversion time
+    (no shape sniffing — fixed-point and fp16 plans with colliding entry
+    counts both execute correctly)."""
+    ex = ctx.ex
+    assert x.shape[-1] == plan.in_features, (x.shape, plan)
+    if codes is None:
+        codes = pack_codes(x, plan)
+    if scales is None:
+        scales = jnp.asarray(plane_scales(plan), jnp.float32)
+    if ex.use_pallas:
+        from repro.kernels.lut_affine.ops import lut_affine
+
+        y = lut_affine(codes, tables, scales, bias=b)
+    elif ex.linear_mode == "onehot_mxu":
+        onehot = jax.nn.one_hot(codes, plan.num_entries, dtype=jnp.bfloat16)
+        per_plane = jnp.einsum(
+            "...nke,kep->...np",
+            onehot,
+            tables.astype(jnp.bfloat16),
+            preferred_element_type=jnp.float32,
+        )
+        y = jnp.einsum("...np,n->...p", per_plane, scales)
+        if b is not None:
+            y = y + b
+    else:
+        y = apply_luts(tables, codes, plan, bias=b)
+    return y.astype(x.dtype)
 
 
-def linear(p: dict, x: jax.Array, ctx: Ctx) -> jax.Array:
+def linear(p: dict | LUTLinear, x: jax.Array, ctx: Ctx) -> jax.Array:
     """y = x @ W (+ b), or its TableNet-converted equivalents."""
     ex = ctx.ex
+    if isinstance(p, LUTLinear):  # converted layer: paper-faithful LUT path
+        return _lut_apply(p.tables, p.b, p.plan, x, ctx)
     b = p.get("b")
-    if "tables" in p:  # converted layer: paper-faithful LUT execution
-        q = x.shape[-1]
-        _, entries, p_out = p["tables"].shape
-        plan = _lut_plan_for(q, p_out, entries)
-        codes = pack_codes(x, plan)
-        scales = jnp.asarray(plane_scales(plan), jnp.float32)
-        if ex.use_pallas:
-            from repro.kernels.lut_affine.ops import lut_affine
-
-            y = lut_affine(codes, p["tables"], scales, bias=b)
-        elif ex.linear_mode == "onehot_mxu":
-            onehot = jax.nn.one_hot(codes, plan.num_entries, dtype=jnp.bfloat16)
-            per_plane = jnp.einsum(
-                "...nke,kep->...np",
-                onehot,
-                p["tables"].astype(jnp.bfloat16),
-                preferred_element_type=jnp.float32,
-            )
-            y = jnp.einsum("...np,n->...p", per_plane, scales)
-            if b is not None:
-                y = y + b
-        else:
-            y = apply_luts(p["tables"], codes, plan, bias=b)
-        return y.astype(x.dtype)
     if ex.linear_mode == "binary_matmul":  # beyond-paper MXU bitplane path
         fmt = FixedPointFormat(ex.fixed_bits, ex.fixed_frac, signed=True)
         plan = LUTPlan(x.shape[-1], p["w"].shape[-1], 1, fmt, mode="bitplane")
@@ -154,57 +162,90 @@ def linear(p: dict, x: jax.Array, ctx: Ctx) -> jax.Array:
     return y
 
 
-def fused_linears(ps: list[dict], x: jax.Array, ctx: Ctx) -> list[jax.Array]:
-    """Apply several projections to the *same* input.
+def _group_apply(node: LUTGroup, wanted: list[str], x: jax.Array, ctx: Ctx):
+    """Execute (a subset of) a pre-stacked :class:`LUTGroup` against ``x``.
 
-    When ``ctx.ex.lut_grouped`` is set, converted (LUT) members with
-    identical table shapes — QKV with equal head counts, gate/up, or K/V —
-    pack the input once and execute as ONE grouped gather (a single Pallas
-    dispatch under ``use_pallas``) instead of one kernel per projection.
-    Everything else falls back to :func:`linear` member-wise, so the result
-    is always elementwise identical to the unfused path.  ``onehot_mxu``
-    has no grouped equivalent (bf16 MXU math differs from the f32 gather),
-    so that mode never fuses — identical-results wins over fusion.
+    The input is packed ONCE for the whole group.  When every member is
+    wanted and ``ctx.ex.lut_grouped`` is set, the stored ``(G, k, E, p)``
+    leaf feeds ``lut_affine_grouped`` (one Pallas dispatch) or a vmapped
+    oracle gather directly — zero per-step stack/concat, the tables were
+    stacked at conversion time.  Otherwise each wanted member indexes its
+    ``tables[g]`` slice and runs the per-projection path (bit-identical:
+    the grouped gather is just the vmap of the member gathers).
+    ``onehot_mxu`` has no grouped equivalent (bf16 MXU math differs from
+    the f32 gather), so that mode never fuses — identical-results wins
+    over fusion.
     """
-    outs: list[jax.Array | None] = [None] * len(ps)
-    groups: dict[tuple, list[int]] = {}
-    if ctx.ex.lut_grouped and ctx.ex.linear_mode != "onehot_mxu":
-        for i, pp in enumerate(ps):
-            if isinstance(pp, dict) and "tables" in pp and pp["tables"].ndim == 3:
-                groups.setdefault(tuple(pp["tables"].shape), []).append(i)
-    fused = [idxs for idxs in groups.values() if len(idxs) > 1]
-    in_fused = {i for idxs in fused for i in idxs}
-    for i, pp in enumerate(ps):
-        if i not in in_fused:
-            outs[i] = linear(pp, x, ctx)
-    for idxs in fused:
-        _, entries, p_out = ps[idxs[0]]["tables"].shape
-        plan = _lut_plan_for(x.shape[-1], p_out, entries)
-        codes = pack_codes(x, plan)
-        scales = jnp.asarray(plane_scales(plan), jnp.float32)
-        # stacked per call: a real concat under jit (tables are traced
-        # params).  Measured grouped decode still beats per-projection
-        # dispatch; storing pre-stacked groups at conversion time would
-        # remove this copy but changes the param-tree layout (ROADMAP).
-        tables = jnp.stack([ps[i]["tables"] for i in idxs])
-        has_bias = [ps[i].get("b") is not None for i in idxs]
-        biases = (
-            jnp.stack([ps[i]["b"] for i in idxs]) if all(has_bias) else None
-        )
+    plan = node.plan
+    codes = pack_codes(x, plan)
+    scales = jnp.asarray(plane_scales(plan), jnp.float32)
+    fuse = (
+        len(wanted) == len(node.members)
+        and ctx.ex.lut_grouped
+        and ctx.ex.linear_mode != "onehot_mxu"
+    )
+    outs: dict[str, jax.Array] = {}
+    if fuse:
+        stacked_b = node.b if isinstance(node.b, jax.Array) else None
         if ctx.ex.use_pallas:
             from repro.kernels.lut_affine.ops import lut_affine_grouped
 
-            y = lut_affine_grouped(codes, tables, scales, biases=biases)
+            y = lut_affine_grouped(codes, node.tables, scales, biases=stacked_b)
         else:
-            y = jax.vmap(lambda t: apply_luts(t, codes, plan))(tables)
-            if biases is not None:
-                y = y + biases[(slice(None),) + (None,) * (y.ndim - 2)]
-        for g, i in enumerate(idxs):
+            y = jax.vmap(lambda t: apply_luts(t, codes, plan))(node.tables)
+            if stacked_b is not None:
+                y = y + stacked_b.reshape(
+                    stacked_b.shape[:1] + (1,) * (y.ndim - 2) + stacked_b.shape[-1:]
+                )
+        for g, name in enumerate(node.members):
             yi = y[g]
-            if biases is None and has_bias[g]:
-                yi = yi + ps[i]["b"]
-            outs[i] = yi.astype(x.dtype)
-    return outs  # type: ignore[return-value]
+            if stacked_b is None and node.member_bias(g) is not None:
+                yi = yi + node.member_bias(g)
+            outs[name] = yi.astype(x.dtype)
+        return outs
+    for g, name in enumerate(node.members):
+        if name in wanted:
+            outs[name] = _lut_apply(
+                node.tables[g],
+                node.member_bias(g),
+                plan,
+                x,
+                ctx,
+                codes=codes,
+                scales=scales,
+            )
+    return outs
+
+
+def fused_linears(
+    parent: dict, names: Sequence[str], x: jax.Array, ctx: Ctx
+) -> list[jax.Array]:
+    """Apply the sibling projections ``names`` of ``parent`` to the *same*
+    input, returning outputs in ``names`` order.
+
+    Converted trees store fusable siblings as a single pre-stacked
+    :class:`LUTGroup` node (under ``"wk+wv"``-style keys) — those are read
+    directly (see :func:`_group_apply`); anything still stored per-name
+    (dense weights, per-projection ``LUTLinear``) falls back to
+    :func:`linear` member-wise, so the result is always elementwise
+    identical to the unfused path.
+    """
+    outs: dict[str, jax.Array] = {}
+    for node in parent.values():
+        if isinstance(node, LUTGroup):
+            wanted = [m for m in node.members if m in names]
+            if wanted:
+                outs.update(_group_apply(node, wanted, x, ctx))
+    for name in names:
+        if name not in outs:
+            outs[name] = linear(parent[name], x, ctx)
+    return [outs[name] for name in names]
+
+
+def member_linear(parent: dict, name: str, x: jax.Array, ctx: Ctx) -> jax.Array:
+    """One projection by name, whether stored per-name or inside a
+    pre-stacked group (e.g. cross-attention's lone ``wq``)."""
+    return fused_linears(parent, (name,), x, ctx)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -310,7 +351,7 @@ def attention(
     cfg, sh = ctx.cfg, ctx.shard
     B, S, _ = x.shape
     if cross_kv is None:
-        yq, yk, yv = fused_linears([p["wq"], p["wk"], p["wv"]], x, ctx)
+        yq, yk, yv = fused_linears(p, ("wq", "wk", "wv"), x, ctx)
         q = _split_heads(yq, cfg.num_heads)
         k = _split_heads(yk, cfg.num_kv_heads)
         v = _split_heads(yv, cfg.num_kv_heads)
@@ -318,7 +359,7 @@ def attention(
             q = rope(q, positions, cfg.rope_theta)
             k = rope(k, positions, cfg.rope_theta)
     else:
-        q = _split_heads(linear(p["wq"], x, ctx), cfg.num_heads)
+        q = _split_heads(member_linear(p, "wq", x, ctx), cfg.num_heads)
         k, v = cross_kv
         if cfg.pos == "rope":
             q = rope(q, positions, cfg.rope_theta)
@@ -380,7 +421,9 @@ def mla_specs(cfg: ModelConfig) -> dict:
     s = {
         "wq_a": linear_spec(d, cfg.q_lora_rank, axes=("embed", None)),
         "q_norm": {"scale": PSpec((cfg.q_lora_rank,), (None,), init="ones")},
-        "wq_b": linear_spec(cfg.q_lora_rank, H * (nope + rdim), axes=(None, "heads_flat")),
+        "wq_b": linear_spec(
+            cfg.q_lora_rank, H * (nope + rdim), axes=(None, "heads_flat")
+        ),
         "wkv_a": linear_spec(d, cfg.kv_lora_rank + rdim, axes=("embed", None)),
         "kv_norm": {"scale": PSpec((cfg.kv_lora_rank,), (None,), init="ones")},
         "wk_b": linear_spec(cfg.kv_lora_rank, H * nope, axes=(None, "heads_flat")),
@@ -407,23 +450,28 @@ def mla_attention(
     H = cfg.num_heads
     nope, rdim, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
 
-    q = linear(p["wq_b"], _rms(linear(p["wq_a"], x, ctx), p["q_norm"]["scale"], cfg.norm_eps), ctx)
+    q_lat_in = _rms(linear(p["wq_a"], x, ctx), p["q_norm"]["scale"], cfg.norm_eps)
+    q = linear(p["wq_b"], q_lat_in, ctx)
     q = q.reshape(B, S, H, nope + rdim)
     # 40 heads don't shard 16-way: fall back to query-position sharding so
     # the (B, H, Sq, Sk) score tensors stay model-sharded (DESIGN.md §4)
     heads_tp = sh.heads_shardable(H)
     if S > 1:
         q = sh.constrain(
-            q, "batch", None if heads_tp else "qseq", "heads" if heads_tp else None, None
+            q,
+            "batch",
+            None if heads_tp else "qseq",
+            "heads" if heads_tp else None,
+            None,
         )
     q_nope, q_rope = q[..., :nope], q[..., nope:]
     q_rope = rope(q_rope, positions, cfg.rope_theta)
 
     kv = linear(p["wkv_a"], x, ctx)
     c_kv = _rms(kv[..., : cfg.kv_lora_rank], p["kv_norm"]["scale"], cfg.norm_eps)
-    k_rope = rope(kv[..., cfg.kv_lora_rank :][:, :, None, :], positions, cfg.rope_theta)[
-        :, :, 0
-    ]  # (B, S, rdim) shared across heads
+    k_rope = rope(
+        kv[..., cfg.kv_lora_rank :][:, :, None, :], positions, cfg.rope_theta
+    )[:, :, 0]  # (B, S, rdim) shared across heads
 
     if cache is not None and S == 1:
         from repro.serve.cache import update_mla_cache
@@ -446,15 +494,20 @@ def mla_attention(
     wk_b = p["wk_b"]["w"].reshape(cfg.kv_lora_rank, H, nope)
     q_lat = jnp.einsum("bshn,lhn->bshl", q_nope, wk_b)  # (B, S, H, kv_lora)
     scores = (
-        jnp.einsum("bshl,btl->bhst", q_lat, c_kv_all, preferred_element_type=jnp.float32)
+        jnp.einsum(
+            "bshl,btl->bhst", q_lat, c_kv_all, preferred_element_type=jnp.float32
+        )
         + jnp.einsum(
             "bshr,btr->bhst", q_rope, k_rope_all, preferred_element_type=jnp.float32
         )
     ) / math.sqrt(nope + rdim)
     if S > 1:
         scores = sh.constrain(
-            scores, "batch", "heads" if heads_tp else None,
-            None if heads_tp else "qseq", None,
+            scores,
+            "batch",
+            "heads" if heads_tp else None,
+            None if heads_tp else "qseq",
+            None,
         )
     probs = jax.nn.softmax(scores + _mask_bias(mask), axis=-1).astype(x.dtype)
     ctx_lat = jnp.einsum("bhst,btl->bshl", probs, c_kv_all)  # (B, S, H, kv_lora)
@@ -490,7 +543,7 @@ def mlp(p: dict, x: jax.Array, ctx: Ctx) -> jax.Array:
         h = jnp.square(jax.nn.relu(h)) if ctx.cfg.act == "relu2" else jax.nn.gelu(h)
         h = sh.constrain(h, "batch", None, "mlp")
         return sh.constrain(linear(p["w_out"], h, ctx), "batch", None, None)
-    g, u = fused_linears([p["w_gate"], p["w_up"]], x, ctx)
+    g, u = fused_linears(p, ("w_gate", "w_up"), x, ctx)
     h = jax.nn.silu(g) * u
     h = sh.constrain(h, "batch", None, "mlp")
     return sh.constrain(linear(p["w_down"], h, ctx), "batch", None, None)

@@ -9,7 +9,7 @@ frontends are stubs per the assignment.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 

@@ -15,7 +15,6 @@ loss (Switch §2.2), returned alongside the output.
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +22,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.configs.base import ModelConfig
-from repro.models.layers import Ctx, linear, linear_spec, mlp, mlp_specs
+from repro.models.layers import Ctx, mlp, mlp_specs
 from repro.models.params import PSpec
 
 
@@ -49,9 +48,7 @@ def _route(x: jax.Array, router_w: jax.Array, cfg: ModelConfig):
     weights = weights / jnp.sum(weights, -1, keepdims=True)
     # Switch-style load-balance loss: E * sum_e f_e * P_e
     E = cfg.num_experts
-    f_e = jnp.mean(
-        jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=1), axis=0
-    )
+    f_e = jnp.mean(jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=1), axis=0)
     P_e = jnp.mean(probs, axis=0)
     aux = E * jnp.sum(f_e * P_e)
     return weights.astype(x.dtype), idx, aux
@@ -80,6 +77,15 @@ def _moe_local(x, router_w, w_gate, w_up, w_down, *, cfg: ModelConfig, psum_axes
 
 def moe_ffn(p: dict, x: jax.Array, ctx: Ctx):
     """(B, S, d) -> (B, S, d), aux_loss. shard_map'd when a mesh is active."""
+    from repro.core.convert import LUTLinear
+
+    if isinstance(p.get("w_gate"), LUTLinear):
+        raise NotImplementedError(
+            "convert_params(convert_experts=True) builds expert LUT tables "
+            "for size/op accounting, but moe_ffn has no LUT execution path "
+            "yet (ragged_dot needs the raw expert weights) — serve MoE "
+            "models with experts left dense (the default)"
+        )
     cfg, sh = ctx.cfg, ctx.shard
     B, S, d = x.shape
     xt = x.reshape(B * S, d)

@@ -12,7 +12,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import Ctx, linear, linear_spec
-from repro.models.params import PSpec
 
 
 def linear_classifier_specs() -> dict:
@@ -50,9 +49,7 @@ def im2col(x: jax.Array, k: int) -> jax.Array:
     B, H, W, C = x.shape
     pad = k // 2
     xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
-    cols = [
-        xp[:, i : i + H, j : j + W, :] for i in range(k) for j in range(k)
-    ]
+    cols = [xp[:, i : i + H, j : j + W, :] for i in range(k) for j in range(k)]
     return jnp.concatenate(cols, axis=-1)
 
 

@@ -24,12 +24,20 @@ from repro.models.params import PSpec
 def rwkv_specs(cfg: ModelConfig) -> dict:
     d, H, hd = cfg.d_model, cfg.rwkv_heads, cfg.rwkv_head_dim
     r = cfg.decay_lora_rank
-    mix = lambda: PSpec((d,), (None,), init="zeros")
+    def mix():
+        return PSpec((d,), (None,), init="zeros")
+
     return {
         "time": {
-            "mu_r": mix(), "mu_k": mix(), "mu_v": mix(), "mu_w": mix(), "mu_g": mix(),
-            "w_r": linear_spec(d, d), "w_k": linear_spec(d, d),
-            "w_v": linear_spec(d, d), "w_g": linear_spec(d, d),
+            "mu_r": mix(),
+            "mu_k": mix(),
+            "mu_v": mix(),
+            "mu_w": mix(),
+            "mu_g": mix(),
+            "w_r": linear_spec(d, d),
+            "w_k": linear_spec(d, d),
+            "w_v": linear_spec(d, d),
+            "w_g": linear_spec(d, d),
             "w_o": linear_spec(d, d, axes=("heads_flat", "embed")),
             "decay_base": PSpec((d,), (None,), init="zeros"),
             "decay_A": PSpec((d, r), ("embed", None), scale=0.01),
@@ -39,7 +47,8 @@ def rwkv_specs(cfg: ModelConfig) -> dict:
             "ln_bias": PSpec((d,), (None,), init="zeros"),
         },
         "channel": {
-            "mu_k": mix(), "mu_r": mix(),
+            "mu_k": mix(),
+            "mu_r": mix(),
             "w_k": linear_spec(d, cfg.d_ff, axes=("embed", "mlp")),
             "w_v": linear_spec(cfg.d_ff, d, axes=("mlp", "embed")),
             "w_r": linear_spec(d, d),
@@ -102,7 +111,9 @@ def wkv_chunked(
         )
         return new_s, y
 
-    final, ys = jax.lax.scan(chunk_step, s0, (rc, kc, vc, lw), unroll=True if unroll else 1)
+    final, ys = jax.lax.scan(
+        chunk_step, s0, (rc, kc, vc, lw), unroll=True if unroll else 1
+    )
     y = jnp.moveaxis(ys, 0, 1).reshape(B, L, H, V)
     return y, final
 
@@ -127,8 +138,13 @@ def _group_norm(x: jax.Array, H: int, scale, bias, eps) -> jax.Array:
     return y * scale + bias
 
 
-def rwkv_time_mix(p: dict, x: jax.Array, ctx: Ctx, last: jax.Array | None,
-                  wkv_state: jax.Array | None):
+def rwkv_time_mix(
+    p: dict,
+    x: jax.Array,
+    ctx: Ctx,
+    last: jax.Array | None,
+    wkv_state: jax.Array | None,
+):
     """Returns (out, new_last, new_wkv_state)."""
     cfg = ctx.cfg
     B, L, d = x.shape
@@ -149,8 +165,9 @@ def rwkv_time_mix(p: dict, x: jax.Array, ctx: Ctx, last: jax.Array | None,
     ).reshape(B, L, H, hd)
 
     if wkv_state is None:
-        y, new_state = wkv_chunked(r, k, v, logw, p["u"], chunk=_pick_chunk(L),
-                                   unroll=ctx.ex.inner_unroll)
+        y, new_state = wkv_chunked(
+            r, k, v, logw, p["u"], chunk=_pick_chunk(L), unroll=ctx.ex.inner_unroll
+        )
     elif L == 1:  # decode: O(1) recurrent update
         y, new_state = wkv_decode_step(r, k, v, logw, p["u"], wkv_state)
     else:  # prefill continuing from cached state
@@ -236,9 +253,7 @@ def forward(params, tokens, ctx: Ctx, positions=None, cache=None, embeds=None):
     if ctx.ex.remat != "none":
         body = jax.checkpoint(body, policy=_remat_policy(ctx.ex.remat))
     xs = (params["blocks"], cache_layers if cache_layers is not None else {})
-    x, new_layers = jax.lax.scan(
-        body, x, xs, unroll=True if ctx.ex.inner_unroll else 1
-    )
+    x, new_layers = jax.lax.scan(body, x, xs, unroll=True if ctx.ex.inner_unroll else 1)
     x = L.apply_norm(params["ln_f"], x, cfg)
     if ctx.ex.logits == "last":
         x = x[:, -1:]

@@ -78,9 +78,7 @@ def ssd_chunked(
     # --- intra-chunk (diagonal blocks) ---
     Lmat = jnp.exp(_segsum(jnp.moveaxis(dA, -1, -2))).astype(cd)  # (B,nc,H,c,c)
     att = jnp.einsum("bcin,bcjn,bchij->bchij", Cc, Bc, Lmat)
-    y_diag = jnp.einsum(
-        "bchij,bcjhp->bcihp", att, xdt, preferred_element_type=f32
-    )
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", att, xdt, preferred_element_type=f32)
 
     # --- chunk states ---
     decay_out = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs).astype(cd)  # (B, nc, c, H)
@@ -110,7 +108,10 @@ def ssd_chunked(
 
     decay_in = jnp.exp(dA_cs).astype(cd)  # (B, nc, c, H)
     y_inter = jnp.einsum(
-        "bcin,bcih,bchpn->bcihp", Cc, decay_in, entering.astype(cd),
+        "bcin,bcih,bchpn->bcihp",
+        Cc,
+        decay_in,
+        entering.astype(cd),
         preferred_element_type=f32,
     )
 
@@ -140,9 +141,7 @@ def _causal_conv_full(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
     """Depthwise causal conv over (B, L, C) with taps (K, C)."""
     K = w.shape[0]
     pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
-    out = sum(
-        pad[:, i : i + xBC.shape[1], :] * w[i][None, None, :] for i in range(K)
-    )
+    out = sum(pad[:, i : i + xBC.shape[1], :] * w[i][None, None, :] for i in range(K))
     return out + b
 
 
@@ -180,8 +179,10 @@ def mamba_block(
 
     chunk = ctx.ex.ssd_chunk or _pick_chunk(L)
     if cache is None:
-        y, _ = ssd_chunked(xs, dt, A, Bm, Cm, chunk=min(chunk, L),
-                           compute_dtype=jnp.bfloat16 if ctx.ex.ssd_bf16 else jnp.float32)
+        compute_dtype = jnp.bfloat16 if ctx.ex.ssd_bf16 else jnp.float32
+        y, _ = ssd_chunked(
+            xs, dt, A, Bm, Cm, chunk=min(chunk, L), compute_dtype=compute_dtype
+        )
     elif L == 1:  # decode: O(1) recurrent update
         y, new_state = ssd_decode_step(xs, dt, A, Bm, Cm, cache["state"])
         new_cache = {"conv": new_conv, "state": new_state}

@@ -16,7 +16,7 @@ from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models.layers import Ctx
 from repro.models.moe import moe_ffn, moe_specs
-from repro.models.params import PSpec, is_spec, tree_map_specs
+from repro.models.params import PSpec, tree_map_specs
 
 
 def stack_specs(tree, n: int):
@@ -124,9 +124,11 @@ def forward(
     B, S, _ = x.shape
     if positions is None:
         if cache is not None:
-            positions = cache["index"][:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+            steps = jnp.arange(S, dtype=jnp.int32)[None, :]
+            positions = cache["index"][:, None] + steps
         else:
-            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+            steps = jnp.arange(S, dtype=jnp.int32)[None, :]
+            positions = jnp.broadcast_to(steps, (B, S))
 
     meta = None
     new_cache = None

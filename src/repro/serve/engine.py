@@ -147,17 +147,27 @@ class BatchingEngine:
 
     def _admit(self):
         for s in range(self.num_slots):
-            if self.slots[s] is None and self.queue:
+            # a request that finishes at prefill (max_new=1 or EOS in its
+            # first token) frees the slot immediately, so keep admitting
+            # into the same slot until one survives into decode
+            while self.slots[s] is None and self.queue:
                 req = self.queue.pop(0)
-                self.slots[s] = req
+                if req.max_new <= 0:
+                    req.done = True  # nothing requested; don't pay a prefill
+                    continue
                 # per-slot prefill on a batch-1 cache, then splice into slot s
                 sub = make_cache(self.ctx.cfg, 1, self.max_len, self.ctx)
                 logits, sub = self._prefill1(
                     self.params, {"tokens": req.prompt[None, :]}, sub
                 )
-                self.cache = _splice_cache(self.cache, sub, s)
                 tok = int(jnp.argmax(logits[0, -1]))
                 req.generated.append(tok)
+                hit_eos = self.eos_id is not None and tok == self.eos_id
+                if req.max_new <= 1 or hit_eos:
+                    req.done = True  # prefill already emitted the only token
+                    continue
+                self.slots[s] = req
+                self.cache = _splice_cache(self.cache, sub, s)
                 self._next_tok = self._next_tok.at[s, 0].set(tok)
                 self._remaining[s] = req.max_new - 1
 

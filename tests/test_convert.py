@@ -93,7 +93,9 @@ def test_expert_stack_conversion_builds_correct_tables():
     )
     blk = jax.tree.map(lambda a: a[0], lut_params["blocks"])  # layer 0
     w3 = jax.tree.map(lambda a: a[0], params["blocks"])["ffn"]["w_gate"]  # (E, q, p)
-    tables = blk["ffn"]["w_gate"]["tables"]
+    node = blk["ffn"]["w_gate"]
+    tables = node.tables
+    assert node.plan.chunk_size == 1 and node.plan.fmt.signed
     E, q, p = w3.shape
     plan = LUTPlan(q, p, 1, Float16Format(signed=True))
     want0 = build_luts(w3[0], plan)

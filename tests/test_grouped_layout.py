@@ -1,0 +1,294 @@
+"""Conversion-time grouped table layout.
+
+Covers the pre-stacked ``LUTGroup`` layout end to end: conversion emits
+kernel-ready ``(G, k, E, p)`` leaves, plans are explicit static metadata
+(no shape sniffing — the chunk-7 unsigned fixed-point vs chunk-1 signed
+fp16 entry-count collision is a regression test here), a grouped decode
+step contains ZERO per-step stack/concat of table-sized operands at the
+jaxpr level, plans never split groups, planner/converter eligibility
+mismatches raise, and the whole layout round-trips through
+``save_checkpoint(aux=)`` onto an abstract template (elastic restore)
+while serving identically.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import core as jax_core
+
+from repro.configs.base import get_config
+from repro.core.convert import LUTGroup, LUTLinear, convert_params
+from repro.core.lut import LUTPlan, quantized_matmul_reference
+from repro.core.planner import ModelPlan, plan_model
+from repro.core.quantize import FixedPointFormat, Float16Format
+from repro.dist.checkpoint import load_aux, restore_checkpoint, save_checkpoint
+from repro.models.layers import Ctx, ExecCfg, fused_linears, linear
+from repro.models.model import model_specs
+from repro.models.params import abstract_params, init_params
+from repro.serve.engine import generate, make_cache, make_decode_step
+
+
+def _lm(arch="granite_8b", seed=0):
+    cfg = get_config(arch, reduced=True)
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(seed))
+    return cfg, params
+
+
+def _lut_groups(tree) -> list:
+    out = []
+    if isinstance(tree, LUTGroup):
+        out.append(tree)
+    elif isinstance(tree, dict):
+        for v in tree.values():
+            out.extend(_lut_groups(v))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Layout: conversion pre-stacks sibling groups
+# ---------------------------------------------------------------------------
+
+
+def test_convert_emits_prestacked_groups_matching_flat_layout():
+    """Each LUTGroup leaf is exactly the member tables stacked on the group
+    axis (just before the chunk axis) — byte-identical to the flat
+    per-projection conversion under the same plan."""
+    _, params = _lm()
+    grouped, grep = convert_params(params, chunk_size=1)
+    flat, frep = convert_params(params, chunk_size=1, group_siblings=False)
+    assert grep.grouped > 0
+    assert grep.converted == frep.converted  # grouping changes layout only
+    assert grep.table_bytes == frep.table_bytes
+
+    def walk(g, f):
+        if isinstance(g, LUTGroup):
+            assert g.tables.ndim == f[g.members[0]].tables.ndim + 1
+            for i, name in enumerate(g.members):
+                member = f[name]
+                assert isinstance(member, LUTLinear)
+                assert g.plan == member.plan
+                got = np.asarray(g.tables[..., i, :, :, :])
+                np.testing.assert_array_equal(got, np.asarray(member.tables))
+            return
+        if isinstance(g, dict):
+            for k, v in g.items():
+                walk(v, f if isinstance(v, LUTGroup) else f[k])
+
+    walk(grouped, flat)
+
+
+def test_mixed_bias_group_fuses_and_matches_per_member():
+    """A group where only some members carry a bias still fuses (per-member
+    bias leaves) and reproduces the per-projection path bit-for-bit."""
+    q, p = 24, 16
+    kw, kb, kx = jax.random.split(jax.random.PRNGKey(1), 3)
+    parent = {
+        "ffn": {
+            "w_gate": {
+                "w": jax.random.normal(kw, (q, p)),
+                "b": jax.random.normal(kb, (p,)),
+            },
+            "w_up": {"w": jax.random.normal(kb, (q, p))},
+        }
+    }
+    grouped, rep = convert_params(parent, chunk_size=1)
+    assert rep.grouped == 1
+    node = grouped["ffn"]["w_gate+w_up"]
+    assert isinstance(node, LUTGroup)
+    assert node.members == ("w_gate", "w_up")
+    assert isinstance(node.b, tuple) and node.b[1] is None
+
+    flat, _ = convert_params(parent, chunk_size=1, group_siblings=False)
+    cfg = get_config("granite_8b", reduced=True)
+    ctx = Ctx(cfg, ex=ExecCfg(remat="none", lut_grouped=True))
+    x = jax.random.normal(kx, (3, q))
+    g, u = fused_linears(grouped["ffn"], ("w_gate", "w_up"), x, ctx)
+    g_ref = linear(flat["ffn"]["w_gate"], x, ctx)
+    u_ref = linear(flat["ffn"]["w_up"], x, ctx)
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(g_ref))
+    np.testing.assert_array_equal(np.asarray(u), np.asarray(u_ref))
+
+
+# ---------------------------------------------------------------------------
+# Plan metadata replaces shape sniffing (the entry-count collision)
+# ---------------------------------------------------------------------------
+
+
+def test_colliding_entry_counts_both_execute_correctly():
+    """An unsigned fixed-point chunk-7 bitplane table and a signed-fp16
+    chunk-1 table both have 2**7 entries; the retired shape-sniffing
+    (`_lut_plan_for`) could only decode one of them.  With the plan stored
+    on the node, both reproduce their quantised-matmul reference."""
+    q, p = 12, 5
+    kw, kx = jax.random.split(jax.random.PRNGKey(2))
+    w = jax.random.normal(kw, (q, p))
+    b = jnp.arange(p, dtype=jnp.float32) * 0.1
+    cfg = get_config("granite_8b", reduced=True)
+    ctx = Ctx(cfg, ex=ExecCfg(remat="none"))
+
+    fx_plan = LUTPlan(q, p, 7, FixedPointFormat(8, 4, signed=False))
+    fp_plan = LUTPlan(q, p, 1, Float16Format(signed=True))
+    assert fx_plan.num_entries == fp_plan.num_entries == 2**7  # the collision
+
+    for plan, x in [
+        (fx_plan, jax.random.uniform(kx, (4, q)) * 10.0),  # unsigned range
+        (fp_plan, jax.random.normal(kx, (4, q))),
+    ]:
+        conv, rep = convert_params(
+            {"fc": {"w": w, "b": b}}, plan=ModelPlan(layers={"fc": plan})
+        )
+        assert rep.converted == 1
+        assert conv["fc"].plan == plan  # explicit metadata, not inferred
+        got = linear(conv["fc"], x, ctx)
+        want = quantized_matmul_reference(x, w, b, plan)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# Group-aware planning + eligibility alignment
+# ---------------------------------------------------------------------------
+
+
+def test_plan_model_never_splits_groups():
+    _, params = _lm()
+    full = plan_model(params, float("inf"), max_chunk=2)
+    half = plan_model(params, full.total_lut_bytes // 2, max_chunk=2)
+    for mp in (full, half):
+        assert mp.groups, "group-aware planning found no fusable siblings"
+        for group in mp.groups:
+            plans = {mp.layers[key] for key in group}
+            assert len(plans) == 1, (group, plans)
+    # groups survive the JSON round trip
+    back = ModelPlan.from_json(half.to_json())
+    assert back.groups == half.groups
+
+
+def test_plan_entry_vetoed_by_predicate_raises():
+    params = {
+        "a": {"w": jnp.ones((8, 4))},
+        "b": {"w": jnp.ones((8, 4))},
+    }
+    mp = plan_model(params, float("inf"), max_chunk=1)
+    assert set(mp.layers) == {"a", "b"}
+    with pytest.raises(ValueError, match="never consumed"):
+        convert_params(params, plan=mp, predicate=lambda path, _: path[0] != "a")
+    with pytest.raises(ValueError, match="never consumed"):
+        convert_params(params, plan=mp, min_features=9)
+
+
+@pytest.mark.slow  # MoE param init + expert table build: ~20s
+def test_expert_plan_alignment_with_converter():
+    """plan_model(convert_experts=True) and convert_params agree on expert
+    eligibility; dropping the flag on the converter side raises instead of
+    silently leaving planned experts dense."""
+    cfg, params = _lm("qwen2_moe_a2_7b", seed=6)
+
+    def experts_only(path, node):
+        return node["w"].ndim == 4  # (L, E, q, p) expert stacks
+
+    mp = plan_model(
+        params, float("inf"), max_chunk=1,
+        predicate=experts_only, convert_experts=True,
+    )
+    assert mp.layers and all("w_" in k.rsplit("/", 1)[-1] for k in mp.layers)
+    with pytest.raises(ValueError, match="never consumed"):
+        convert_params(params, plan=mp, predicate=experts_only)
+    lut, rep = convert_params(
+        params, plan=mp, predicate=experts_only, convert_experts=True
+    )
+    assert rep.converted == len(mp.layers)
+    # expert conversion is accounting-only: serving converted experts must
+    # fail with a clear message, not a TypeError inside ragged_dot
+    from repro.models.model import model_forward
+
+    tokens = jnp.zeros((1, 4), jnp.int32)
+    ctx = Ctx(cfg, ex=ExecCfg(remat="none"))
+    with pytest.raises(NotImplementedError, match="no LUT execution"):
+        model_forward(lut, {"tokens": tokens}, ctx)
+
+
+# ---------------------------------------------------------------------------
+# The zero-copy guarantee, at the jaxpr level
+# ---------------------------------------------------------------------------
+
+
+def _iter_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            sub = v if isinstance(v, (list, tuple)) else (v,)
+            for s in sub:
+                if isinstance(s, jax_core.ClosedJaxpr):
+                    yield from _iter_eqns(s.jaxpr)
+                elif isinstance(s, jax_core.Jaxpr):
+                    yield from _iter_eqns(s)
+
+
+def test_decode_step_jaxpr_has_no_table_sized_concat():
+    """The acceptance bar: with ``lut_grouped=True`` over the pre-stacked
+    layout, tracing ``decode_step`` yields NO concatenate/stack whose
+    output is as large as even one member's table — the re-stack the old
+    layout paid on every decode step is gone from the program itself."""
+    cfg, params = _lm()
+    lut_params, rep = convert_params(params, chunk_size=1)
+    assert rep.grouped > 0
+    groups = _lut_groups(lut_params)
+    assert groups
+    min_member_elems = min(
+        int(np.prod(g.tables.shape[-3:])) for g in groups
+    )
+
+    ctx = Ctx(cfg, ex=ExecCfg(remat="none", lut_grouped=True))
+    decode = make_decode_step(ctx)
+    cache = make_cache(cfg, 1, 16, ctx)
+    tokens = jnp.zeros((1, 1), jnp.int32)
+    jaxpr = jax.make_jaxpr(decode)(lut_params, cache, tokens)
+
+    offenders = []
+    for eqn in _iter_eqns(jaxpr.jaxpr):
+        if eqn.primitive.name != "concatenate":
+            continue
+        out_elems = max(int(np.prod(v.aval.shape)) for v in eqn.outvars)
+        if out_elems >= min_member_elems:
+            offenders.append((eqn.primitive.name, out_elems))
+    assert not offenders, (
+        f"decode_step concatenates table-sized operands per step: "
+        f"{offenders} (threshold {min_member_elems} elems)"
+    )
+
+
+# ---------------------------------------------------------------------------
+# plan -> convert -> checkpoint(aux) -> elastic restore -> serve
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow  # converts + compiles grouped decode twice: ~60s
+def test_grouped_layout_checkpoint_restore_serve_equivalence(tmp_path):
+    """The converted (grouped) tree checkpoints and restores onto an
+    abstract template built from the plan alone — no original weights —
+    and serves token-identically through the grouped decode path."""
+    cfg, params = _lm()
+    uniform = plan_model(params, float("inf"), max_chunk=2)
+    mp = plan_model(params, uniform.total_lut_bytes // 2, max_chunk=2)
+    lut, rep = convert_params(params, plan=mp)
+    assert rep.grouped == len(mp.groups)
+
+    ckpt = str(tmp_path / "ckpt")
+    save_checkpoint(ckpt, 3, lut, aux={"model_plan": mp.to_json()})
+
+    # restore side: only the config and the aux plan are available
+    mp_back = ModelPlan.from_json(load_aux(ckpt, 3)["model_plan"])
+    assert mp_back.groups == mp.groups
+    template = jax.eval_shape(
+        lambda p: convert_params(p, plan=mp_back)[0],
+        abstract_params(model_specs(cfg)),
+    )
+    restored = restore_checkpoint(ckpt, 3, template)
+
+    gctx = Ctx(cfg, ex=ExecCfg(remat="none", lut_grouped=True))
+    tokens = jax.random.randint(jax.random.PRNGKey(9), (2, 6), 0, cfg.vocab_size)
+    want = generate(lut, gctx, tokens, max_new=4)
+    got = generate(restored, gctx, tokens, max_new=4)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

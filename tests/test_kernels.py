@@ -122,6 +122,29 @@ def test_lut_affine_grouped_leading_dims_and_bias():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
 
 
+def test_pick_blocks_respects_vmem_budget_for_groups():
+    """Regression: block selection must account for the group dim G — the
+    grouped grid keeps G projections' table tiles live, so the VMEM bound
+    is G * block_k * E * block_p * 4 bytes, not the per-projection bound."""
+    from repro.kernels.lut_affine.ops import _VMEM_BUDGET, _pick_blocks
+
+    shapes = [
+        (7, 128, 64),
+        (64, 2**12, 512),
+        (32, 2**14, 96),
+        (128, 2**7, 4096),
+        (64, 2**12, 300),  # ragged p: shrink must stay on 128-multiples
+    ]
+    for G in (1, 2, 3, 8):
+        for k, E, p in shapes:
+            _, block_p, block_k = _pick_blocks(8, k, E, p, 11, G=G)
+            assert block_p % 128 == 0, (G, k, E, p, block_p)  # Mosaic lane dim
+            if G * E * 128 * 4 > _VMEM_BUDGET:
+                continue  # even a minimal tile cannot fit; nothing to assert
+            live = G * block_k * E * block_p * 4
+            assert live <= _VMEM_BUDGET, (G, k, E, p, block_p, block_k, live)
+
+
 # ---------------------------------------------------------------------------
 # bitplane_pack
 # ---------------------------------------------------------------------------

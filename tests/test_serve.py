@@ -136,6 +136,51 @@ def test_lut_grouped_decode_matches_ungrouped():
     np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
 
 
+def test_engine_exact_token_budget_and_prefill_finish():
+    """Regression: a max_new=1 request must emit exactly one token (the
+    prefill token) and never occupy a decode slot; a max_new=2 request
+    runs exactly one decode step."""
+    cfg, ctx, params, _, _ = _setup("granite_8b")
+    prompts = [
+        jnp.asarray([1, 2, 3], jnp.int32),
+        jnp.asarray([4, 5], jnp.int32),
+        jnp.asarray([6, 7, 8], jnp.int32),
+        jnp.asarray([9, 10], jnp.int32),
+    ]
+    budgets = (1, 1, 2, 0)
+    eng = BatchingEngine(params, ctx, num_slots=2, max_len=32)
+    reqs = [
+        Request(uid=i, prompt=p, max_new=n)
+        for i, (p, n) in enumerate(zip(prompts, budgets))
+    ]
+    for r in reqs:
+        eng.submit(r)
+    steps = 0
+    while eng.step():
+        steps += 1
+    assert steps == 1, steps  # only the max_new=2 request decodes, once
+    for r, p, n in zip(reqs, prompts, budgets):
+        assert r.done
+        assert len(r.generated) == n, (r.uid, r.generated)
+        if n:
+            want = generate(params, ctx, p[None, :], max_new=n, max_len=32)
+            assert r.generated == list(np.asarray(want[0])), r.uid
+
+
+def test_engine_eos_at_prefill_frees_slot_immediately():
+    cfg, ctx, params, _, _ = _setup("granite_8b")
+    prompt = jnp.asarray([1, 2, 3, 4], jnp.int32)
+    first = int(generate(params, ctx, prompt[None, :], max_new=1, max_len=32)[0, 0])
+    eng = BatchingEngine(params, ctx, num_slots=1, max_len=32, eos_id=first)
+    req = Request(uid=0, prompt=prompt, max_new=8)
+    eng.submit(req)
+    steps = 0
+    while eng.step():
+        steps += 1
+    assert steps == 0  # EOS during prefill: the request never reaches decode
+    assert req.done and req.generated == [first]
+
+
 def test_batching_engine_matches_oneshot():
     cfg, ctx, params, _, _ = _setup("granite_8b")
     prompts = [

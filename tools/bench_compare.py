@@ -6,7 +6,10 @@ Input files are lists of ``{"name", "value", "unit"}`` rows as emitted by
 Checks (any failure exits 1 with a per-row report):
 
 * ``--baseline BASE --threshold 1.5`` — every time-like row (unit contains
-  "us") present in both files must satisfy ``new <= threshold * old``.
+  "us") present in both files must satisfy ``new <= threshold * old``; a
+  gated baseline row that is *missing* from the new file fails with a clear
+  message (a renamed bench row must update the committed baseline too, and
+  malformed rows are rejected at load instead of raising ``KeyError``).
   ``--normalize`` divides each timing by the same file's ``lut_affine_jnp``
   row for its shape tag first, so the comparison is a ratio of ratios and
   robust to absolute machine speed differences between the baseline host
@@ -40,6 +43,13 @@ _UNGATED_PREFIXES = ("kern/matmul_ref_",)
 def load(path: str) -> dict[str, dict]:
     with open(path) as f:
         rows = json.load(f)
+    if not isinstance(rows, list):
+        sys.exit(f"{path}: expected a JSON list of benchmark rows")
+    for i, r in enumerate(rows):
+        if not isinstance(r, dict) or "name" not in r or "value" not in r:
+            sys.exit(
+                f"{path}: row {i} is malformed (needs 'name' and 'value'): {r!r}"
+            )
     return {r["name"]: r for r in rows}
 
 
@@ -63,12 +73,20 @@ def compare(base: dict, new: dict, threshold: float, normalize: bool) -> list[st
     nvals = _normalized(new) if normalize else {k: v["value"] for k, v in new.items()}
     compared = 0
     for name, brow in sorted(base.items()):
-        if "us" not in brow.get("unit", "") or name not in new:
+        if "us" not in brow.get("unit", ""):
             continue
         if name.startswith(_UNGATED_PREFIXES):
             continue
         if name.startswith(_REF_PREFIX) and normalize:
             continue  # the normalizer itself
+        if name not in new:
+            # a silently vanished row would un-gate itself; fail loudly
+            print(f"  FAIL {name}: present in baseline, missing from new file")
+            failures.append(
+                f"baseline row {name!r} is missing from the new results "
+                "(renamed or dropped? update the committed baseline too)"
+            )
+            continue
         compared += 1
         old_v, new_v = bvals[name], nvals[name]
         ratio = new_v / old_v if old_v > 0 else float("inf")
