@@ -14,6 +14,14 @@ steps) for:
                      once and execute as one grouped gather straight from
                      the stored ``(G, k, E, p)`` leaf — no per-step stack
 
+Engine-level rows measure the device-resident ``BatchingEngine`` end to
+end (admission prefills + decode + the one packed readback per step):
+
+* ``engine_batched_admit`` — multi-slot batched prefill admission
+* ``engine_per_slot_admit`` — one request per prefill call (the retired
+  scheduler's admission pattern; CI gates batched >= per-slot)
+* ``engine_sampled``       — temperature sampling fused on device
+
 On TPU the LUT gather path is memory-bound and the bitplane-MXU path
 compute-bound (see EXPERIMENTS.md §Perf); this CPU bench demonstrates the
 paths end-to-end and tracks the grouped-vs-dispatch ratio in CI
@@ -29,10 +37,16 @@ import jax
 from repro.configs.base import get_config
 from repro.core.convert import convert_params
 from repro.core.planner import plan_model
-from repro.models.layers import Ctx, ExecCfg
+from repro.models.layers import Ctx, ExecCfg, SampleCfg
 from repro.models.model import model_specs
 from repro.models.params import init_params
-from repro.serve.engine import make_cache, make_decode_step, make_prefill_step
+from repro.serve.engine import (
+    BatchingEngine,
+    Request,
+    make_cache,
+    make_decode_step,
+    make_prefill_step,
+)
 
 
 def _decode_state(params, ctx: Ctx, prompts, steps: int, reps: int) -> dict:
@@ -89,6 +103,67 @@ def _decode_tps(named_runs, prompts, steps: int, reps: int = 7) -> dict:
     }
 
 
+def _engine_run(params, ctx, *, admit, sample, prompts, max_new, num_slots) -> float:
+    """One full engine run (admissions + decode to drain); returns seconds.
+    The jitted steps are lru-cached per (ctx, sample, eos), so repeated
+    engine construction here never recompiles."""
+    eng = BatchingEngine(
+        params, ctx, num_slots=num_slots, max_len=32,
+        sample=sample, admit=admit, prefill_bucket=8,
+    )
+    reqs = [
+        Request(uid=i, prompt=p, max_new=max_new) for i, p in enumerate(prompts)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    eng.run()
+    dt = time.perf_counter() - t0
+    assert all(r.done for r in reqs)
+    return dt
+
+
+def _engine_tps(params, ctx, tiny: bool, reps: int = 9) -> dict:
+    """End-to-end engine tokens/s per scheduler config, interleaved rounds
+    + median (same rationale as _decode_tps: machine-load drift on shared
+    CI runners is common-mode within a round).  The order WITHIN a round
+    rotates per round — a fixed order gives the first config a systematic
+    cold-cache penalty that can exceed the few-ms admission effect under
+    test."""
+    num_slots = 2
+    max_new = 8 if tiny else 16
+    key = jax.random.PRNGKey(2)
+    prompts = []
+    for i in range(2 * num_slots):
+        key, k = jax.random.split(key)
+        plen = 3 + i % 4
+        prompts.append(jax.random.randint(k, (plen,), 0, ctx.cfg.vocab_size))
+    total = len(prompts) * max_new
+    configs = {
+        "engine_batched_admit": dict(admit="batched", sample=SampleCfg()),
+        "engine_per_slot_admit": dict(admit="per-slot", sample=SampleCfg()),
+        "engine_sampled": dict(
+            admit="batched", sample=SampleCfg(mode="temperature", temperature=0.8)
+        ),
+    }
+    def run(kw):
+        return _engine_run(
+            params, ctx, prompts=prompts, max_new=max_new,
+            num_slots=num_slots, **kw
+        )
+    for kw in configs.values():  # warmup: compile both steps per config
+        run(kw)
+    names = list(configs)
+    rounds = []
+    for i in range(reps):
+        order = names[i % len(names) :] + names[: i % len(names)]
+        rounds.append({name: run(configs[name]) for name in order})
+    return {
+        name: total / statistics.median(r[name] for r in rounds)
+        for name in configs
+    }
+
+
 def rows(tiny: bool = False) -> list[tuple[str, float, str]]:
     cfg = get_config("granite_8b", reduced=True)
     params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
@@ -128,6 +203,10 @@ def rows(tiny: bool = False) -> list[tuple[str, float, str]]:
     named_runs = [(name, p, Ctx(cfg, ex=ex)) for name, p, ex in modes]
     for name, tps in _decode_tps(named_runs, prompts, steps).items():
         out.append((f"serve/{name}_tok_per_s", round(tps, 2), shape_note))
+    eng_note = "end-to-end engine run, 2 slots, 4 requests"
+    for name, tps in _engine_tps(params, Ctx(cfg, ex=ExecCfg(remat="none")),
+                                 tiny).items():
+        out.append((f"serve/{name}_tok_per_s", round(tps, 2), eng_note))
     return out
 
 

@@ -143,8 +143,7 @@ def forward(
 
     meta, cache_layers, cross_cache, enc_out = None, None, None, None
     if cache is not None:
-        cache = advance_meta(cache, positions, None)
-        meta = {"pos": cache["pos"], "valid": cache["valid"], "index": cache["index"]}
+        cache, meta = advance_meta(cache, positions, None)
         cache_layers = cache["layers"]
         cross_cache = cache["cross"]
         if enc_embeds is not None:  # prefill: fill the cross cache

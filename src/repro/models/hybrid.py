@@ -89,8 +89,7 @@ def forward(
 
     meta, shared_kv, mamba_cache = None, None, None
     if cache is not None:
-        cache = advance_meta(cache, positions, None)
-        meta = {"pos": cache["pos"], "valid": cache["valid"], "index": cache["index"]}
+        cache, meta = advance_meta(cache, positions, None)
         shared_kv = cache["shared_attn"]
         mamba_cache = cache["layers"]
 

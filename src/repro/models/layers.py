@@ -46,6 +46,45 @@ class ExecCfg:
 
 
 @dataclasses.dataclass(frozen=True)
+class SampleCfg:
+    """Static sampling options for the serving layer (hashable; closed over
+    by the jitted prefill/decode steps — sampling runs fused on device).
+
+    ``greedy`` is argmax; ``temperature`` divides logits by ``temperature``
+    then draws categorically; ``top_k`` restricts to the ``top_k`` largest
+    logits first.  Non-greedy modes need per-slot PRNG keys (the serving
+    cache's ``slot_key`` leaf), folded with the slot's write ``index`` so a
+    sampled stream depends only on (request key, position) — never on the
+    admission schedule or engine step count.
+    """
+
+    mode: str = "greedy"  # greedy | temperature | top_k
+    temperature: float = 1.0
+    top_k: int = 0
+
+
+def sample_tokens(
+    logits: jax.Array,  # (B, V)
+    scfg: SampleCfg,
+    keys: jax.Array | None = None,  # (B, 2) uint32 per-row PRNG keys
+) -> jax.Array:
+    """Draw one token per row under ``scfg``; returns (B,) int32."""
+    if scfg.mode == "greedy":
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if keys is None:
+        raise ValueError(f"sampling mode {scfg.mode!r} needs per-row PRNG keys")
+    scaled = logits.astype(jnp.float32) / max(scfg.temperature, 1e-6)
+    if scfg.mode == "top_k":
+        if scfg.top_k <= 0:
+            raise ValueError("top_k mode needs SampleCfg.top_k >= 1")
+        kth = jax.lax.top_k(scaled, scfg.top_k)[0][..., -1:]
+        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    elif scfg.mode != "temperature":
+        raise ValueError(f"unknown sampling mode {scfg.mode!r}")
+    return jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
 class Ctx:
     cfg: ModelConfig
     shard: ShardCtx = ShardCtx()

@@ -43,13 +43,34 @@ def model_forward(
     ctx: Ctx,
     cache: Optional[dict] = None,
 ):
-    """Returns (logits, new_cache, aux_loss)."""
+    """Returns (logits, new_cache, aux_loss).
+
+    ``inputs`` holds "tokens" plus optional modality extras and, for the
+    serving engine's batched multi-slot prefill, "token_mask" — a (B, S)
+    bool marking real (unpadded) tokens.  Masked cache writes are only
+    defined for one-hot KV ring caches, so "token_mask" is limited to the
+    attention families; recurrent-state families (hybrid/ssm) reject it.
+    """
     cfg = ctx.cfg
     tokens = inputs["tokens"]
+    token_mask = inputs.get("token_mask")
+    if token_mask is not None and cfg.family not in ("dense", "moe", "vlm"):
+        raise NotImplementedError(
+            f"token_mask (masked batched prefill) is not supported for "
+            f"family {cfg.family!r}: its recurrent/cross caches have no "
+            "slot-targeted write form"
+        )
     if cfg.family in ("dense", "moe", "vlm"):
         from repro.models.transformer import forward
 
-        return forward(params, tokens, ctx, cache=cache, embeds=inputs.get("embeds"))
+        return forward(
+            params,
+            tokens,
+            ctx,
+            cache=cache,
+            embeds=inputs.get("embeds"),
+            token_mask=token_mask,
+        )
     if cfg.family == "hybrid":
         from repro.models.hybrid import forward
 

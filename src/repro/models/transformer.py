@@ -113,14 +113,24 @@ def forward(
     positions: Optional[jax.Array] = None,
     cache: Optional[dict] = None,
     embeds: Optional[jax.Array] = None,  # VLM: (B, S_img, d) patch embeddings
+    token_mask: Optional[jax.Array] = None,  # (B, S) bool: real (unpadded) tokens
 ):
-    """Returns (logits, new_cache, aux_loss)."""
+    """Returns (logits, new_cache, aux_loss).
+
+    ``token_mask`` marks real tokens in a right-padded batch (the serving
+    engine's batched multi-slot prefill): masked positions write nothing
+    into the cache and do not advance the per-slot index, so rows whose
+    mask is all-False pass through with their cache state untouched.
+    """
     from repro.serve.cache import advance_meta
 
     x = embed_tokens(params, tokens, ctx)
     if embeds is not None:  # VLM: image tokens first (llava layout)
         x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
         x = ctx.shard.constrain(x, "batch", None, None)
+        if token_mask is not None:  # image tokens count as real tokens
+            img = jnp.ones((x.shape[0], embeds.shape[1]), bool)
+            token_mask = jnp.concatenate([img, token_mask], axis=1)
     B, S, _ = x.shape
     if positions is None:
         if cache is not None:
@@ -134,9 +144,9 @@ def forward(
     new_cache = None
     cache_layers = None
     if cache is not None:
-        cache = advance_meta(cache, positions, ctx.cfg.sliding_window)
-        meta = {k: cache[k] for k in ("pos", "valid", "index") if k in cache}
-        meta["index"] = cache["index"]
+        cache, meta = advance_meta(
+            cache, positions, ctx.cfg.sliding_window, token_mask
+        )
         cache_layers = cache["layers"]
 
     x, new_layers, aux = scan_blocks(

@@ -11,11 +11,12 @@ import pytest
 
 from repro.configs.base import get_config
 from repro.core.convert import convert_params
-from repro.models.layers import Ctx, ExecCfg
+from repro.models.layers import Ctx, ExecCfg, SampleCfg
 from repro.models.model import model_forward, model_specs
 from repro.models.params import init_params
 from repro.serve.engine import (
     BatchingEngine,
+    CacheOverflowError,
     Request,
     generate,
     make_cache,
@@ -198,3 +199,128 @@ def test_batching_engine_matches_oneshot():
         assert r.generated == list(np.asarray(want[0])), (
             r.uid, r.generated, list(np.asarray(want[0]))
         )
+
+
+def _run_engine(params, ctx, prompts, max_new=5, **kw):
+    eng = BatchingEngine(params, ctx, num_slots=2, max_len=32, **kw)
+    reqs = [Request(uid=i, prompt=p, max_new=max_new) for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return eng, {r.uid: r.generated for r in reqs}
+
+
+_PROMPTS = (
+    (1, 2, 3, 4),
+    (5, 6, 7),
+    (9, 10, 11, 12, 13),
+)
+
+
+def _prompts():
+    return [jnp.asarray(p, jnp.int32) for p in _PROMPTS]
+
+
+def test_engine_batched_vs_per_slot_admit_identical_greedy():
+    """Admission schedule must not change greedy token streams."""
+    cfg, ctx, params, _, _ = _setup("granite_8b")
+    _, batched = _run_engine(params, ctx, _prompts(), admit="batched")
+    _, per_slot = _run_engine(params, ctx, _prompts(), admit="per-slot")
+    assert batched == per_slot
+
+
+def test_engine_ignores_logits_last_override():
+    """The engine's batched prefill gathers each slot's logits at its own
+    last real position, so it must force logits='all' internally — a Ctx
+    built with ExecCfg(logits='last') (the dryrun prefill optimization)
+    must not silently sample from pad-position logits."""
+    cfg, ctx, params, _, _ = _setup("granite_8b")
+    lctx = dataclasses.replace(
+        ctx, ex=dataclasses.replace(ctx.ex, logits="last")
+    )
+    _, want = _run_engine(params, ctx, _prompts())
+    _, got = _run_engine(params, lctx, _prompts())
+    assert got == want
+
+
+def test_engine_sampled_reproducible_across_schedules():
+    """Sampled decode with a fixed PRNG key: token streams are a function
+    of (seed, uid, position) only — identical across batched-admit and
+    per-slot-admit schedules, and across reruns."""
+    cfg, ctx, params, _, _ = _setup("granite_8b")
+    scfg = SampleCfg(mode="temperature", temperature=0.7)
+    _, a = _run_engine(params, ctx, _prompts(), sample=scfg, seed=7, admit="batched")
+    _, b = _run_engine(params, ctx, _prompts(), sample=scfg, seed=7, admit="per-slot")
+    _, c = _run_engine(params, ctx, _prompts(), sample=scfg, seed=7, admit="batched")
+    assert a == b == c
+    _, d = _run_engine(params, ctx, _prompts(), sample=scfg, seed=8, admit="batched")
+    assert a != d  # a different seed actually changes the draws
+    topk = SampleCfg(mode="top_k", temperature=0.7, top_k=3)
+    _, e = _run_engine(params, ctx, _prompts(), sample=topk, seed=7, admit="batched")
+    _, f = _run_engine(params, ctx, _prompts(), sample=topk, seed=7, admit="per-slot")
+    assert e == f
+
+
+def test_engine_lut_equals_dense_argmax():
+    """Engine-level equivalence: grouped pre-stacked LUT serving and dense
+    serving produce identical greedy token streams (the LUT fast path from
+    PR 3 rides through the rebuilt scheduler unchanged)."""
+    cfg, ctx, params, _, _ = _setup("granite_8b")
+    lut_params, report = convert_params(params, chunk_size=1)
+    assert report.converted > 0
+    gctx = dataclasses.replace(
+        ctx, ex=dataclasses.replace(ctx.ex, lut_grouped=True)
+    )
+    _, dense = _run_engine(params, ctx, _prompts(), max_new=4)
+    _, lut = _run_engine(lut_params, gctx, _prompts(), max_new=4)
+    assert dense == lut
+
+
+def test_engine_single_readback_and_donation():
+    """Steady-state decode: exactly ONE host readback per engine step, the
+    donated cache buffers are consumed in place (zero full-cache copies),
+    and the splice path is gone."""
+    import repro.serve.engine as engine_mod
+
+    assert not hasattr(engine_mod, "_splice_cache")
+    cfg, ctx, params, _, _ = _setup("granite_8b")
+    eng = BatchingEngine(params, ctx, num_slots=2, max_len=32)
+    for i, p in enumerate(_prompts()[:2]):
+        eng.submit(Request(uid=i, prompt=p, max_new=6))
+    assert eng.step()  # admission (1 prefill readback) + 1 decode readback
+    assert eng.readbacks == 2
+    old_k = eng.cache["layers"]["k"]
+    old_pos = eng.cache["pos"]
+    before = eng.readbacks
+    assert eng.step()  # steady state: no admission
+    assert eng.readbacks == before + 1
+    # donation consumed the old cache in place — no full-cache allocation
+    assert old_k.is_deleted()
+    assert old_pos.is_deleted()
+
+
+def test_engine_submit_overflow_raises():
+    cfg, ctx, params, _, _ = _setup("granite_8b")
+    eng = BatchingEngine(params, ctx, num_slots=1, max_len=8)
+    with pytest.raises(CacheOverflowError):
+        eng.submit(Request(uid=0, prompt=jnp.asarray([1, 2, 3, 4], jnp.int32),
+                           max_new=6))
+
+
+def test_generate_eos_matches_engine_semantics():
+    """generate(eos_id=...) and BatchingEngine agree: the stream stops at
+    the first EOS (inclusive); generate pads its rectangle with eos_id."""
+    cfg, ctx, params, _, _ = _setup("granite_8b")
+    prompt = jnp.asarray([1, 2, 3, 4], jnp.int32)
+    free = list(np.asarray(
+        generate(params, ctx, prompt[None, :], max_new=6, max_len=32)[0]
+    ))
+    eos = int(free[2])  # stop mid-stream
+    got = list(np.asarray(
+        generate(params, ctx, prompt[None, :], max_new=6, max_len=32, eos_id=eos)[0]
+    ))
+    stop = free.index(eos)
+    assert got[: stop + 1] == free[: stop + 1]
+    assert all(t == eos for t in got[stop + 1 :])  # post-EOS padding only
+    eng, streams = _run_engine(params, ctx, [prompt], max_new=6, eos_id=eos)
+    assert streams[0] == free[: stop + 1]  # engine truncates at EOS too

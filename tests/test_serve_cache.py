@@ -1,0 +1,264 @@
+"""Cache-layer unit tests: overflow guards, the S == T fast-path gate,
+ring-window wraparound slot uniqueness, and slot-targeted masked prefill
+metadata matching the retired full-cache splice."""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models.layers import Ctx, ExecCfg
+from repro.serve.cache import (
+    CacheOverflowError,
+    advance_meta,
+    update_kv_cache,
+    update_mla_cache,
+)
+
+B, T, KV, HD = 3, 8, 2, 4
+
+
+def _ctx(window=None):
+    cfg = get_config("granite_8b", reduced=True)
+    if window is not None:
+        cfg = dataclasses.replace(cfg, sliding_window=window)
+    return Ctx(cfg, ex=ExecCfg(remat="none"))
+
+
+def _meta_cache(index=None, with_flag=True):
+    cache = {
+        "pos": jnp.zeros((B, T), jnp.int32),
+        "valid": jnp.zeros((B, T), bool),
+        "index": jnp.zeros((B,), jnp.int32) if index is None else jnp.asarray(index),
+    }
+    if with_flag:
+        cache["overflow"] = jnp.zeros((B,), bool)
+    return cache
+
+
+def _kv(key=0, t=T):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key))
+    return (
+        jax.random.normal(k1, (B, t, KV, HD), jnp.float32),
+        jax.random.normal(k2, (B, t, KV, HD), jnp.float32),
+    )
+
+
+def test_advance_meta_flags_overflow():
+    """index + S > T must set the per-slot overflow flag instead of letting
+    the all-zero one-hot rows drop the tokens silently."""
+    S = 4
+    cache = _meta_cache(index=[0, 6, 5])  # slots 1 (6+4>8) and 2 (5+4>8) overflow
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    new, meta = advance_meta(cache, positions, None)
+    np.testing.assert_array_equal(np.asarray(new["overflow"]), [False, True, True])
+    np.testing.assert_array_equal(np.asarray(meta["index"]), [0, 6, 5])
+    np.testing.assert_array_equal(np.asarray(new["index"]), [4, 10, 9])
+
+
+def test_advance_meta_masked_rows_do_not_advance():
+    S = 6
+    cache = _meta_cache(index=[0, 3, 0])
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    mask = jnp.asarray(
+        [[True] * 4 + [False] * 2, [False] * 6, [True] * 6]
+    )  # row 0: 4 real tokens; row 1: untouched mid-decode slot; row 2: full
+    new, meta = advance_meta(cache, positions, None, token_mask=mask)
+    np.testing.assert_array_equal(np.asarray(new["index"]), [4, 3, 6])
+    np.testing.assert_array_equal(
+        np.asarray(new["valid"]).sum(1), [4, 0, 6]
+    )
+    assert not bool(new["overflow"].any())
+
+
+def test_debug_overflow_assert_env_gated():
+    """REPRO_CACHE_CHECKS=1 arms the in-graph assert (subprocess: env vars
+    are read at trace time and jax caches aggressively)."""
+    code = (
+        "import jax.numpy as jnp, jax\n"
+        "from repro.serve.cache import advance_meta, CacheOverflowError\n"
+        "cache = {'pos': jnp.zeros((1, 4), jnp.int32),\n"
+        "         'valid': jnp.zeros((1, 4), bool),\n"
+        "         'index': jnp.asarray([3])}\n"
+        "positions = jnp.arange(2, dtype=jnp.int32)[None]\n"
+        "try:\n"
+        "    new, _ = advance_meta(cache, positions, None)\n"
+        "    jax.block_until_ready(new['pos'])\n"
+        "except Exception as e:\n"
+        "    assert 'overflow' in str(e).lower() or 'cache write past' in str(e), e\n"
+        "    print('RAISED')\n"
+        "else:\n"
+        "    print('SILENT')\n"
+    )
+    env = dict(os.environ, REPRO_CACHE_CHECKS="1",
+               PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    out = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True
+    )
+    assert "RAISED" in out.stdout, (out.stdout, out.stderr)
+
+
+def _full_prefill(cache, k, v, positions, ctx):
+    new_meta, meta = advance_meta(cache, positions, ctx.cfg.sliding_window)
+    layer = {"k": cache["k"], "v": cache["v"], "_meta": meta}
+    upd, *_ = update_kv_cache(layer, k, v, positions, ctx)
+    return dict(new_meta, **upd)
+
+
+def test_full_length_fastpath_gated_on_fresh_index():
+    """S == T whole-buffer overwrite must only apply to fresh rows (index
+    0); rows mid-decode keep their K/V instead of being clobbered from
+    slot 0, and the overflow flag records the rejected writes."""
+    ctx = _ctx()
+    k0, v0 = _kv(0)
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    cache = dict(
+        _meta_cache(index=[0, 5, 0]), k=jnp.zeros_like(k0), v=jnp.zeros_like(v0)
+    )
+    out = _full_prefill(cache, k0, v0, positions, ctx)
+    got_k = np.asarray(out["k"])
+    np.testing.assert_allclose(got_k[0], np.asarray(k0)[0])  # fresh: overwritten
+    np.testing.assert_allclose(got_k[2], np.asarray(k0)[2])
+    np.testing.assert_allclose(got_k[1], 0.0)  # mid-decode: untouched
+    np.testing.assert_array_equal(np.asarray(out["overflow"]), [False, True, False])
+    # metadata consistency: the rejected row (0 < index < T would land a
+    # PARTIAL in-range write the fast path can't express) must not have its
+    # tail slots marked valid either — valid claims only written K/V
+    valid = np.asarray(out["valid"])
+    assert valid[0].all() and valid[2].all()
+    assert not valid[1].any(), valid[1]
+
+
+def test_mla_full_length_fastpath_gated_on_fresh_index():
+    ctx = _ctx()
+    c = jax.random.normal(jax.random.PRNGKey(1), (B, T, 6), jnp.float32)
+    r = jax.random.normal(jax.random.PRNGKey(2), (B, T, 4), jnp.float32)
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    cache = _meta_cache(index=[0, 2, 0])
+    new_meta, meta = advance_meta(cache, positions, None)
+    layer = {"c_kv": jnp.zeros_like(c), "k_rope": jnp.zeros_like(r), "_meta": meta}
+    upd, *_ = update_mla_cache(layer, c, r, positions, ctx)
+    got = np.asarray(upd["c_kv"])
+    np.testing.assert_allclose(got[0], np.asarray(c)[0])
+    np.testing.assert_allclose(got[1], 0.0)
+    np.testing.assert_array_equal(
+        np.asarray(new_meta["overflow"]), [False, True, False]
+    )
+    assert not np.asarray(new_meta["valid"])[1].any()  # rejected as a unit
+
+
+def test_ring_wraparound_slots_unique():
+    """S > T windowed writes: the surviving last-T positions must land in
+    T distinct slots (positions % T is a permutation) with pos metadata
+    matching, for nonzero per-slot start offsets too."""
+    window = T
+    ctx = _ctx(window=window)
+    S = T + 5
+    start = jnp.asarray([0, 3, 11], jnp.int32)
+    positions = start[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+    cache = _meta_cache(index=start)
+    new, meta = advance_meta(cache, positions, window)
+    slots = np.asarray(meta["slots"])
+    assert slots.shape == (B, T)
+    for b in range(B):
+        assert sorted(slots[b]) == list(range(T)), slots[b]  # a permutation
+        # pos holds exactly the last T absolute positions
+        want = np.asarray(positions[b, -T:])
+        np.testing.assert_array_equal(np.sort(np.asarray(new["pos"])[b]), np.sort(want))
+    assert bool(new["valid"].all())
+    # K/V writes at those slots are unique too: each new row lands intact
+    k, v = _kv(3, t=S)
+    layer = {
+        "k": jnp.zeros((B, T, KV, HD)),
+        "v": jnp.zeros((B, T, KV, HD)),
+        "_meta": meta,
+    }
+    upd, *_ = update_kv_cache(layer, k, v, positions, ctx)
+    for b in range(B):
+        for s_idx in range(T):
+            slot = slots[b, s_idx]
+            np.testing.assert_allclose(
+                np.asarray(upd["k"])[b, slot],
+                np.asarray(k)[b, S - T + s_idx],
+                rtol=1e-6,
+            )
+
+
+def test_slot_targeted_prefill_matches_splice():
+    """Masked multi-slot prefill writes must reproduce what the retired
+    _splice_cache produced: run a batch-1 prefill, splice it into slot 1 of
+    a busy cache by hand, and compare against the masked batched write."""
+    ctx = _ctx()
+    S, plen, slot = 6, 4, 1
+    k_new, v_new = _kv(5, t=S)
+    # busy cache: slot 0 mid-decode with 3 tokens, slot 2 with 5
+    busy_k, busy_v = _kv(6)
+    occupancy = np.zeros((B, T), bool)
+    occupancy[0, :3] = True
+    occupancy[2, :5] = True
+    cache = {
+        "pos": jnp.asarray(np.where(occupancy, np.arange(T)[None], 0), jnp.int32),
+        "valid": jnp.asarray(occupancy),
+        "index": jnp.asarray([3, 0, 5], jnp.int32),
+        "overflow": jnp.zeros((B,), bool),
+        "k": busy_k,
+        "v": busy_v,
+    }
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    mask = jnp.zeros((B, S), bool).at[slot, :plen].set(True)
+    new_cache, meta = advance_meta(cache, positions, None, token_mask=mask)
+    layer = {"k": cache["k"], "v": cache["v"], "_meta": meta}
+    upd, *_ = update_kv_cache(layer, k_new, v_new, positions, ctx)
+    got = dict(new_cache, **upd)
+
+    # reference: batch-1 fresh prefill of the real tokens, spliced by hand
+    sub = {
+        "pos": jnp.zeros((1, T), jnp.int32),
+        "valid": jnp.zeros((1, T), bool),
+        "index": jnp.zeros((1,), jnp.int32),
+        "k": jnp.zeros((1, T, KV, HD)),
+        "v": jnp.zeros((1, T, KV, HD)),
+    }
+    sub_pos = jnp.arange(plen, dtype=jnp.int32)[None]
+    sub_new, sub_meta = advance_meta(sub, sub_pos, None)
+    sub_layer = {"k": sub["k"], "v": sub["v"], "_meta": sub_meta}
+    sub_upd, *_ = update_kv_cache(
+        sub_layer, k_new[slot : slot + 1, :plen], v_new[slot : slot + 1, :plen],
+        sub_pos, ctx,
+    )
+    want = {key: np.asarray(val).copy() for key, val in dict(cache).items()}
+    for key in ("pos", "valid", "index"):
+        want[key][slot] = np.asarray(sub_new[key])[0]
+    for key in ("k", "v"):
+        # the splice zeroed the slot's unwritten tail; the masked write
+        # leaves stale values there instead — invisible behind valid=False,
+        # so only the valid-masked region is part of the contract
+        want[key][slot, :plen] = np.asarray(sub_upd[key])[0, :plen]
+
+    for key in ("pos", "valid", "index"):
+        np.testing.assert_array_equal(np.asarray(got[key]), want[key], err_msg=key)
+    valid = np.asarray(got["valid"])
+    for key in ("k", "v"):
+        np.testing.assert_allclose(
+            np.asarray(got[key])[valid], want[key][valid], rtol=1e-6, err_msg=key
+        )
+    assert not bool(got["overflow"].any())
+
+
+def test_generate_overflow_raises():
+    """Regression (the headline bug): generate() with max_len < S + max_new
+    used to silently drop the overflowing tokens; it must raise now."""
+    from repro.models.model import model_specs
+    from repro.models.params import init_params
+    from repro.serve.engine import generate
+
+    ctx = _ctx()
+    params = init_params(model_specs(ctx.cfg), jax.random.PRNGKey(0))
+    prompts = jnp.asarray([[1, 2, 3, 4, 5, 6]], jnp.int32)
+    with pytest.raises(CacheOverflowError):
+        generate(params, ctx, prompts, max_new=8, max_len=10)

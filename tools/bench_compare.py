@@ -18,12 +18,17 @@ Checks (any failure exits 1 with a per-row report):
 * ``--require-ge A B [--ge-slack 0.9]`` — in the new file,
   ``value[A] >= ge_slack * value[B]`` (e.g. grouped decode tokens/s must not
   fall below per-projection dispatch).
+* ``--require-rows FILE`` — every row *name* in FILE (a committed companion
+  baseline) must be present in the new file.  Catches silently renamed or
+  dropped rows for files whose values are throughput (not gated by the
+  time-row comparison above).
 
 Usage:
   python tools/bench_compare.py NEW.json --normalize \
       --baseline benchmarks/baselines/kernels.json
   python tools/bench_compare.py NEW.json \
-      --require-ge serve/lut_grouped_tok_per_s serve/lut_planned_tok_per_s
+      --require-ge serve/lut_grouped_tok_per_s serve/lut_planned_tok_per_s \
+      --require-rows benchmarks/baselines/serving.json
 """
 from __future__ import annotations
 
@@ -110,10 +115,20 @@ def main() -> int:
     ap.add_argument("--require-ge", nargs=2, metavar=("A", "B"), action="append",
                     default=[], help="require value[A] >= ge-slack * value[B] in NEW")
     ap.add_argument("--ge-slack", type=float, default=0.9)
+    ap.add_argument("--require-rows", metavar="FILE",
+                    help="every row name in FILE must exist in NEW")
     args = ap.parse_args()
 
     new = load(args.new)
     failures: list[str] = []
+    if args.require_rows:
+        for name in load(args.require_rows):
+            if name not in new:
+                print(f"  FAIL {name}: required row missing from {args.new}")
+                failures.append(
+                    f"required row {name!r} missing (renamed or dropped? "
+                    "update the committed companion baseline too)"
+                )
     if args.baseline:
         print(
             f"comparing {args.new} against {args.baseline} "
