@@ -21,6 +21,11 @@ end (admission prefills + decode + the one packed readback per step):
 * ``engine_per_slot_admit`` — one request per prefill call (the retired
   scheduler's admission pattern; CI gates batched >= per-slot)
 * ``engine_sampled``       — temperature sampling fused on device
+* ``engine_moe_dense`` / ``engine_moe_lut`` — a reduced qwen2-moe config
+  served end to end with dense experts (``lax.ragged_dot`` grouped GEMM)
+  vs ``convert_experts=True`` LUT experts (the ragged ``lut_affine_experts``
+  path, gate/up pre-stacked): the multiplier-free MoE serving path is
+  exercised and tracked per commit
 
 On TPU the LUT gather path is memory-bound and the bitplane-MXU path
 compute-bound (see EXPERIMENTS.md §Perf); this CPU bench demonstrates the
@@ -164,6 +169,49 @@ def _engine_tps(params, ctx, tiny: bool, reps: int = 9) -> dict:
     }
 
 
+def _engine_moe_tps(tiny: bool, reps: int = 7) -> dict:
+    """End-to-end engine tokens/s for a reduced MoE config, dense experts
+    vs converted (LUT) experts — interleaved rotated rounds + median like
+    ``_engine_tps`` (shared-runner load drift is common-mode in a round)."""
+    cfg = get_config("qwen2_moe_a2_7b", reduced=True)
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(3))
+    lut_params, _ = convert_params(params, chunk_size=1, convert_experts=True)
+    runs = {
+        "engine_moe_dense": (params, Ctx(cfg, ex=ExecCfg(remat="none"))),
+        "engine_moe_lut": (
+            lut_params,
+            Ctx(cfg, ex=ExecCfg(remat="none", lut_grouped=True)),
+        ),
+    }
+    num_slots = 2
+    max_new = 8 if tiny else 16
+    key = jax.random.PRNGKey(4)
+    prompts = []
+    for i in range(2 * num_slots):
+        key, k = jax.random.split(key)
+        prompts.append(jax.random.randint(k, (3 + i % 4,), 0, cfg.vocab_size))
+    total = len(prompts) * max_new
+
+    def run(name):
+        p, ctx = runs[name]
+        return _engine_run(
+            p, ctx, admit="batched", sample=SampleCfg(), prompts=prompts,
+            max_new=max_new, num_slots=num_slots,
+        )
+
+    names = list(runs)
+    for name in names:  # warmup: compile prefill+decode per param layout
+        run(name)
+    rounds = []
+    for i in range(reps):
+        order = names[i % len(names):] + names[: i % len(names)]
+        rounds.append({name: run(name) for name in order})
+    return {
+        name: total / statistics.median(r[name] for r in rounds)
+        for name in runs
+    }
+
+
 def rows(tiny: bool = False) -> list[tuple[str, float, str]]:
     cfg = get_config("granite_8b", reduced=True)
     params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
@@ -207,6 +255,9 @@ def rows(tiny: bool = False) -> list[tuple[str, float, str]]:
     for name, tps in _engine_tps(params, Ctx(cfg, ex=ExecCfg(remat="none")),
                                  tiny).items():
         out.append((f"serve/{name}_tok_per_s", round(tps, 2), eng_note))
+    moe_note = "end-to-end MoE engine run, 2 slots, 4 requests"
+    for name, tps in _engine_moe_tps(tiny).items():
+        out.append((f"serve/{name}_tok_per_s", round(tps, 2), moe_note))
     return out
 
 

@@ -25,13 +25,16 @@ table both have 2**7 entries).
   jit (asserted at the jaxpr level in ``tests/test_grouped_layout.py``).
 
 Non-affine recurrences (SSD / WKV — data-dependent transition weights) and
-raw tensors (embeddings, routers, norm scales) are left untouched; 3-D
-expert stacks can be converted per-expert via ``convert_experts=True``
+raw tensors (embeddings, routers, norm scales) are left untouched; MoE
+expert stacks are converted per-expert via ``convert_experts=True``
 (vmapped table build) under the same eligibility rules
-(``min_features``/``predicate``) the planner applies.  Expert conversion
-is a size/op-accounting path: ``models.moe.moe_ffn`` has no LUT execution
-for expert stacks yet and raises ``NotImplementedError`` on converted
-experts rather than crashing inside ``ragged_dot``.
+(``min_features``/``predicate``) the planner applies.  Same-shape expert
+pairs (``w_gate``/``w_up``) pre-stack into one :class:`LUTGroup` whose
+leaf is ``(..., E, G, k, entries, p)`` — the exact array
+``kernels.lut_affine.lut_affine_experts`` consumes after the layer scan
+slices the leading dim — and ``models.moe.moe_ffn`` executes converted
+expert leaves via the ragged LUT path (codes packed once per token; the
+``ragged_dot`` calls disappear from the decode program).
 """
 from __future__ import annotations
 
@@ -171,6 +174,27 @@ def sibling_groups(node: dict) -> list[tuple[str, ...]]:
     return out
 
 
+def expert_sibling_groups(node: dict) -> list[tuple[str, ...]]:
+    """Fusable sibling sets among the RAW expert-stack weights of ``node``
+    (an ``_is_expert_stack`` dict): same-shape classes of the candidate key
+    sets, shape equality including the leading layer/expert dims — the
+    expert-stack analogue of :func:`sibling_groups` (members are bare
+    ``(..., E, q, p)`` arrays, not ``{"w": ...}`` linear nodes).  Shared
+    with the planner so grouping decisions never drift."""
+    out: list[tuple[str, ...]] = []
+    for base in FUSABLE_SIBLINGS:
+        present = [
+            n for n in base if n in EXPERT_WEIGHT_KEYS and hasattr(node.get(n), "ndim")
+        ]
+        by_shape: dict[tuple, list[str]] = {}
+        for n in present:
+            by_shape.setdefault(tuple(node[n].shape), []).append(n)
+        for members in by_shape.values():
+            if len(members) > 1:
+                out.append(tuple(members))
+    return out
+
+
 def group_key(members: tuple) -> str:
     """Tree key a :class:`LUTGroup` is stored under (e.g. ``"wk+wv"``)."""
     return "+".join(members)
@@ -303,14 +327,32 @@ def convert_params(
         if not isinstance(node, dict):
             return node
         if convert_experts and _is_expert_stack(node):
-            return {
-                k: (
-                    convert_expert_member(path, k, v)
-                    if k in EXPERT_WEIGHT_KEYS
-                    else walk(path + (k,), v)
-                )
-                for k, v in node.items()
-            }
+            # same grouping machinery as dense siblings: wrap the raw
+            # (..., E, q, p) stacks as linear nodes so convert_group's
+            # plan/eligibility checks apply unchanged; the stacked leaf is
+            # (..., E, G, k, entries, p) — lut_affine_experts' layout
+            egrouped: dict[str, LUTGroup] = {}
+            econsumed: set[str] = set()
+            if group_siblings:
+                wrapped = {
+                    k: {"w": v} for k, v in node.items() if k in EXPERT_WEIGHT_KEYS
+                }
+                for members in expert_sibling_groups(node):
+                    g = convert_group(path, wrapped, members)
+                    if g is not None:
+                        egrouped[group_key(members)] = g
+                        econsumed |= set(members)
+            eout: dict[str, Any] = {}
+            for k, v in node.items():
+                if k in econsumed:
+                    gk = next(gk for gk, g in egrouped.items() if k in g.members)
+                    if gk not in eout:
+                        eout[gk] = egrouped[gk]
+                elif k in EXPERT_WEIGHT_KEYS:
+                    eout[k] = convert_expert_member(path, k, v)
+                else:
+                    eout[k] = walk(path + (k,), v)
+            return eout
         grouped: dict[str, LUTGroup] = {}
         consumed: set[str] = set()
         if group_siblings:

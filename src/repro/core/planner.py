@@ -169,6 +169,13 @@ class ModelPlan:
     ``convert_params`` emits each one as a single pre-stacked
     ``core.convert.LUTGroup`` node.
 
+    ``copies`` records, per entry, the product of the weight's leading
+    scan/expert dims — how many table SETS the converter builds for it
+    (missing keys mean 1).  ``total_lut_bytes`` / ``total_shift_add_ops``
+    scale by it, so a plan's totals match the bytes a conversion actually
+    materialises (the pre-fix planner charged one ``(q, p)`` table per
+    entry and could blow a budget by the expert count).
+
     JSON-serializable (``to_json``/``from_json``) so it rides along with
     checkpoints (``dist.checkpoint.save_checkpoint(..., aux=...)``) and
     reconverts identically after an elastic restore.
@@ -177,20 +184,26 @@ class ModelPlan:
     layers: Mapping[str, LUTPlan]
     budget_bytes: int | None = None
     groups: tuple = ()  # tuple[tuple[str, ...], ...] of layer path keys
+    copies: Mapping[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def total_lut_bytes(self) -> int:
-        return sum(p.total_lut_bytes for p in self.layers.values())
+        return sum(
+            self.copies.get(k, 1) * p.total_lut_bytes for k, p in self.layers.items()
+        )
 
     @property
     def total_shift_add_ops(self) -> int:
-        return sum(p.shift_add_ops for p in self.layers.values())
+        return sum(
+            self.copies.get(k, 1) * p.shift_add_ops for k, p in self.layers.items()
+        )
 
     def to_json(self) -> dict:
         return {
             "budget_bytes": self.budget_bytes,
             "layers": {k: plan_to_json(p) for k, p in sorted(self.layers.items())},
             "groups": [list(g) for g in self.groups],
+            "copies": {k: v for k, v in sorted(self.copies.items()) if v != 1},
         }
 
     @classmethod
@@ -199,6 +212,7 @@ class ModelPlan:
             layers={k: plan_from_json(v) for k, v in d["layers"].items()},
             budget_bytes=d.get("budget_bytes"),
             groups=tuple(tuple(g) for g in d.get("groups", [])),
+            copies=dict(d.get("copies", {})),
         )
 
     def summary(self) -> str:
@@ -214,14 +228,25 @@ def path_key(path: Sequence) -> str:
     return "/".join(str(p) for p in path)
 
 
+def _copies(w) -> int:
+    """Table instances one weight leaf expands to: the product of its
+    leading (scan-layer / expert) dims.  A ``(q, p)`` linear is 1 table set;
+    a scan-stacked ``(L, q, p)`` builds L; an expert stack ``(L, E, q, p)``
+    builds L*E — the converter vmaps ``build_luts`` over every leading dim,
+    so bytes scale by exactly this factor (the pre-fix planner charged 1)."""
+    return int(math.prod(int(d) for d in w.shape[:-2]))
+
+
 def iter_linear_layers(
     params: dict,
     min_features: int = 1,
     predicate: Callable[[tuple, dict], bool] | None = None,
     convert_experts: bool = False,
-) -> Iterator[tuple[str, tuple[int, int]]]:
-    """Yield ``(path_key, (in_features, out_features))`` for every linear node
-    ``convert_params`` would convert (same eligibility rules).
+) -> Iterator[tuple[str, tuple[int, int], int]]:
+    """Yield ``(path_key, (in_features, out_features), copies)`` for every
+    linear node ``convert_params`` would convert (same eligibility rules);
+    ``copies`` is the product of the leading scan/expert dims — the number
+    of table sets the converter actually builds for the entry.
 
     With ``convert_experts=True`` the raw MoE expert-stack weights are
     enumerated too (as ``.../w_gate`` etc.), mirroring
@@ -243,7 +268,7 @@ def iter_linear_layers(
         if _is_linear_node(node):
             if eligible(path, node):
                 q, p = node["w"].shape[-2:]
-                yield path_key(path), (int(q), int(p))
+                yield path_key(path), (int(q), int(p)), _copies(node["w"])
             return
         if not isinstance(node, dict):
             return
@@ -253,7 +278,7 @@ def iter_linear_layers(
                     mpath = path + (k,)
                     if eligible(mpath, {"w": v}):
                         q, p = v.shape[-2:]
-                        yield path_key(mpath), (int(q), int(p))
+                        yield path_key(mpath), (int(q), int(p)), _copies(v)
                 else:
                     yield from walk(path + (k,), v)
             return
@@ -267,11 +292,20 @@ def iter_sibling_groups(
     params: dict,
     min_features: int = 1,
     predicate: Callable[[tuple, dict], bool] | None = None,
+    convert_experts: bool = False,
 ) -> Iterator[tuple[str, ...]]:
     """Yield fusable sibling groups as tuples of layer path keys — the same
-    detection ``convert_params(group_siblings=True)`` runs (shared helper),
-    restricted to members that pass the eligibility rules."""
-    from repro.core.convert import _is_linear_node, sibling_groups
+    detection ``convert_params(group_siblings=True)`` runs (shared helpers),
+    restricted to members that pass the eligibility rules.  With
+    ``convert_experts=True``, same-shape expert-stack pairs (gate/up) are
+    yielded too, mirroring the converter's expert pre-stacking."""
+    from repro.core.convert import (
+        EXPERT_WEIGHT_KEYS,
+        _is_expert_stack,
+        _is_linear_node,
+        expert_sibling_groups,
+        sibling_groups,
+    )
 
     def eligible(path: tuple, node: dict) -> bool:
         q = node["w"].shape[-2]
@@ -279,6 +313,15 @@ def iter_sibling_groups(
 
     def walk(path: tuple, node: Any):
         if not isinstance(node, dict) or _is_linear_node(node):
+            return
+        if _is_expert_stack(node):
+            if convert_experts:
+                for members in expert_sibling_groups(node):
+                    if all(eligible(path + (m,), {"w": node[m]}) for m in members):
+                        yield tuple(path_key(path + (m,)) for m in members)
+            for k, v in node.items():
+                if k not in EXPERT_WEIGHT_KEYS:
+                    yield from walk(path + (k,), v)
             return
         for members in sibling_groups(node):
             if all(eligible(path + (m,), node[m]) for m in members):
@@ -312,31 +355,45 @@ def plan_model(
     reduces to bytes-vs-ops; narrower fixed-point formats trade accuracy and
     are selected by passing a different ``fmt``.
 
+    Bytes and ops are charged per table SET actually built: an entry whose
+    weight carries leading scan/expert dims (``(L, q, p)`` scan stacks,
+    ``(L, E, q, p)`` expert stacks) costs its per-set bytes times the
+    product of those dims, recorded on ``ModelPlan.copies`` — so a
+    converted tree's ``ConvertReport.table_bytes`` (at the accounting
+    ``out_bits`` width, i.e. fp16 tables) can never exceed the budget.
+
     With ``group_siblings=True`` (default) fusable sibling projections
-    (QKV / K-V / gate-up — see ``core.convert.FUSABLE_SIBLINGS``) form ONE
-    knapsack item: their bytes and ops are accounted together and an
-    upgrade moves every member at once, so the knapsack can never split a
-    group onto different plans and silently defeat conversion-time fusion.
-    The group memberships are recorded on ``ModelPlan.groups``.
+    (QKV / K-V / gate-up — see ``core.convert.FUSABLE_SIBLINGS``; with
+    ``convert_experts=True`` also expert gate/up stacks) form ONE knapsack
+    item: their bytes and ops are accounted together and an upgrade moves
+    every member at once, so the knapsack can never split a group onto
+    different plans and silently defeat conversion-time fusion.  The group
+    memberships are recorded on ``ModelPlan.groups``.
 
     Raises ``ValueError`` if even the minimal per-layer plans exceed
     ``max_lut_bytes``.
     """
     fmt = fmt if fmt is not None else Float16Format(signed=signed)
-    shapes = dict(
+    entries = list(
         iter_linear_layers(params, min_features, predicate, convert_experts)
     )
+    shapes = {key: shape for key, shape, _ in entries}
+    copies = {key: n for key, _, n in entries}
     groups: list[tuple[str, ...]] = (
-        sorted(iter_sibling_groups(params, min_features, predicate))
+        sorted(iter_sibling_groups(params, min_features, predicate, convert_experts))
         if group_siblings
         else []
     )
     in_group = {key for g in groups for key in g}
-    # a knapsack item is a group (all members move together) or a lone layer
+    # a knapsack item is a group (all members move together) or a lone layer;
+    # its weight is the SUM of the members' table-set counts — a scan-stacked
+    # or expert entry pays bytes/ops once per leading-dim instance, so an
+    # expert stack is one atomic item spanning all E (or L*E) experts
     items: list[tuple[str, ...]] = groups + [
         (key,) for key in shapes if key not in in_group
     ]
     items.sort()
+    mult = {item: sum(copies[k] for k in item) for item in items}
 
     frontiers: dict[tuple[str, ...], list[PlanPoint]] = {}
     frontier_cache: dict[tuple[int, int], list[PlanPoint]] = {}
@@ -352,7 +409,7 @@ def plan_model(
         frontiers[item] = frontier
 
     choice = {item: 0 for item in items}
-    spent = sum(len(item) * frontiers[item][0].lut_bytes for item in items)
+    spent = sum(mult[item] * frontiers[item][0].lut_bytes for item in items)
     if spent > max_lut_bytes:
         raise ValueError(
             f"budget {max_lut_bytes} bytes < minimal model footprint "
@@ -365,17 +422,17 @@ def plan_model(
             fr = frontiers[item]
             cur = fr[choice[item]]
             for j in range(choice[item] + 1, len(fr)):
-                d_bytes = len(item) * (fr[j].lut_bytes - cur.lut_bytes)
+                d_bytes = mult[item] * (fr[j].lut_bytes - cur.lut_bytes)
                 if spent + d_bytes > max_lut_bytes:
                     break  # frontier bytes increase monotonically
-                d_ops = len(item) * (cur.shift_add_ops - fr[j].shift_add_ops)
+                d_ops = mult[item] * (cur.shift_add_ops - fr[j].shift_add_ops)
                 score = (d_ops / d_bytes, -d_bytes)
                 if best is None or score > best[:2]:
                     best = (*score, item, j)
         if best is None:
             break
         _, _, item, j = best
-        spent += len(item) * (
+        spent += mult[item] * (
             frontiers[item][j].lut_bytes - frontiers[item][choice[item]].lut_bytes
         )
         choice[item] = j
@@ -388,4 +445,5 @@ def plan_model(
         layers=dict(sorted(layers.items())),
         budget_bytes=budget,
         groups=tuple(groups),
+        copies={k: v for k, v in sorted(copies.items()) if v != 1},
     )

@@ -212,26 +212,41 @@ def build_stochastic_rounding_lut(
 ) -> np.ndarray:
     """Materialise the paper's rounding LUT: index = (code, counter mod R).
 
-    Maps an ``in_bits`` fixed point code (same frac_bits as ``fmt``) down to
-    ``fmt``; the random sequence r(i) is fixed at build time.  Size is
-    ``R * 2**in_bits`` output codes — the paper's ``R * 2**beta(I) * beta(O)``
-    bits.
+    Maps an ``in_bits`` fixed point code (same frac_bits and signedness as
+    ``fmt``) down to ``fmt``; the random sequence r(i) is fixed at build
+    time.  Size is ``R * 2**in_bits`` output codes — the paper's
+    ``R * 2**beta(I) * beta(O)`` bits.
+
+    Columns are indexed by the input code's ``in_bits``-wide BIT PATTERN.
+    For a signed ``fmt`` the pattern is interpreted as two's complement, so
+    negative codes floor toward -inf (arithmetic shift), round up with the
+    same ``P(up) = frac`` rule, and saturate at ``fmt.code_min`` — the
+    pre-fix table treated every pattern as unsigned and clipped to
+    ``[0, code_max]``, silently zero-clamping all negative inputs.
     """
     if in_bits <= fmt.total_bits:
         raise ValueError("input format must be wider than the output format")
     rng = np.random.default_rng(seed)
     r = rng.uniform(size=R)
     shift = in_bits - fmt.total_bits
-    codes = np.arange(2**in_bits)
-    lo = codes >> shift
+    codes = np.arange(2**in_bits, dtype=np.int64)
+    if fmt.signed:  # columns are bit patterns: decode two's complement
+        codes = codes - (codes >= 2 ** (in_bits - 1)) * 2**in_bits
+    lo = codes >> shift  # arithmetic shift == floor for negatives
     frac = (codes & (2**shift - 1)) / float(2**shift)
     # f(x, i) = floor(x) if r(i) <= 1 - frac else floor(x)+eps
     table = lo[None, :] + (r[:, None] > 1.0 - frac[None, :]).astype(np.int64)
-    return np.clip(table, 0, fmt.code_max).astype(np.int32)
+    return np.clip(table, fmt.code_min, fmt.code_max).astype(np.int32)
 
 
 def stochastic_round_via_lut(table: np.ndarray, codes: jax.Array, step: jax.Array):
-    """Apply the rounding LUT with a replayable counter (step index)."""
-    R = table.shape[0]
+    """Apply the rounding LUT with a replayable counter (step index).
+
+    ``codes`` may be signed: the column index is the code's two's-complement
+    bit pattern (negative codes wrap modulo the table width), matching how
+    :func:`build_stochastic_rounding_lut` lays out its columns.
+    """
+    R, width = table.shape
     i = jnp.asarray(step, jnp.int32) % R
-    return jnp.asarray(table)[i, codes]
+    cols = jnp.where(codes < 0, codes + width, codes)
+    return jnp.asarray(table)[i, cols]

@@ -28,6 +28,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(codes_ref, tables_ref, scales_ref, out_ref, *, block_k: int, planes: int):
@@ -90,6 +91,112 @@ def _grouped_kernel(
         0, planes, plane_body, jnp.zeros(out_ref.shape[1:], jnp.float32)
     )
     out_ref[0] += acc
+
+
+def _experts_kernel(
+    offsets_ref,  # (E + 1,) int32 scalar-prefetch: group start offsets
+    codes_ref,
+    tables_ref,
+    scales_ref,
+    out_ref,
+    *,
+    block_b: int,
+    block_k: int,
+    planes: int,
+):
+    """One (group, token, out, expert, chunk) grid step.
+
+    Tokens arrive SORTED by expert (the ``ragged_dot`` layout), so expert
+    ``e`` owns the contiguous row range ``[offsets[e], offsets[e+1])``.  The
+    grid walks every (token block, expert) pair; blocks outside the expert's
+    row range skip the gather entirely (``pl.when``), so compute scales with
+    the actual group occupancy — only the table-tile DMA is dense.  Rows a
+    block shares with a neighbouring expert are masked before accumulation.
+
+    codes_ref  : (bb, n, kb) int32        VMEM (shared across experts/groups)
+    tables_ref : (1, 1, kb, En, pb)       VMEM (this expert+group's tiles)
+    scales_ref : (n, 1) f32               VMEM
+    out_ref    : (1, bb, pb) f32          VMEM (revisited across (e, chunk))
+    """
+    bt, e, kt = pl.program_id(1), pl.program_id(3), pl.program_id(4)
+
+    @pl.when((e == 0) & (kt == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    start, end = offsets_ref[e], offsets_ref[e + 1]
+    row0 = bt * block_b
+
+    @pl.when((start < row0 + block_b) & (end > row0))
+    def _compute():
+        rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (block_b, 1), 0)
+        live = (rows >= start) & (rows < end)  # (bb, 1)
+
+        def plane_body(j, acc):
+            plane = jnp.zeros(out_ref.shape[1:], jnp.float32)
+            for c in range(block_k):  # static unroll over the chunk tile
+                idx = codes_ref[:, j, c]  # (bb,) int32
+                rows_t = jnp.take(tables_ref[0, 0, c], idx, axis=0)  # (bb, pb)
+                plane = plane + rows_t.astype(jnp.float32)
+            return acc + scales_ref[j, 0] * plane
+
+        acc = jax.lax.fori_loop(
+            0, planes, plane_body, jnp.zeros(out_ref.shape[1:], jnp.float32)
+        )
+        out_ref[0] += jnp.where(live, acc, 0.0)
+
+
+def lut_affine_experts_pallas(
+    offsets: jax.Array,  # (E + 1,) int32 cumulative group offsets
+    codes: jax.Array,  # (T, n, k) int32, tokens sorted by expert
+    tables: jax.Array,  # (E, G, k, En, p) pre-stacked expert tables
+    scales: jax.Array,  # (n,) f32
+    *,
+    block_b: int,
+    block_p: int,
+    block_k: int,
+    interpret: bool,
+) -> jax.Array:
+    """Ragged (MoE expert) LUT affine: every token row against its own
+    expert's pre-stacked tables, all ``G`` fused projections of the stack in
+    the same grid.  ``offsets`` is scalar-prefetched (SMEM) so the row-range
+    test runs before any table tile is touched."""
+    T, n, k = codes.shape
+    E, G, k2, En, p = tables.shape
+    assert k == k2, (k, k2)
+    assert offsets.shape == (E + 1,), offsets.shape
+    assert T % block_b == 0 and p % block_p == 0 and k % block_k == 0
+    grid = (G, T // block_b, p // block_p, E, k // block_k)
+
+    kernel = functools.partial(
+        _experts_kernel, block_b=block_b, block_k=block_k, planes=n
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, n, block_k), lambda g, b, q, e, c, offs: (b, 0, c)),
+            pl.BlockSpec(
+                (1, 1, block_k, En, block_p),
+                lambda g, b, q, e, c, offs: (e, g, c, 0, q),
+            ),
+            pl.BlockSpec((n, 1), lambda g, b, q, e, c, offs: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_b, block_p), lambda g, b, q, e, c, offs: (g, b, q)
+        ),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((G, T, p), jnp.float32),
+        interpret=interpret,
+    )(
+        offsets.astype(jnp.int32),
+        codes,
+        tables,
+        scales.reshape(n, 1).astype(jnp.float32),
+    )
 
 
 def lut_affine_grouped_pallas(

@@ -8,9 +8,11 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.common import ceil_to, default_interpret, pad_axis
 from repro.kernels.lut_affine.lut_affine import (
+    lut_affine_experts_pallas,
     lut_affine_grouped_pallas,
     lut_affine_pallas,
 )
@@ -140,3 +142,59 @@ def lut_affine_grouped(
     if biases is not None:
         out = out + biases[:, None, :].astype(out.dtype)
     return out.reshape(G, *lead, p)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_p", "block_k", "interpret")
+)
+def _lut_affine_experts_padded(
+    offsets, codes, tables, scales, block_b, block_p, block_k, interpret
+):
+    return lut_affine_experts_pallas(
+        offsets,
+        codes,
+        tables,
+        scales,
+        block_b=block_b,
+        block_p=block_p,
+        block_k=block_k,
+        interpret=interpret,
+    )
+
+
+def lut_affine_experts(
+    codes: jax.Array,  # (T, n, k) int32 — tokens sorted by expert
+    tables: jax.Array,  # (E, G, k, En, p) — pre-stacked expert tables
+    scales: jax.Array,  # (n,)
+    group_sizes: jax.Array,  # (E,) int32 tokens per expert, sum == T
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Ragged MoE dispatch over pre-stacked expert tables: token row ``t``
+    (sorted by expert, the ``lax.ragged_dot`` layout) is evaluated against
+    its expert's ``tables[e]`` for all ``G`` fused projections in ONE grid —
+    the LUT-affine replacement for a grouped GEMM.  ``tables`` is exactly
+    the scan-sliced leaf a converted expert ``LUTGroup`` stores (a lone
+    ``LUTLinear`` stack passes ``tables[:, None]``)."""
+    if interpret is None:
+        interpret = default_interpret()
+    T, n, k = codes.shape
+    E, G, k2, En, p = tables.shape
+    assert k == k2, f"codes have {k} chunks, tables {k2}"  # before padding
+    assert group_sizes.shape == (E,), (group_sizes.shape, E)
+
+    block_b, block_p, block_k = _pick_blocks(T, k, En, p, n)
+    Tp, pp, kp = ceil_to(T, block_b), ceil_to(p, block_p), ceil_to(k, block_k)
+    codes2 = pad_axis(pad_axis(codes, 0, Tp), 2, kp)
+    # padded chunks index entry 0 of a zero table -> contribute nothing;
+    # padded token rows sit past offsets[-1] -> outside every expert's row
+    # range -> left at the kernel's zero init and sliced off below
+    tables_p = pad_axis(pad_axis(tables, 2, kp), 4, pp)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(group_sizes.astype(jnp.int32))]
+    )
+
+    out = _lut_affine_experts_padded(
+        offsets, codes2, tables_p, scales, block_b, block_p, block_k, interpret
+    )[:, :T, :p]
+    return out

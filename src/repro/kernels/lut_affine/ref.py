@@ -23,3 +23,42 @@ def lut_affine_grouped_ref(
 ) -> jax.Array:
     """(G, B, p): every group member applied to the same packed input."""
     return jax.vmap(lambda t: lut_affine_ref(codes, t, scales))(tables)
+
+
+def expert_of_token(group_sizes: jax.Array, num_tokens: int) -> jax.Array:
+    """(T,) expert id per token for expert-sorted tokens.
+
+    Tokens past ``sum(group_sizes)`` (ragged/padding tail) get id ``E`` —
+    one past the last expert — so gathers against ``tables`` must not see
+    them; callers slice or mask the tail first.
+    """
+    ends = jnp.cumsum(group_sizes.astype(jnp.int32))
+    rows = jnp.arange(num_tokens, dtype=jnp.int32)
+    return jnp.sum(rows[:, None] >= ends[None, :], axis=-1).astype(jnp.int32)
+
+
+def lut_affine_experts_ref(
+    codes: jax.Array,  # (T, n, k) int32 — tokens SORTED by expert
+    tables: jax.Array,  # (E, G, k, En, p) pre-stacked per-expert tables
+    scales: jax.Array,  # (n,)
+    group_sizes: jax.Array,  # (E,) int32, sum == T
+) -> jax.Array:
+    """(G, T, p): row ``t`` evaluated against ITS expert's tables.
+
+    The expert-sorted layout is the one ``lax.ragged_dot`` consumes; this is
+    its LUT-affine equivalent.  One fused gather per (group member, plane,
+    chunk): ``tables[e(t), g, c, codes[t, j, c], :]`` — no per-expert loop
+    and no ``(T, ..., entries, p)`` materialisation.
+    """
+    T = codes.shape[0]
+    E, G, k, _, _ = tables.shape
+    eot = jnp.minimum(expert_of_token(group_sizes, T), E - 1)
+    gathered = tables[
+        eot[:, None, None, None],  # (T, 1, 1, 1)
+        jnp.arange(G, dtype=jnp.int32)[None, :, None, None],
+        jnp.arange(k, dtype=jnp.int32)[None, None, None, :],
+        codes[:, None, :, :],  # (T, 1, n, k)
+    ]  # (T, G, n, k, p)
+    per_plane = jnp.sum(gathered.astype(jnp.float32), axis=-2)  # (T, G, n, p)
+    out = jnp.einsum("tgnp,n->tgp", per_plane, scales.astype(jnp.float32))
+    return jnp.moveaxis(out, 0, 1)  # (G, T, p)

@@ -1,12 +1,36 @@
-"""Mixture-of-experts FFN: top-k routing + MegaBlocks-style grouped GEMM.
+"""Mixture-of-experts FFN: top-k routing + grouped expert execution.
 
 Distribution (DESIGN.md §4): dispatch is *local to each data shard* via
-``jax.shard_map`` — routing, sort and ``lax.ragged_dot`` never cross the data
-axis; expert weights are TP-sharded on d_ff over the model axis (expert-TP,
-not EP, so arbitrary expert counts never constrain the mesh) and the second
-ragged_dot's partial sums reduce with one psum over "model" — the same
-collective a dense TP MLP pays.  Measured on the fake-device mesh: the naive
-GSPMD formulation instead all-gathers the full (T*k, d) dispatch per layer.
+``jax.shard_map`` — routing, sort and the grouped expert evaluation never
+cross the data axis; expert weights are TP-sharded on d_ff over the model
+axis (expert-TP, not EP, so arbitrary expert counts never constrain the
+mesh) and the down-projection's partial sums reduce with one psum over
+"model" — the same collective a dense TP MLP pays.  Measured on the
+fake-device mesh: the naive GSPMD formulation instead all-gathers the full
+(T*k, d) dispatch per layer.  The router's load-balance aux loss is
+pmean'd over the data AND model axes inside the same shard_map, so the
+returned scalar is the global batch mean and genuinely replicated (the
+``P()`` out-spec is sound).
+
+Expert execution dispatches per projection on the parameter leaf:
+
+* raw ``(E, q, p)`` arrays     -> ``lax.ragged_dot`` (dense grouped GEMM)
+* ``core.convert.LUTLinear``   -> the ragged LUT path (TableNet)
+* ``core.convert.LUTGroup``    -> same, both gate/up in one dispatch
+
+so ``convert_params(convert_experts=True)`` trees serve multiplier-free:
+the input decomposition of each token is expert-independent, so LUT codes
+are packed ONCE per token (then gathered into the expert-sorted order) and
+``kernels.lut_affine.lut_affine_experts`` — or its jnp oracle under GSPMD
+— replaces the ragged_dot calls entirely.  Mixed trees (a plan converting
+only some of gate/up/down) execute coherently, each projection on its own
+path.  TP sharding of LUT experts: gate/up tables shard their output dim
+(= d_ff) over "model" exactly like the dense weights; the down tables
+shard their CHUNK axis (the d_ff contraction lives in the chunks), each
+shard packs its local h slice under a chunk-aligned local plan, and the
+same psum reduces the partial sums — when d_ff doesn't split into
+whole chunks per shard, expert TP is dropped (replicated tables,
+redundant compute) rather than served wrong.
 
 Qwen2-MoE-style shared experts run as a dense SwiGLU branch added to the
 routed output, and the router uses the standard load-balancing auxiliary
@@ -14,6 +38,7 @@ loss (Switch §2.2), returned alongside the output.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -22,7 +47,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.configs.base import ModelConfig
-from repro.models.layers import Ctx, mlp, mlp_specs
+from repro.core.convert import LUTGroup, LUTLinear
+from repro.core.lut import LUTPlan, pack_codes, plane_scales
+from repro.models.layers import Ctx, ExecCfg, mlp, mlp_specs
 from repro.models.params import PSpec
 
 
@@ -54,67 +81,193 @@ def _route(x: jax.Array, router_w: jax.Array, cfg: ModelConfig):
     return weights.astype(x.dtype), idx, aux
 
 
-def _moe_local(x, router_w, w_gate, w_up, w_down, *, cfg: ModelConfig, psum_axes):
-    """Per-shard expert compute. x: (T_local, d); weights may be TP slices."""
+# ---------------------------------------------------------------------------
+# Per-projection expert dispatch (dense ragged_dot | ragged LUT)
+# ---------------------------------------------------------------------------
+
+
+def _member_node(experts: dict, name: str):
+    """Resolve a projection by name, whether stored per-name or inside a
+    pre-stacked expert :class:`LUTGroup` (``"w_gate+w_up"`` keys)."""
+    if name in experts:
+        return experts[name]
+    for node in experts.values():
+        if isinstance(node, LUTGroup) and name in node.members:
+            return node
+    raise KeyError(name)
+
+
+def _local_plan(plan: LUTPlan, tables: jax.Array) -> LUTPlan:
+    """The packing plan for a possibly chunk-axis-TP-sliced table leaf: a
+    shard holding ``k_local`` of the ``k`` chunks packs a ``k_local * m``
+    feature slice (exact: LUT affine is linear in the table chunks, and the
+    slicing is only enabled when chunk boundaries align with the shards)."""
+    k_local = tables.shape[-3]
+    if k_local == plan.num_chunks:
+        return plan
+    return dataclasses.replace(plan, in_features=k_local * plan.chunk_size)
+
+
+def _ragged_lut(
+    tables: jax.Array,  # (E, G, k, entries, p)
+    plan: LUTPlan,
+    codes: jax.Array,  # (T, n, k) expert-sorted
+    group_sizes: jax.Array,  # (E,)
+    ex: ExecCfg,
+) -> jax.Array:
+    """(G, T, p) float32 — every token row against ITS expert's tables."""
+    scales = jnp.asarray(plane_scales(plan), jnp.float32)
+    if ex.use_pallas:
+        from repro.kernels.lut_affine.ops import lut_affine_experts
+
+        return lut_affine_experts(codes, tables, scales, group_sizes)
+    from repro.kernels.lut_affine.ref import lut_affine_experts_ref
+
+    return lut_affine_experts_ref(codes, tables, scales, group_sizes)
+
+
+def _moe_local(
+    x, experts: dict, *, cfg: ModelConfig, ex: ExecCfg, psum_axes, mean_axes
+):
+    """Per-shard expert compute. x: (T_local, d); tables/weights may be TP
+    slices.  Dispatches per projection on the leaf type, so dense, fully
+    converted, and mixed expert trees all execute coherently."""
     k = cfg.num_experts_per_tok
-    weights, idx, aux = _route(x, router_w, cfg)
+    weights, idx, aux = _route(x, experts["router"], cfg)
     flat = idx.reshape(-1)  # (T*k,)
     order = jnp.argsort(flat)
     token_of = order // k
-    xs = jnp.take(x, token_of, axis=0)  # (T*k, d) sorted by expert
     group_sizes = jnp.bincount(flat, length=cfg.num_experts)
-    g = jax.lax.ragged_dot(xs, w_gate, group_sizes)
-    u = jax.lax.ragged_dot(xs, w_up, group_sizes)
+
+    # LUT input decomposition is expert-independent: pack x ONCE per token,
+    # then gather the packed codes into the expert-sorted (T*k) order — the
+    # same gather the dense path applies to the raw activations.
+    pack_cache: dict[LUTPlan, jax.Array] = {}
+
+    def sorted_codes(plan: LUTPlan, src: jax.Array, gather: bool) -> jax.Array:
+        if gather:  # src is (T, d): pack per token, gather to (T*k, n, kc)
+            if plan not in pack_cache:
+                pack_cache[plan] = pack_codes(src, plan)
+            return jnp.take(pack_cache[plan], token_of, axis=0)
+        return pack_codes(src, plan)  # src already expert-sorted (h)
+
+    def project(name: str, src: jax.Array, gather: bool) -> jax.Array:
+        """One expert projection over the expert-sorted rows."""
+        node = _member_node(experts, name)
+        if isinstance(node, LUTGroup):
+            g = node.members.index(name)
+            plan = _local_plan(node.plan, node.tables)
+            codes = sorted_codes(plan, src, gather)
+            y = _ragged_lut(node.tables[:, g : g + 1], plan, codes, group_sizes, ex)
+            return y[0].astype(x.dtype)
+        if isinstance(node, LUTLinear):
+            plan = _local_plan(node.plan, node.tables)
+            codes = sorted_codes(plan, src, gather)
+            y = _ragged_lut(node.tables[:, None], plan, codes, group_sizes, ex)[0]
+            return y.astype(x.dtype)
+        rows = jnp.take(src, token_of, axis=0) if gather else src
+        return jax.lax.ragged_dot(rows, node, group_sizes)
+
+    gate_node = _member_node(experts, "w_gate")
+    up_node = _member_node(experts, "w_up")
+    if isinstance(gate_node, LUTGroup) and gate_node is up_node:
+        # pre-stacked gate/up pair: ONE fused ragged dispatch for both
+        plan = _local_plan(gate_node.plan, gate_node.tables)
+        codes = sorted_codes(plan, x, gather=True)
+        gu = _ragged_lut(gate_node.tables, plan, codes, group_sizes, ex)
+        order_g = {m: i for i, m in enumerate(gate_node.members)}
+        g = gu[order_g["w_gate"]].astype(x.dtype)
+        u = gu[order_g["w_up"]].astype(x.dtype)
+    else:
+        g = project("w_gate", x, gather=True)
+        u = project("w_up", x, gather=True)
     h = jax.nn.silu(g) * u  # (T*k, f_local)
-    y = jax.lax.ragged_dot(h, w_down, group_sizes)  # partial over f_local
+    y = project("w_down", h, gather=False)  # partial over f_local
     if psum_axes:
         y = jax.lax.psum(y, psum_axes)
-        aux = jax.lax.pmean(aux, psum_axes)
+    if mean_axes:
+        aux = jax.lax.pmean(aux, mean_axes)
     combine = weights.reshape(-1)[order][:, None].astype(y.dtype)
     out = jnp.zeros_like(x).at[token_of].add(y * combine)
     return out, aux
 
 
+# ---------------------------------------------------------------------------
+# TP sharding of the expert parameter tree
+# ---------------------------------------------------------------------------
+
+
+def _down_chunks_shardable(plan: LUTPlan, tp_size: int) -> bool:
+    """Chunk-axis TP slices are exact only when every shard holds whole
+    chunks covering exactly its d_ff slice (no ragged tail chunk)."""
+    return tp_size > 1 and plan.in_features % (tp_size * plan.chunk_size) == 0
+
+
+def _expert_specs(experts: dict, tp: tuple) -> dict:
+    """shard_map in_specs for the expert tree: one spec per node (a pytree
+    prefix — LUT nodes carry only their table leaf; expert biases are never
+    emitted by conversion).  Gate/up shard their output (d_ff) dim — the
+    table p axis — over the model axis exactly like the dense weights; the
+    down projection shards its contraction: the weight's d_ff dim when
+    dense, the table chunk axis when converted."""
+    tpa = tp[0] if tp else None
+    specs: dict[str, P] = {}
+    for key, node in experts.items():
+        if key == "router":
+            specs[key] = P(None, None)
+        elif isinstance(node, LUTGroup):  # (E, G, k, entries, p=f)
+            specs[key] = P(None, None, None, None, tpa)
+        elif isinstance(node, LUTLinear):
+            if key == "w_down":  # (E, k, entries, d): shard chunks (= d_ff)
+                specs[key] = P(None, tpa, None, None)
+            else:  # (E, k, entries, f): shard the output dim
+                specs[key] = P(None, None, None, tpa)
+        elif key == "w_down":  # (E, f, d)
+            specs[key] = P(None, tpa, None)
+        else:  # raw (E, d, f) gate/up
+            specs[key] = P(None, None, tpa)
+    return specs
+
+
 def moe_ffn(p: dict, x: jax.Array, ctx: Ctx):
     """(B, S, d) -> (B, S, d), aux_loss. shard_map'd when a mesh is active."""
-    from repro.core.convert import LUTLinear
-
-    if isinstance(p.get("w_gate"), LUTLinear):
-        raise NotImplementedError(
-            "convert_params(convert_experts=True) builds expert LUT tables "
-            "for size/op accounting, but moe_ffn has no LUT execution path "
-            "yet (ragged_dot needs the raw expert weights) — serve MoE "
-            "models with experts left dense (the default)"
-        )
     cfg, sh = ctx.cfg, ctx.shard
     B, S, d = x.shape
     xt = x.reshape(B * S, d)
+    experts = {k: v for k, v in p.items() if k not in ("shared", "shared_gate")}
     if sh.mesh is None:
         out, aux = _moe_local(
-            xt, p["router"], p["w_gate"], p["w_up"], p["w_down"], cfg=cfg, psum_axes=()
+            xt, experts, cfg=cfg, ex=ctx.ex, psum_axes=(), mean_axes=()
         )
     else:
         dp = sh.data_axes  # e.g. ("pod", "data")
         tp = sh.model_axes  # ("model",)
+        down = _member_node(experts, "w_down")
+        if isinstance(down, (LUTLinear, LUTGroup)) and not _down_chunks_shardable(
+            down.plan, sh.axis_size(*tp) if tp else 0
+        ):
+            # chunk boundaries don't align with the shards: replicate the
+            # expert tables (redundant compute) rather than serve wrong
+            tp = ()
         # shard_map blocks must divide evenly; tiny decode batches (e.g.
         # long_500k's B=1) replicate over data and compute redundantly
         if (B * S) % max(sh.axis_size(*dp), 1) != 0:
             dp = ()
         tok_spec = P(dp, None) if dp else P(None, None)
-        fn = functools.partial(_moe_local, cfg=cfg, psum_axes=tp)
+        fn = functools.partial(
+            _moe_local,
+            cfg=cfg,
+            ex=ctx.ex,
+            psum_axes=tp,
+            mean_axes=tuple(dp) + tuple(tp),
+        )
         out, aux = shard_map(
             fn,
             mesh=sh.mesh,
-            in_specs=(
-                tok_spec,
-                P(None, None),
-                P(None, None, tp[0] if tp else None),
-                P(None, None, tp[0] if tp else None),
-                P(None, tp[0] if tp else None, None),
-            ),
+            in_specs=(tok_spec, _expert_specs(experts, tp)),
             out_specs=(tok_spec, P()),
             check_vma=False,
-        )(xt, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+        )(xt, experts)
     out = out.reshape(B, S, d)
     if "shared" in p:
         gate = jax.nn.sigmoid(x.astype(jnp.float32) @ p["shared_gate"]).astype(x.dtype)

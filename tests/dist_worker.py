@@ -70,6 +70,48 @@ def mode_train_step_executes():
     return {"loss_diff": dl, "max_param_diff": max(diffs)}
 
 
+def mode_moe_mesh():
+    """moe_ffn on the 2x2x4 mesh, dense AND LUT experts: evenly-divisible
+    batches shard tokens over (pod, data) and the returned aux loss must be
+    exactly the pmean of the shard-local aux losses (it is genuinely
+    replicated, so the P() out-spec is sound); tiny decode batches
+    ((B*S) % data_size != 0) drop data sharding and must reproduce the
+    single-device output AND aux bit-closely."""
+    from repro.configs.base import get_config
+    from repro.core.convert import convert_params
+    from repro.dist.sharding import ShardCtx
+    from repro.models.layers import Ctx, ExecCfg
+    from repro.models.moe import _route, moe_ffn, moe_specs
+    from repro.models.params import init_params
+
+    cfg = get_config("qwen2_moe_a2_7b", reduced=True)
+    mesh = small_mesh()  # dp = pod x data = 4, tp = model = 4
+    p = init_params(moe_specs(cfg), jax.random.PRNGKey(0))
+    lut, rep = convert_params(p, chunk_size=2, convert_experts=True)
+    assert rep.grouped >= 1  # gate/up pre-stacked
+    ctx1 = Ctx(cfg, ex=ExecCfg(remat="none"))
+    ctxm = Ctx(cfg, shard=ShardCtx(mesh), ex=ExecCfg(remat="none"))
+
+    key = jax.random.PRNGKey(1)
+    x_even = jax.random.normal(key, (4, 8, cfg.d_model)) * 0.5  # 32 tok / 4 shards
+    x_tiny = jax.random.normal(key, (1, 1, cfg.d_model)) * 0.5  # 1 % 4 != 0
+    # the aux contract under data sharding: pmean of the per-shard locals
+    shards = x_even.reshape(4, -1, cfg.d_model)  # (pod, data)-major row blocks
+    aux_want = float(np.mean([float(_route(s, p["router"], cfg)[2]) for s in shards]))
+
+    out = {}
+    for name, prm in [("dense", p), ("lut", lut)]:
+        y1, _ = moe_ffn(prm, x_even, ctx1)
+        ym, am = moe_ffn(prm, x_even, ctxm)
+        out[f"{name}_even_out_diff"] = float(jnp.abs(y1 - ym).max())
+        out[f"{name}_even_aux_err"] = abs(float(am) - aux_want)
+        y1t, a1t = moe_ffn(prm, x_tiny, ctx1)
+        ymt, amt = moe_ffn(prm, x_tiny, ctxm)
+        out[f"{name}_tiny_out_diff"] = float(jnp.abs(y1t - ymt).max())
+        out[f"{name}_tiny_aux_diff"] = abs(float(a1t) - float(amt))
+    return out
+
+
 def mode_compression():
     from repro.dist.compression import compressed_psum
 

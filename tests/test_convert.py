@@ -86,19 +86,34 @@ def test_reduced_lm_serves_via_lut(chunk):
 
 
 def test_expert_stack_conversion_builds_correct_tables():
+    from repro.core.convert import LUTGroup, LUTLinear
+
     cfg = get_config("qwen2_moe_a2_7b", reduced=True)
     params = init_params(model_specs(cfg), jax.random.PRNGKey(6))
     lut_params, report = convert_params(
         params, chunk_size=1, convert_experts=True
     )
     blk = jax.tree.map(lambda a: a[0], lut_params["blocks"])  # layer 0
-    w3 = jax.tree.map(lambda a: a[0], params["blocks"])["ffn"]["w_gate"]  # (E, q, p)
-    node = blk["ffn"]["w_gate"]
-    tables = node.tables
-    assert node.plan.chunk_size == 1 and node.plan.fmt.signed
-    E, q, p = w3.shape
+    raw = jax.tree.map(lambda a: a[0], params["blocks"])["ffn"]
+    # gate/up pre-stack into one LUTGroup: (E, G, k, entries, p) per layer
+    group = blk["ffn"]["w_gate+w_up"]
+    assert isinstance(group, LUTGroup)
+    assert group.members == ("w_gate", "w_up")
+    assert group.plan.chunk_size == 1 and group.plan.fmt.signed
+    E, q, p = raw["w_gate"].shape
     plan = LUTPlan(q, p, 1, Float16Format(signed=True))
-    want0 = build_luts(w3[0], plan)
+    for g, name in enumerate(group.members):
+        want0 = build_luts(raw[name][0], plan)  # expert 0's tables
+        np.testing.assert_allclose(
+            np.asarray(group.tables[0, g]), np.asarray(want0),
+            rtol=1e-6, atol=1e-6,
+        )
+    # the down projection stays a lone per-expert LUTLinear stack
+    down = blk["ffn"]["w_down"]
+    assert isinstance(down, LUTLinear)
+    Ed, fd, dd = raw["w_down"].shape
+    dplan = LUTPlan(fd, dd, 1, Float16Format(signed=True))
+    want_down = build_luts(raw["w_down"][0], dplan)
     np.testing.assert_allclose(
-        np.asarray(tables[0]), np.asarray(want0), rtol=1e-6, atol=1e-6
+        np.asarray(down.tables[0]), np.asarray(want_down), rtol=1e-6, atol=1e-6
     )

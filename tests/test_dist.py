@@ -30,6 +30,19 @@ def test_sharded_train_step_matches_single_device():
     assert out["max_param_diff"] < 1e-4, out
 
 
+def test_moe_mesh_tiny_decode_and_aux_pmean_dense_and_lut():
+    """moe_ffn under shard_map, dense AND LUT experts: even batches match
+    the single-device output with aux == pmean of the shard-local losses;
+    tiny decode batches ((B*S) % data != 0) take the replication path and
+    match single-device output and aux."""
+    out = _run("moe_mesh")
+    for name in ("dense", "lut"):
+        assert out[f"{name}_even_out_diff"] < 1e-4, (name, out)
+        assert out[f"{name}_even_aux_err"] < 1e-5, (name, out)
+        assert out[f"{name}_tiny_out_diff"] < 1e-4, (name, out)
+        assert out[f"{name}_tiny_aux_diff"] < 1e-5, (name, out)
+
+
 def test_compressed_psum_correctness():
     out = _run("compression")
     # reduction error bounded by one quantisation step

@@ -11,8 +11,16 @@ from repro.kernels.bitplane_pack.ops import bitplane_pack
 from repro.kernels.bitplane_pack.ref import bitplane_pack_ref
 from repro.kernels.binary_matmul.ops import binary_matmul
 from repro.kernels.binary_matmul.ref import binary_matmul_ref
-from repro.kernels.lut_affine.ops import lut_affine, lut_affine_grouped
-from repro.kernels.lut_affine.ref import lut_affine_grouped_ref, lut_affine_ref
+from repro.kernels.lut_affine.ops import (
+    lut_affine,
+    lut_affine_experts,
+    lut_affine_grouped,
+)
+from repro.kernels.lut_affine.ref import (
+    lut_affine_experts_ref,
+    lut_affine_grouped_ref,
+    lut_affine_ref,
+)
 
 pytestmark = pytest.mark.slow  # interpret-mode Pallas sweeps: ~45s on CPU
 
@@ -120,6 +128,64 @@ def test_lut_affine_grouped_leading_dims_and_bias():
         3, 2, 3, 12
     ) + biases[:, None, None, :]
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# lut_affine_experts (ragged MoE dispatch over pre-stacked expert tables)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "E,G,T,n,k,En,p,sizes",
+    [
+        (1, 1, 1, 1, 1, 2, 1, (1,)),  # degenerate minimum
+        (4, 2, 11, 3, 7, 8, 10, (3, 0, 6, 2)),  # gate/up stack, empty group
+        (8, 1, 16, 11, 32, 64, 96, (2,) * 8),  # w_down stack, fp16 planes
+        (3, 2, 130, 2, 5, 64, 129, (50, 0, 80)),  # T and p beyond one block
+        (2, 2, 6, 4, 130, 16, 130, (1, 5)),  # k beyond one block, skewed
+    ],
+)
+def test_lut_affine_experts_matches_ref(E, G, T, n, k, En, p, sizes, dtype):
+    kc, kt = jax.random.split(jax.random.PRNGKey(E * 13 + T * 7 + k), 2)
+    codes = jax.random.randint(kc, (T, n, k), 0, En)
+    tables = jax.random.normal(kt, (E, G, k, En, p), dtype=jnp.float32).astype(dtype)
+    scales = 2.0 ** jnp.arange(n, dtype=jnp.float32)
+    group_sizes = jnp.asarray(sizes, jnp.int32)
+    got = lut_affine_experts(codes, tables, scales, group_sizes, interpret=True)
+    want = lut_affine_experts_ref(codes, tables, scales, group_sizes)
+    rel = 1e-5 if dtype == jnp.float32 else 2e-2
+    atol = rel * float(np.abs(np.asarray(want)).max() + 1.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rel, atol=atol)
+
+
+def test_lut_affine_experts_equals_segmented_per_expert_dispatch():
+    """The ragged grid == slicing each expert's row segment and running the
+    plain grouped kernel on it (the oracle-of-oracles cross-check)."""
+    E, G, n, k, En, p = 3, 2, 4, 6, 16, 12
+    sizes = (4, 0, 5)
+    T = sum(sizes)
+    kc, kt = jax.random.split(jax.random.PRNGKey(9), 2)
+    codes = jax.random.randint(kc, (T, n, k), 0, En)
+    tables = jax.random.normal(kt, (E, G, k, En, p))
+    scales = 0.5 ** jnp.arange(n, dtype=jnp.float32)
+    got = lut_affine_experts(
+        codes, tables, scales, jnp.asarray(sizes, jnp.int32), interpret=True
+    )
+    start = 0
+    segs = []
+    for e, sz in enumerate(sizes):
+        if sz:
+            segs.append(
+                lut_affine_grouped(
+                    codes[start : start + sz], tables[e], scales, interpret=True
+                )
+            )
+        start += sz
+    want = jnp.concatenate(segs, axis=1)  # (G, T, p) in expert order
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5
+    )
 
 
 def test_pick_blocks_respects_vmem_budget_for_groups():

@@ -87,6 +87,37 @@ def test_stochastic_rounding_unbiased():
     np.testing.assert_allclose(outs.mean(), 3.25, atol=0.05)
 
 
+def test_stochastic_rounding_signed_two_complement():
+    """Regression: signed formats used to be read as unsigned bit patterns
+    and clipped to [0, code_max], zero-clamping every negative code.  The
+    table must floor toward -inf, stay unbiased, and saturate at code_min."""
+    fmt = FixedPointFormat(4, 0, signed=True)
+    table = build_stochastic_rounding_lut(fmt, in_bits=8, R=4096, seed=0)
+    assert int(table.min()) == fmt.code_min  # negative half actually present
+    code = jnp.int32(-52)  # -3.25: floors to -4, rounds up to -3 w.p. 0.25
+    outs = np.asarray(
+        [int(stochastic_round_via_lut(table, code, i)) for i in range(4096)]
+    )
+    assert set(outs) <= {-4, -3}
+    np.testing.assert_allclose(outs.mean(), -3.25, atol=0.05)
+    # exact negative values never dither; the most negative code saturates
+    exact = np.asarray(
+        [int(stochastic_round_via_lut(table, jnp.int32(-64), i)) for i in range(64)]
+    )
+    assert set(exact) == {-4}
+    lowest = np.asarray(
+        [int(stochastic_round_via_lut(table, jnp.int32(-128), i)) for i in range(64)]
+    )
+    assert set(lowest) == {fmt.code_min}
+    # positive codes are untouched by the signed handling
+    pos = np.asarray(
+        [int(stochastic_round_via_lut(table, jnp.int32(0b0011_0100), i))
+         for i in range(4096)]
+    )
+    assert set(pos) <= {3, 4}
+    np.testing.assert_allclose(pos.mean(), 3.25, atol=0.05)
+
+
 # ---------------------------------------------------------------------------
 # LUT exactness: fixed point (bitwise, via integer-valued weights)
 # ---------------------------------------------------------------------------

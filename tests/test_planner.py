@@ -1,8 +1,11 @@
-"""plan_model() budget edge cases, determinism, and ModelPlan round-trips
-(JSON, checkpoint aux, and checkpoint -> restore -> convert)."""
+"""plan_model() budget edge cases, determinism, byte accounting for
+stacked scan/expert weights, and ModelPlan round-trips (JSON, checkpoint
+aux, and checkpoint -> restore -> convert)."""
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import get_config
 from repro.core.convert import convert_params
@@ -43,15 +46,18 @@ def test_unbounded_budget_picks_fewest_ops_plan_per_layer(lm):
     _, params = lm
     mp = plan_model(params, float("inf"), max_chunk=2)
     fmt = Float16Format(signed=True)
-    for key, (q, p) in iter_linear_layers(params):
+    for key, (q, p), copies in iter_linear_layers(params):
         frontier = tradeoff_curve(
             enumerate_plans(q, p, fmt, modes=("bitplane",), max_chunk=2)
         )
         # fewest-ops point on the frontier is the last (largest) one
         assert mp.layers[key] == frontier[-1].plan, key
+        assert mp.copies.get(key, 1) == copies, key
+    # totals scale per table set actually built (scan-stacked layers: L)
     assert mp.total_shift_add_ops == sum(
-        p.shift_add_ops for p in mp.layers.values()
+        mp.copies.get(k, 1) * p.shift_add_ops for k, p in mp.layers.items()
     )
+    assert any(v > 1 for v in mp.copies.values())  # blocks are scan-stacked
 
 
 def test_partial_budget_mixes_chunk_sizes(lm):
@@ -73,6 +79,92 @@ def test_plan_model_is_deterministic(lm):
     assert list(a.layers) == list(b.layers)
     assert a.layers == dict(b.layers)
     assert a.to_json() == b.to_json()
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting for stacked scan / expert weights (the under-count fix)
+# ---------------------------------------------------------------------------
+
+
+def _expert_tree(L: int, E: int, d: int, f: int, seed: int) -> dict:
+    """Minimal MoE-shaped tree: (L?, E, d, f) expert stacks + router."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    lead = (L, E) if L else (E,)
+    return {
+        "moe": {
+            "router": jax.random.normal(ks[0], (d, E)),
+            "w_gate": jax.random.normal(ks[1], lead + (d, f)),
+            "w_up": jax.random.normal(ks[2], lead + (d, f)),
+            "w_down": jax.random.normal(ks[3], lead + (f, d)),
+        }
+    }
+
+
+def test_scan_stacked_bytes_respect_budget():
+    """Regression: a (L, q, p) scan stack builds L table sets, so the
+    planner must charge L x the per-set bytes — the pre-fix planner charged
+    1x and a converted tree could exceed the budget by the scan depth."""
+    L, q, p = 5, 12, 8
+    params = {
+        "stack": {"w": jax.random.normal(jax.random.PRNGKey(0), (L, q, p))},
+        "fc": {"w": jax.random.normal(jax.random.PRNGKey(1), (q, p))},
+    }
+    full = plan_model(params, float("inf"), max_chunk=2)
+    assert full.copies == {"stack": L}
+    lo = plan_model(params, float("inf"), max_chunk=1).total_lut_bytes
+    budget = (lo + full.total_lut_bytes) // 2
+    mp = plan_model(params, budget, max_chunk=2)
+    assert mp.total_lut_bytes <= budget
+    # fp16 tables are the accounting width (out_bits=16): real bytes == plan
+    lut, report = convert_params(params, plan=mp, table_dtype=jnp.float16)
+    assert report.table_bytes == mp.total_lut_bytes
+    assert report.table_bytes <= budget
+    # the single (q, p) per-layer accounting would claim L+1 sets fit where
+    # only the stacked charge reflects what conversion materialises
+    per_set = sum(pl.total_lut_bytes for pl in mp.layers.values())
+    assert report.table_bytes > per_set  # stacked charge really kicked in
+
+
+def test_expert_bytes_respect_budget():
+    """Regression: an expert-converted tree's table bytes stay within the
+    planning budget (pre-fix: exceeded it by the expert count E)."""
+    params = _expert_tree(L=0, E=6, d=10, f=8, seed=2)
+    full = plan_model(params, float("inf"), max_chunk=2, convert_experts=True)
+    assert full.copies["moe/w_gate"] == 6
+    lo = plan_model(
+        params, float("inf"), max_chunk=1, convert_experts=True
+    ).total_lut_bytes
+    budget = (lo + full.total_lut_bytes) // 2
+    mp = plan_model(params, budget, max_chunk=2, convert_experts=True)
+    lut, report = convert_params(
+        params, plan=mp, convert_experts=True, table_dtype=jnp.float16
+    )
+    assert report.table_bytes == mp.total_lut_bytes
+    assert report.table_bytes <= budget
+
+
+@given(E=st.integers(2, 6), L=st.integers(0, 3), frac=st.floats(0.2, 0.95))
+@settings(max_examples=8, deadline=None)
+def test_budget_property_across_expert_counts_and_scan_depths(E, L, frac):
+    """Acceptance property: for any expert count / scan depth / budget in
+    the feasible range, plan_model(..., convert_experts=True) under budget
+    B converts to a tree with report.table_bytes <= B."""
+    params = _expert_tree(L, E, d=8, f=6, seed=E * 31 + L)
+    kw = dict(max_chunk=2, convert_experts=True)
+    lo = plan_model(params, float("inf"), max_chunk=1, convert_experts=True)
+    hi = plan_model(params, float("inf"), **kw)
+    budget = int(lo.total_lut_bytes + frac * (hi.total_lut_bytes - lo.total_lut_bytes))
+    mp = plan_model(params, budget, **kw)
+    assert mp.total_lut_bytes <= budget
+    _, report = convert_params(
+        params, plan=mp, convert_experts=True, table_dtype=jnp.float16
+    )
+    assert report.table_bytes == mp.total_lut_bytes
+    assert report.table_bytes <= budget
+    # copies survive the JSON round trip (budget math is restorable)
+    back = ModelPlan.from_json(mp.to_json())
+    assert back.copies == dict(mp.copies)
+    assert back.total_lut_bytes == mp.total_lut_bytes
 
 
 # ---------------------------------------------------------------------------
