@@ -1,4 +1,15 @@
-"""Render the roofline table from results/dryrun.json (§Roofline source)."""
+"""Render the roofline table from results/dryrun.json (§Roofline source).
+
+CLI (used by the CI bench-gate to publish the roofline artifact):
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch whisper_base \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python benchmarks/roofline_report.py --out ROOFLINE.json
+
+emits the same ``{"name", "value", "unit"}`` row list as the other
+benches (value = roofline fraction, -1 for skipped/failed cells), plus
+the EXPERIMENTS.md markdown table with ``--markdown``.
+"""
 from __future__ import annotations
 
 import json
@@ -14,9 +25,9 @@ def load(path: str = RESULTS) -> list[dict]:
         return json.load(f)
 
 
-def rows() -> list[tuple[str, float, str]]:
+def rows(path: str = RESULTS) -> list[tuple[str, float, str]]:
     out = []
-    for r in sorted(load(), key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+    for r in sorted(load(path), key=lambda r: (r["arch"], r["shape"], r["mesh"])):
         key = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
         if r.get("status") == "ok":
             t = r["terms"]
@@ -53,3 +64,34 @@ def markdown_table(records: list[dict]) -> str:
                 f"| {r.get('status')}: {r.get('reason', r.get('error', ''))[:50]} |"
             )
     return "\n".join(lines)
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default=RESULTS,
+                    help="dryrun records to render (results/dryrun.json)")
+    ap.add_argument("--out", default=None, help="write JSON rows to this path")
+    ap.add_argument("--markdown", action="store_true",
+                    help="print the EXPERIMENTS.md table instead of JSON rows")
+    args = ap.parse_args()
+    if args.markdown:
+        print(markdown_table(load(args.results)))
+        return
+    payload = [
+        {"name": name, "value": value, "unit": unit}
+        for name, value, unit in rows(args.results)
+    ]
+    text = json.dumps(payload, indent=1)
+    print(text)
+    if args.out:
+        parent = os.path.dirname(args.out)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,12 +20,28 @@ end (admission prefills + decode + the one packed readback per step):
 * ``engine_batched_admit`` — multi-slot batched prefill admission
 * ``engine_per_slot_admit`` — one request per prefill call (the retired
   scheduler's admission pattern; CI gates batched >= per-slot)
+* ``engine_paged_admit``   — batched admission over the paged KV cache
+  (page_size=8, on-demand page allocation + prefix sharing).  CI gates
+  paged >= 0.5x the dense-rectangle batched admission: on tiny CPU
+  shapes the per-layer one-hot page write + table gather adds a measured
+  ~1.7x dispatch-bound overhead per decode step (page-size invariant, so
+  it is emulation cost rather than pool-traversal cost); the gate guards
+  against structural collapses (per-step recompiles, quadratic table
+  work), not that constant
 * ``engine_sampled``       — temperature sampling fused on device
 * ``engine_moe_dense`` / ``engine_moe_lut`` — a reduced qwen2-moe config
   served end to end with dense experts (``lax.ragged_dot`` grouped GEMM)
   vs ``convert_experts=True`` LUT experts (the ragged ``lut_affine_experts``
   path, gate/up pre-stacked): the multiplier-free MoE serving path is
   exercised and tracked per commit
+
+The heavy-traffic lane (``serve/heavy_*`` rows, scaled up by ``--heavy``
+for the weekly scheduled run) drives the paged engine open-loop: Poisson
+arrivals, mixed short/long prompts, half the requests opening with a
+shared 16-token system prefix (so admission maps its pages instead of
+re-prefilling), mixed response budgets.  Per mode (dense / planned-LUT /
+grouped-LUT) it reports p50/p99 per-request latency and steady tokens/s
+per slot.
 
 On TPU the LUT gather path is memory-bound and the bitplane-MXU path
 compute-bound (see EXPERIMENTS.md §Perf); this CPU bench demonstrates the
@@ -38,6 +54,7 @@ import statistics
 import time
 
 import jax
+import numpy as np
 
 from repro.configs.base import get_config
 from repro.core.convert import convert_params
@@ -45,7 +62,7 @@ from repro.core.planner import plan_model
 from repro.models.layers import Ctx, ExecCfg, SampleCfg
 from repro.models.model import model_specs
 from repro.models.params import init_params
-from repro.serve.engine import (
+from repro.serve import (
     BatchingEngine,
     Request,
     make_cache,
@@ -108,13 +125,15 @@ def _decode_tps(named_runs, prompts, steps: int, reps: int = 7) -> dict:
     }
 
 
-def _engine_run(params, ctx, *, admit, sample, prompts, max_new, num_slots) -> float:
+def _engine_run(
+    params, ctx, *, admit, sample, prompts, max_new, num_slots, page_size=None
+) -> float:
     """One full engine run (admissions + decode to drain); returns seconds.
-    The jitted steps are lru-cached per (ctx, sample, eos), so repeated
-    engine construction here never recompiles."""
+    The jitted steps are lru-cached per (ctx, sample, eos, paged), so
+    repeated engine construction here never recompiles."""
     eng = BatchingEngine(
         params, ctx, num_slots=num_slots, max_len=32,
-        sample=sample, admit=admit, prefill_bucket=8,
+        sample=sample, admit=admit, prefill_bucket=8, page_size=page_size,
     )
     reqs = [
         Request(uid=i, prompt=p, max_new=max_new) for i, p in enumerate(prompts)
@@ -147,6 +166,9 @@ def _engine_tps(params, ctx, tiny: bool, reps: int = 9) -> dict:
     configs = {
         "engine_batched_admit": dict(admit="batched", sample=SampleCfg()),
         "engine_per_slot_admit": dict(admit="per-slot", sample=SampleCfg()),
+        "engine_paged_admit": dict(
+            admit="batched", sample=SampleCfg(), page_size=8
+        ),
         "engine_sampled": dict(
             admit="batched", sample=SampleCfg(mode="temperature", temperature=0.8)
         ),
@@ -212,7 +234,85 @@ def _engine_moe_tps(tiny: bool, reps: int = 7) -> dict:
     }
 
 
-def rows(tiny: bool = False) -> list[tuple[str, float, str]]:
+def _heavy_workload(vocab: int, n_req: int, seed: int = 5):
+    """Open-loop traffic: Poisson arrivals (exponential gaps), a 50/50 mix
+    of short and long prompts, half of them opening with a shared 16-token
+    system prefix (two pages at ps=8 — admission maps them instead of
+    re-prefilling), and mixed response budgets."""
+    rng = np.random.default_rng(seed)
+    sys_prefix = rng.integers(1, vocab, size=16)
+    arrivals = np.cumsum(rng.exponential(0.002, n_req))
+    prompts, max_news = [], []
+    for _ in range(n_req):
+        plen = int(rng.integers(3, 8) if rng.random() < 0.5
+                   else rng.integers(12, 21))
+        body = rng.integers(1, vocab, size=plen)
+        if rng.random() < 0.5:
+            body = np.concatenate([sys_prefix, body])
+        prompts.append(body.astype(np.int32))
+        max_news.append(int(rng.integers(4, 12)))
+    return arrivals, prompts, max_news
+
+
+def _heavy_run(params, ctx, *, arrivals, prompts, max_news, num_slots,
+               max_len, page_size) -> dict:
+    """Drive the paged engine open-loop against timestamped arrivals;
+    returns p50/p99 per-request latency (ms) and tokens/s per slot."""
+    eng = BatchingEngine(
+        params, ctx, num_slots=num_slots, max_len=max_len, page_size=page_size
+    )
+    reqs = [
+        Request(uid=i, prompt=jax.numpy.asarray(p, jax.numpy.int32), max_new=m)
+        for i, (p, m) in enumerate(zip(prompts, max_news))
+    ]
+    finish: dict[int, float] = {}
+    i = 0
+    t0 = time.perf_counter()
+    while len(finish) < len(reqs):
+        now = time.perf_counter() - t0
+        while i < len(reqs) and arrivals[i] <= now:
+            eng.submit(reqs[i])
+            i += 1
+        active = eng.step()
+        now = time.perf_counter() - t0
+        for r in reqs[:i]:
+            if r.done and r.uid not in finish:
+                finish[r.uid] = now
+        if not active and i < len(reqs):
+            time.sleep(max(0.0, float(arrivals[i]) - now))
+    wall = time.perf_counter() - t0
+    lats = sorted(finish[r.uid] - arrivals[r.uid] for r in reqs)
+    total = sum(len(r.generated) for r in reqs)
+    return {
+        "p50_ms": 1e3 * lats[len(lats) // 2],
+        "p99_ms": 1e3 * lats[min(len(lats) - 1, int(0.99 * len(lats)))],
+        "tok_per_s_per_slot": total / (wall * num_slots),
+    }
+
+
+def _heavy_rows(modes, tiny: bool, heavy: bool) -> list[tuple[str, float, str]]:
+    n_req = 48 if heavy else (10 if tiny else 16)
+    num_slots, max_len, page_size = 4, 48, 8
+    out: list[tuple[str, float, str]] = []
+    note = (
+        f"ms p-latency / tok rate, {n_req} req open-loop Poisson, "
+        f"{num_slots} slots, paged ps={page_size}, shared-prefix 0.5"
+    )
+    for name, params, ctx in modes:
+        kw = dict(num_slots=num_slots, max_len=max_len, page_size=page_size)
+        arrivals, prompts, max_news = _heavy_workload(ctx.cfg.vocab_size, n_req)
+        # warm pass compiles every prefill bucket + the decode step; the
+        # timed pass then measures scheduling, not compilation
+        _heavy_run(params, ctx, arrivals=arrivals, prompts=prompts,
+                   max_news=max_news, **kw)
+        stats = _heavy_run(params, ctx, arrivals=arrivals, prompts=prompts,
+                           max_news=max_news, **kw)
+        for stat, value in stats.items():
+            out.append((f"serve/heavy_{name}_{stat}", round(value, 2), note))
+    return out
+
+
+def rows(tiny: bool = False, heavy: bool = False) -> list[tuple[str, float, str]]:
     cfg = get_config("granite_8b", reduced=True)
     params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
 
@@ -258,6 +358,7 @@ def rows(tiny: bool = False) -> list[tuple[str, float, str]]:
     moe_note = "end-to-end MoE engine run, 2 slots, 4 requests"
     for name, tps in _engine_moe_tps(tiny).items():
         out.append((f"serve/{name}_tok_per_s", round(tps, 2), moe_note))
+    out.extend(_heavy_rows(named_runs, tiny, heavy))
     return out
 
 
@@ -270,11 +371,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--tiny", action="store_true",
                     help="small batch/few steps (CI smoke-bench)")
+    ap.add_argument("--heavy", action="store_true",
+                    help="scale the open-loop traffic lane up (weekly run)")
     ap.add_argument("--out", default=None, help="write JSON rows to this path")
     args = ap.parse_args()
     payload = [
         {"name": name, "value": value, "unit": unit}
-        for name, value, unit in rows(tiny=args.tiny)
+        for name, value, unit in rows(tiny=args.tiny, heavy=args.heavy)
     ]
     text = json.dumps(payload, indent=1)
     print(text)

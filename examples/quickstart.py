@@ -15,7 +15,7 @@ from repro.dist.checkpoint import latest_step, load_aux, save_checkpoint
 from repro.models.layers import Ctx, ExecCfg
 from repro.models.model import model_specs
 from repro.models.params import count_params, init_params
-from repro.serve.engine import generate
+from repro.serve import generate
 from repro.train.trainer import TrainConfig, Trainer
 
 

@@ -19,7 +19,7 @@ from repro.core.planner import plan_model
 from repro.models.layers import Ctx, ExecCfg, SampleCfg
 from repro.models.model import model_specs
 from repro.models.params import init_params
-from repro.serve.engine import BatchingEngine, Request
+from repro.serve import BatchingEngine, Request
 
 
 def main():

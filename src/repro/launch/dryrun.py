@@ -40,7 +40,7 @@ from repro.models.layers import Ctx, ExecCfg
 from repro.models.model import model_specs
 from repro.models.params import abstract_params
 from repro.optim.adamw import AdamWConfig
-from repro.serve.engine import abstract_cache, make_decode_step, make_prefill_step
+from repro.serve import abstract_cache, make_decode_step, make_prefill_step
 from repro.train.trainer import TrainConfig, make_train_step
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results")

@@ -126,7 +126,7 @@ def forward(
     positions: Optional[jax.Array] = None,
     cache: Optional[dict] = None,
 ):
-    from repro.serve.cache import advance_meta
+    from repro.serve._cache import advance_meta
 
     cfg = ctx.cfg
     B, S = tokens.shape

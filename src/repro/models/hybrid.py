@@ -76,7 +76,7 @@ def forward(
     cache: Optional[dict] = None,
     embeds=None,
 ):
-    from repro.serve.cache import advance_meta
+    from repro.serve._cache import advance_meta
 
     cfg = ctx.cfg
     x = embed_tokens(params, tokens, ctx)

@@ -382,8 +382,9 @@ def attention(
 ):
     """Full-sequence (train/prefill) or cached-decode attention.
 
-    Returns (out, new_cache).  ``cache`` layouts are defined in
-    ``repro.serve.cache``; updates use one-hot scatter so the sequence dim
+    Returns (out, new_cache).  ``cache`` layouts (dense and paged) are
+    defined in ``repro.serve._cache``; updates use one-hot scatter so the
+    sequence dim
     of the cache can stay sharded over the model axis (T5X-style — GSPMD
     partitions the one-hot contraction; no dynamic-slice-on-sharded-dim).
     """
@@ -409,17 +410,38 @@ def attention(
     new_cache = None
     if cache is not None and cross_kv is None and S == 1:
         # decode: attend over the cached keys
-        from repro.serve.cache import update_kv_cache
+        from repro.serve._cache import update_kv_cache
 
         cache, k, v, k_pos, k_valid = update_kv_cache(cache, k, v, positions, ctx)
         new_cache = cache
         mask = causal_mask(positions, k_pos, k_valid, cfg.sliding_window)
         q = sh.constrain(q, "batch", None, "heads" if heads_tp else None, None)
+    elif (
+        cache is not None
+        and cross_kv is None
+        and cache["_meta"].page_ids is not None
+        and cfg.sliding_window is None
+    ):
+        # paged prefill: attend through the page-table view — prefix
+        # sharing maps already-written pages into this slot, so the
+        # in-flight keys are not the whole visible context; the causal
+        # mask (query positions start past the shared prefix) plus
+        # ``valid`` exclude everything not written yet
+        from repro.serve._cache import update_kv_cache
+
+        new_cache, k, v, k_pos, k_valid = update_kv_cache(
+            cache, k, v, positions, ctx
+        )
+        mask = causal_mask(positions, k_pos, k_valid)
+        if heads_tp:
+            q = sh.constrain(q, "batch", None, "heads", None)
+        else:
+            q = sh.constrain(q, "batch", "qseq", None, None)
     elif cache is not None and cross_kv is None:
         # prefill (fresh cache): attend over the in-flight keys — the ring
         # cache only retains the last `window` keys, which is state for
         # decode, not a valid view for early query positions
-        from repro.serve.cache import update_kv_cache
+        from repro.serve._cache import update_kv_cache
 
         new_cache, _, _, _, _ = update_kv_cache(cache, k, v, positions, ctx)
         if heads_tp:
@@ -513,14 +535,23 @@ def mla_attention(
     )[:, :, 0]  # (B, S, rdim) shared across heads
 
     if cache is not None and S == 1:
-        from repro.serve.cache import update_mla_cache
+        from repro.serve._cache import update_mla_cache
+
+        cache, c_kv_all, k_rope_all, k_pos, k_valid = update_mla_cache(
+            cache, c_kv, k_rope, positions, ctx
+        )
+        mask = causal_mask(positions, k_pos, k_valid)
+    elif cache is not None and cache["_meta"].page_ids is not None:
+        # paged prefill: attend through the page-table view (prefix
+        # sharing — see the GQA branch in :func:`attention`)
+        from repro.serve._cache import update_mla_cache
 
         cache, c_kv_all, k_rope_all, k_pos, k_valid = update_mla_cache(
             cache, c_kv, k_rope, positions, ctx
         )
         mask = causal_mask(positions, k_pos, k_valid)
     elif cache is not None:  # prefill: write cache, attend in-flight
-        from repro.serve.cache import update_mla_cache
+        from repro.serve._cache import update_mla_cache
 
         cache, _, _, _, _ = update_mla_cache(cache, c_kv, k_rope, positions, ctx)
         c_kv_all, k_rope_all = c_kv, k_rope

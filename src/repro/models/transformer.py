@@ -122,7 +122,7 @@ def forward(
     into the cache and do not advance the per-slot index, so rows whose
     mask is all-False pass through with their cache state untouched.
     """
-    from repro.serve.cache import advance_meta
+    from repro.serve._cache import advance_meta
 
     x = embed_tokens(params, tokens, ctx)
     if embeds is not None:  # VLM: image tokens first (llava layout)

@@ -1,0 +1,55 @@
+"""Public serving API.
+
+This package is the supported surface for serving: import from
+``repro.serve``, not from the implementation modules.  The old deep paths
+(``repro.serve.engine``, ``repro.serve.cache``) still resolve through
+deprecation shims for one release.
+
+Engine / generation:
+  :class:`BatchingEngine` — fixed-slot continuous batching over a
+  device-resident (optionally paged, prefix-shared) cache
+  :class:`Request`, :func:`generate`, :class:`SampleCfg`
+Cache construction and contracts:
+  :func:`make_cache`, :func:`abstract_cache`, :func:`cache_specs`,
+  :func:`advance_meta` -> :class:`CacheWrite`, :class:`CacheOverflowError`
+Paged-mode internals exposed for instrumentation:
+  :class:`PageAllocator` (``engine.alloc``), :class:`PagePoolExhausted`
+"""
+from repro.serve._cache import (
+    CacheOverflowError,
+    CacheWrite,
+    advance_meta,
+    cache_specs,
+    update_kv_cache,
+    update_mla_cache,
+)
+from repro.serve._engine import (
+    BatchingEngine,
+    Request,
+    SampleCfg,
+    abstract_cache,
+    generate,
+    make_cache,
+    make_decode_step,
+    make_prefill_step,
+)
+from repro.serve._paging import PageAllocator, PagePoolExhausted
+
+__all__ = [
+    "BatchingEngine",
+    "CacheOverflowError",
+    "CacheWrite",
+    "PageAllocator",
+    "PagePoolExhausted",
+    "Request",
+    "SampleCfg",
+    "abstract_cache",
+    "advance_meta",
+    "cache_specs",
+    "generate",
+    "make_cache",
+    "make_decode_step",
+    "make_prefill_step",
+    "update_kv_cache",
+    "update_mla_cache",
+]

@@ -1,0 +1,520 @@
+"""Decode caches for every architecture family.
+
+Dense-rectangle layouts (leading ``layers`` axis — stacks scan with the
+blocks):
+  GQA  : k/v      (L, B, T, n_kv, head_dim)     T = max_len or SWA window
+  MLA  : c_kv     (L, B, T, kv_lora), k_rope (L, B, T, rope_dim)
+  SSD  : conv     (L, B, K-1, conv_dim), state (L, B, H, P, N)
+  RWKV : shift_a/shift_c (L, B, d), wkv (L, B, H, hd, hd)
+plus shared metadata: pos (B, T) absolute position per slot, valid (B, T),
+index () — next write offset.
+
+Paged layouts (``cache_specs(..., page_size=)``): attention K/V storage is
+broken into fixed-size pages shared by all slots —
+  GQA  : k/v      (L, num_pages, page_size, n_kv, head_dim)
+  MLA  : c_kv     (L, num_pages, page_size, kv_lora), k_rope likewise
+with a ``page_table`` (B, max_pages) int32 leaf mapping each slot's logical
+page group to a physical page (-1 = unmapped).  ``pos``/``valid``/``index``
+keep their dense (B, T) shapes — T = max_pages * page_size — so the
+metadata contract is unchanged; only the K/V storage is indirected.  Reads
+gather a (B, T, ...) logical view through the table with a one-hot page
+gather; writes scatter through (page, offset) one-hot pairs.  A write whose
+logical slot maps to an unmapped page is *dropped* (all-zero one-hot row)
+and flags ``overflow`` — allocation is the serving layer's job
+(``repro.serve._paging.PageAllocator``), the in-graph side never allocates.
+
+The cached-sequence dim (T, or the page axis when paged) carries the
+``seq_kv`` logical axis => sharded over the *model* mesh axis
+(flash-decoding style).  This is the one layout that shards evenly for
+every assigned arch (kv head counts 8/10/16/32/40 do not all divide 16; T
+always does).  Softmax and the probs@V contraction over the sharded T
+insert only tiny (B*H-sized) all-reduces.
+
+Writes use one-hot contractions, never dynamic-update-slice on the sharded
+dim (the T5X trick), so updates partition cleanly under GSPMD — the paged
+write/gather pairs follow the same discipline.
+
+Overflow policy (non-windowed caches): a write slot ``>= T`` — or, when
+paged, one that lands in an unmapped page — has an all-zero one-hot row, so
+the token would be *silently dropped* — never clamped or wrapped.  Instead
+of dropping, every advance records a per-slot ``overflow`` flag (when the
+cache carries one) that the serving layer reads back and RAISES on
+(:class:`CacheOverflowError`); host-side entry points (``generate``,
+``BatchingEngine.submit``) additionally reject requests that cannot fit
+before anything is traced.  Setting ``REPRO_CACHE_CHECKS=1`` arms an
+in-graph debug assert that raises from inside the computation.
+
+Masked writes: ``advance_meta(..., token_mask=)`` supports right-padded
+multi-slot prefill — masked-out tokens write nothing and do not advance the
+per-slot ``index``, so a single batched prefill can admit several requests
+into their slots while leaving mid-decode slots untouched.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import PSpec
+
+
+class CacheOverflowError(ValueError):
+    """A non-windowed cache write would land past the sequence capacity T
+    (or, for paged caches, in a page no allocator ever mapped).
+
+    One-hot rows for out-of-range slots are all-zero, so without this guard
+    the overflowing tokens would be silently dropped (the pre-PR4 bug)."""
+
+
+class CacheWrite(NamedTuple):
+    """Typed result of :func:`advance_meta`: everything a per-layer write
+    needs, replacing the old parallel-dict-keys convention.
+
+    Always populated for attention caches:
+      slots     (B, S) int32 — explicit write slot per token (post ring
+                slicing; layers never reconstruct slots from index math)
+      mask      (B, S) bool or None — write mask (None = write everything);
+                for paged caches, tokens whose page is unmapped are masked
+                out here too, so metadata never claims unwritten K/V
+      positions (B, S) int32 — absolute positions written (post slicing)
+      overflow  (B,) bool or None — accumulated per-slot overflow flags
+      pos/valid post-write metadata views; index is the PRE-write per-slot
+      offset (gates the fresh-row S == T fast path).
+
+    Paged caches additionally carry:
+      page_ids     (B, S) int32 — physical page per token (-1 = dropped)
+      page_offsets (B, S) int32 — offset within the page
+      page_table   (B, max_pages) int32 — the slot→page map for gathers
+    """
+
+    slots: Optional[jax.Array] = None
+    mask: Optional[jax.Array] = None
+    positions: Optional[jax.Array] = None
+    overflow: Optional[jax.Array] = None
+    pos: Optional[jax.Array] = None
+    valid: Optional[jax.Array] = None
+    index: Optional[jax.Array] = None
+    page_ids: Optional[jax.Array] = None
+    page_offsets: Optional[jax.Array] = None
+    page_table: Optional[jax.Array] = None
+
+
+# ---------------------------------------------------------------------------
+# Cache spec construction (PSpec trees -> works for init AND dry-run)
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(
+    cfg: ModelConfig,
+    batch: int,
+    max_len: int,
+    dtype=None,
+    page_size: int | None = None,
+    num_pages: int | None = None,
+) -> dict:
+    """PSpec tree for a fresh decode cache.
+
+    With ``page_size`` set, attention K/V storage is paged: physical leaves
+    become (L, num_pages, page_size, ...) plus a (batch, max_pages) int32
+    ``page_table``.  ``num_pages`` defaults to ``batch * max_pages`` (every
+    slot can hold a full rectangle — prefix sharing only shrinks from
+    there).  The ring/window capacity must divide evenly into pages so the
+    paged modulus matches the dense one exactly.
+    """
+    T = max_len if cfg.sliding_window is None else min(cfg.sliding_window, max_len)
+    L = cfg.num_layers
+    if page_size is not None:
+        if cfg.family == "ssm":
+            raise ValueError("page_size is meaningless for O(1)-state families")
+        if T % page_size:
+            raise ValueError(
+                f"cache capacity {T} must be a whole number of pages "
+                f"(page_size {page_size}); pad max_len or the window"
+            )
+        max_pages = T // page_size
+        if num_pages is None:
+            num_pages = batch * max_pages
+    tree: dict[str, Any] = {
+        "pos": PSpec((batch, T), ("batch", "seq_kv"), init="zeros", dtype=jnp.int32),
+        "valid": PSpec((batch, T), ("batch", "seq_kv"), init="zeros", dtype=jnp.bool_),
+        # per-sequence write offset: continuous batching gives slots
+        # different lengths
+        "index": PSpec((batch,), ("batch",), init="zeros", dtype=jnp.int32),
+    }
+    if page_size is not None:
+        tree["page_table"] = PSpec(
+            (batch, max_pages), ("batch", None), init="zeros", dtype=jnp.int32
+        )
+
+    def kv(n_layers):
+        if page_size is not None:
+            shape = (n_layers, num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+            axes = ("layers", "seq_kv", None, None, None)
+        else:
+            shape = (n_layers, batch, T, cfg.num_kv_heads, cfg.head_dim)
+            axes = ("layers", "batch", "seq_kv", None, None)
+        return {
+            "k": PSpec(shape, axes, init="zeros"),
+            "v": PSpec(shape, axes, init="zeros"),
+        }
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.attention == "mla":
+            if page_size is not None:
+                lead, axes = (L, num_pages, page_size), ("layers", "seq_kv", None, None)
+            else:
+                lead, axes = (L, batch, T), ("layers", "batch", "seq_kv", None)
+            tree["layers"] = {
+                "c_kv": PSpec(lead + (cfg.kv_lora_rank,), axes, init="zeros"),
+                "k_rope": PSpec(lead + (cfg.qk_rope_head_dim,), axes, init="zeros"),
+            }
+        else:
+            tree["layers"] = kv(L)
+    elif cfg.family == "hybrid":  # zamba2: ssd states + shared-attn kv caches
+        n_shared = _num_shared_invocations(cfg)
+        tree["layers"] = _ssd_state_specs(cfg, L, batch)
+        tree["shared_attn"] = kv(n_shared)
+    elif cfg.family == "ssm":  # rwkv6
+        H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+        shift_axes = ("layers", "batch", None)
+        tree["layers"] = {
+            "shift_a": PSpec((L, batch, cfg.d_model), shift_axes, init="zeros"),
+            "shift_c": PSpec((L, batch, cfg.d_model), shift_axes, init="zeros"),
+            "wkv": PSpec(
+                (L, batch, H, hd, hd),
+                ("layers", "batch", "heads", None, None),
+                init="zeros",
+                dtype=jnp.float32,
+            ),
+        }
+        # rwkv needs no pos/valid ring: state is O(1)
+        tree.pop("pos"), tree.pop("valid")
+    elif cfg.family == "encdec":  # whisper: decoder self-KV + static cross-KV
+        tree["layers"] = kv(L)
+        # cross-KV is written once at prefill and never grows: a dense
+        # rectangle regardless of paging
+        tree["cross"] = {
+            "k": PSpec(
+                (L, batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                ("layers", "batch", "seq_kv", None, None),
+                init="zeros",
+            ),
+            "v": PSpec(
+                (L, batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                ("layers", "batch", "seq_kv", None, None),
+                init="zeros",
+            ),
+        }
+    else:
+        raise ValueError(cfg.family)
+    return tree
+
+
+def _num_shared_invocations(cfg: ModelConfig) -> int:
+    if not cfg.shared_attn_every:
+        return 0
+    return cfg.num_layers // cfg.shared_attn_every
+
+
+def _ssd_state_specs(cfg: ModelConfig, L: int, batch: int) -> dict:
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": PSpec(
+            (L, batch, cfg.conv_kernel - 1, conv_dim),
+            ("layers", "batch", None, None),
+            init="zeros",
+        ),
+        "state": PSpec(
+            (L, batch, cfg.mamba_heads, cfg.mamba_head_dim, cfg.ssm_state),
+            ("layers", "batch", "heads", None, None),
+            init="zeros",
+            dtype=jnp.float32,
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Metadata advance (once per step) + one-hot writes (per layer)
+# ---------------------------------------------------------------------------
+
+
+def _debug_overflow_assert(overflowed: jax.Array) -> None:
+    """Env-gated in-graph assert (REPRO_CACHE_CHECKS=1): raise from inside
+    the computation when any slot overflowed its cache row."""
+    if not os.environ.get("REPRO_CACHE_CHECKS"):
+        return
+
+    def _check(o):
+        if bool(o.any()):
+            raise CacheOverflowError(
+                "cache write past max_len detected in-graph "
+                f"(overflowed slots: {o.nonzero()[0].tolist()})"
+            )
+
+    jax.debug.callback(_check, overflowed)
+
+
+def advance_meta(
+    cache: dict,
+    positions: jax.Array,
+    window: int | None,
+    token_mask: jax.Array | None = None,
+) -> tuple[dict, CacheWrite]:
+    """Advance pos/valid/index for the S tokens written this step.
+
+    Returns ``(new_cache, write)`` where ``write`` is a :class:`CacheWrite`
+    carrying everything the per-layer writes need: post-write
+    ``pos``/``valid``, the *pre-write* per-slot ``index``, the explicit
+    write ``slots`` (B, S) and the write ``mask`` ((B, S) bool or None) —
+    layers never reconstruct slots from index arithmetic.  ``token_mask``
+    marks real tokens in a right-padded batch: masked positions write
+    nothing and do not advance ``index``.  For paged caches the write also
+    carries per-token (page, offset) pairs resolved through the slot's
+    ``page_table`` row; tokens whose page is unmapped are dropped from the
+    write mask and flag ``overflow``.
+    """
+    S_consumed = positions.shape[1]
+    if "pos" not in cache:  # O(1)-state families (rwkv): index only
+        adv = (
+            token_mask.sum(1).astype(jnp.int32)
+            if token_mask is not None
+            else S_consumed
+        )
+        new = dict(cache, index=cache["index"] + adv)
+        return new, CacheWrite(positions=positions, index=cache["index"])
+    T = cache["pos"].shape[1]
+    paged = "page_table" in cache
+    S = S_consumed
+    mask = token_mask
+    if window is not None and S > T:
+        # ring cache: only the last T tokens survive; slicing first keeps
+        # slot writes unique (T consecutive positions mod T is a permutation)
+        positions = positions[:, -T:]
+        mask = mask[:, -T:] if mask is not None else None
+        S = T
+    meta_mask = mask
+    if window is not None:
+        slots = positions % T
+        overflow = cache.get("overflow")
+    else:
+        slots = cache["index"][:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+        over = slots >= T  # would be an all-zero one-hot row: token dropped
+        if mask is not None:
+            over = over & mask
+        over_rows = over.any(1)
+        if not paged:
+            _debug_overflow_assert(over_rows)
+        overflow = (
+            cache["overflow"] | over_rows if "overflow" in cache else None
+        )
+        if mask is None and S == T and not paged:
+            # the per-layer writes take the whole-row fast path here
+            # (:func:`_fresh_overwrite`), which cannot express a partially
+            # in-range (0 < index < T) write — suppress those rows' pos/
+            # valid writes too, so metadata never claims slots whose K/V
+            # were not written (the row is flagged overflow above instead)
+            meta_mask = jnp.broadcast_to(
+                (cache["index"] == 0)[:, None], slots.shape
+            )
+    page_ids = page_offsets = table = None
+    if paged:
+        table = cache["page_table"]
+        max_pages = table.shape[1]
+        page_size = T // max_pages
+        grp = jnp.clip(slots // page_size, 0, max_pages - 1)
+        page_offsets = slots % page_size
+        pid = jnp.take_along_axis(table, grp, axis=1)
+        # a token is dropped when its slot is out of range OR its page was
+        # never mapped by the allocator — either way the one-hot row is
+        # all-zero, so flag it instead of losing the token silently
+        dropped = (slots >= T) | (pid < 0)
+        if mask is not None:
+            dropped = dropped & mask
+        drop_rows = dropped.any(1)
+        _debug_overflow_assert(drop_rows)
+        if overflow is not None:
+            overflow = overflow | drop_rows
+        page_ids = jnp.where(dropped, -1, pid)
+        # dropped tokens write neither K/V (page -1) nor pos/valid
+        mask = mask & ~dropped if mask is not None else ~dropped
+        meta_mask = mask
+    mvalid = (
+        meta_mask.astype(jnp.int32)[..., None]
+        if meta_mask is not None
+        else jnp.ones(slots.shape + (1,), jnp.int32)
+    )
+    oh = jax.nn.one_hot(slots, T, dtype=jnp.int32) * mvalid  # (B, S, T)
+    written = oh.sum(1)  # (B, T)
+    pos = cache["pos"] * (1 - written) + jnp.einsum(
+        "bst,bs->bt", oh, positions.astype(jnp.int32)
+    )
+    valid = cache["valid"] | (written > 0)
+    adv = (
+        token_mask.sum(1).astype(jnp.int32)
+        if token_mask is not None
+        else S_consumed
+    )
+    new = dict(cache, pos=pos, valid=valid, index=cache["index"] + adv)
+    if overflow is not None:
+        new["overflow"] = overflow
+    write = CacheWrite(
+        slots=slots,
+        mask=mask,
+        positions=positions,
+        overflow=overflow,
+        pos=pos,
+        valid=valid,
+        index=cache["index"],  # pre-write offsets (fast-path gating)
+        page_ids=page_ids,
+        page_offsets=page_offsets,
+        page_table=table,
+    )
+    return new, write
+
+
+def _onehot_write(
+    buf: jax.Array,
+    new: jax.Array,
+    slots: jax.Array,
+    mask: jax.Array | None = None,
+) -> jax.Array:
+    """buf: (B, T, ...); new: (B, S, ...); slots: (B, S) -> updated buf.
+    ``mask`` (B, S) suppresses writes for padded / inactive positions."""
+    T = buf.shape[1]
+    oh = jax.nn.one_hot(slots, T, dtype=buf.dtype)  # (B, S, T)
+    if mask is not None:
+        oh = oh * mask.astype(buf.dtype)[..., None]
+    keep = 1 - oh.sum(1)  # (B, T)
+    keep = keep.reshape(keep.shape + (1,) * (buf.ndim - 2))
+    add = jnp.einsum("bst,bs...->bt...", oh, new)
+    return buf * keep + add
+
+
+def _paged_write(
+    buf: jax.Array,
+    new: jax.Array,
+    page_ids: jax.Array,
+    page_offsets: jax.Array,
+    mask: jax.Array | None = None,
+) -> jax.Array:
+    """buf: (num_pages, page_size, ...); new: (B, S, ...) scattered through
+    per-token (page, offset) one-hot pairs.  ``page_ids`` -1 rows are
+    all-zero one-hots: dropped tokens write nothing (``advance_meta`` has
+    already flagged them overflow).  Slots own their mapped pages
+    exclusively at write time (COW duplicates shared pages first), so the
+    scatter is collision-free by construction."""
+    num_pages, page_size = buf.shape[:2]
+    ohp = jax.nn.one_hot(page_ids, num_pages, dtype=buf.dtype)  # (B, S, NP)
+    oho = jax.nn.one_hot(page_offsets, page_size, dtype=buf.dtype)  # (B, S, PS)
+    if mask is not None:
+        ohp = ohp * mask.astype(buf.dtype)[..., None]
+    keep = 1 - jnp.einsum("bsn,bsp->np", ohp, oho)
+    keep = keep.reshape(keep.shape + (1,) * (buf.ndim - 2))
+    add = jnp.einsum("bsn,bsp,bs...->np...", ohp, oho, new)
+    return buf * keep + add
+
+
+def paged_view(buf: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Gather the (B, T, ...) logical view of paged (num_pages, page_size,
+    ...) storage through the slot→page table (one-hot gather over the
+    sharded page axis; unmapped -1 entries read as zeros, masked by
+    ``valid`` downstream)."""
+    num_pages, page_size = buf.shape[:2]
+    B, max_pages = page_table.shape
+    oh = jax.nn.one_hot(page_table, num_pages, dtype=buf.dtype)  # (B, MP, NP)
+    pages = jnp.einsum("bmn,np...->bmp...", oh, buf)  # (B, MP, PS, ...)
+    return pages.reshape((B, max_pages * page_size) + buf.shape[2:])
+
+
+def copy_pages(buf: jax.Array, src: jax.Array, dst: jax.Array) -> jax.Array:
+    """Copy whole physical pages ``src[i] -> dst[i]`` in layer-stacked
+    (L, num_pages, page_size, ...) storage — the in-graph half of
+    copy-on-write: the engine duplicates a shared page into a private one
+    before the divergent tail is written over it.  -1 entries are no-ops;
+    src/dst must be -1 together."""
+    num_pages = buf.shape[1]
+    ohs = jax.nn.one_hot(src, num_pages, dtype=buf.dtype)  # (C, NP)
+    ohd = jax.nn.one_hot(dst, num_pages, dtype=buf.dtype)
+    gathered = jnp.einsum("cn,ln...->lc...", ohs, buf)  # (L, C, PS, ...)
+    keep = 1 - ohd.sum(0)  # (NP,)
+    keep = keep.reshape((1, num_pages) + (1,) * (buf.ndim - 2))
+    add = jnp.einsum("cn,lc...->ln...", ohd, gathered)
+    return buf * keep + add
+
+
+def _fresh_overwrite(buf, new, index):
+    """S == T fast path, gated PER ROW on a fresh slot (pre-write index 0):
+    fresh rows take the whole-row overwrite; non-fresh rows stay entirely
+    unchanged — a (B, S, T) one-hot is never materialized.  A non-fresh
+    row's write is rejected as a unit: ``advance_meta`` flags it overflow
+    and suppresses its pos/valid updates too (see the ``S == T`` branch
+    there), so metadata never claims slots this path did not write.  The
+    pre-PR4 bug was overwriting ALL rows from slot 0 regardless of
+    ``index``, clobbering mid-decode sequences."""
+    sel = (index == 0).reshape((buf.shape[0],) + (1,) * (buf.ndim - 1))
+    return jnp.where(sel, new, buf)
+
+
+def update_kv_cache(cache: dict, k, v, positions, ctx):
+    """Write new K/V (B, S, ...) and return full cache views + key metadata.
+
+    ``cache`` is one layer's {"k", "v"} plus the step-level "_meta"
+    :class:`CacheWrite` from :func:`advance_meta` (post-write pos/valid,
+    pre-write index, explicit write slots + mask, page routing when paged).
+    """
+    w: CacheWrite = cache["_meta"]
+    S_w = w.slots.shape[1]
+    if positions.shape[1] > S_w:  # ring: only the last T tokens survive
+        k, v = k[:, -S_w:], v[:, -S_w:]
+    kd, vd = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+    if w.page_ids is not None:
+        new_k = _paged_write(cache["k"], kd, w.page_ids, w.page_offsets, w.mask)
+        new_v = _paged_write(cache["v"], vd, w.page_ids, w.page_offsets, w.mask)
+        new_k = ctx.shard.constrain(new_k, "seq_kv", None, None, None)
+        new_v = ctx.shard.constrain(new_v, "seq_kv", None, None, None)
+        k_all = paged_view(new_k, w.page_table)
+        v_all = paged_view(new_v, w.page_table)
+        k_all = ctx.shard.constrain(k_all, "batch", "seq_kv", None, None)
+        v_all = ctx.shard.constrain(v_all, "batch", "seq_kv", None, None)
+        return {"k": new_k, "v": new_v}, k_all, v_all, w.pos, w.valid
+    T = cache["k"].shape[1]
+    window = ctx.cfg.sliding_window
+    if S_w == T and window is None and w.mask is None:
+        new_k = _fresh_overwrite(cache["k"], kd, w.index)
+        new_v = _fresh_overwrite(cache["v"], vd, w.index)
+    else:
+        new_k = _onehot_write(cache["k"], kd, w.slots, w.mask)
+        new_v = _onehot_write(cache["v"], vd, w.slots, w.mask)
+    new_k = ctx.shard.constrain(new_k, "batch", "seq_kv", None, None)
+    new_v = ctx.shard.constrain(new_v, "batch", "seq_kv", None, None)
+    return {"k": new_k, "v": new_v}, new_k, new_v, w.pos, w.valid
+
+
+def update_mla_cache(cache: dict, c_kv, k_rope, positions, ctx):
+    w: CacheWrite = cache["_meta"]
+    S_w = w.slots.shape[1]
+    cd = c_kv.astype(cache["c_kv"].dtype)
+    rd = k_rope.astype(cache["k_rope"].dtype)
+    if w.page_ids is not None:
+        new_c = _paged_write(cache["c_kv"], cd, w.page_ids, w.page_offsets, w.mask)
+        new_r = _paged_write(cache["k_rope"], rd, w.page_ids, w.page_offsets, w.mask)
+        new_c = ctx.shard.constrain(new_c, "seq_kv", None, None)
+        new_r = ctx.shard.constrain(new_r, "seq_kv", None, None)
+        c_all = paged_view(new_c, w.page_table)
+        r_all = paged_view(new_r, w.page_table)
+        c_all = ctx.shard.constrain(c_all, "batch", "seq_kv", None)
+        r_all = ctx.shard.constrain(r_all, "batch", "seq_kv", None)
+        return {"c_kv": new_c, "k_rope": new_r}, c_all, r_all, w.pos, w.valid
+    T = cache["c_kv"].shape[1]
+    if S_w == T and w.mask is None:
+        new_c = _fresh_overwrite(cache["c_kv"], cd, w.index)
+        new_r = _fresh_overwrite(cache["k_rope"], rd, w.index)
+    else:
+        new_c = _onehot_write(cache["c_kv"], cd, w.slots, w.mask)
+        new_r = _onehot_write(cache["k_rope"], rd, w.slots, w.mask)
+    new_c = ctx.shard.constrain(new_c, "batch", "seq_kv", None)
+    new_r = ctx.shard.constrain(new_r, "batch", "seq_kv", None)
+    return {"c_kv": new_c, "k_rope": new_r}, new_c, new_r, w.pos, w.valid

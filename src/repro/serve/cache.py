@@ -1,338 +1,28 @@
-"""Decode caches for every architecture family.
+"""Deprecated module path — import from :mod:`repro.serve` instead.
 
-Layouts (leading ``layers`` axis — stacks scan with the blocks):
-  GQA  : k/v      (L, B, T, n_kv, head_dim)     T = max_len or SWA window
-  MLA  : c_kv     (L, B, T, kv_lora), k_rope (L, B, T, rope_dim)
-  SSD  : conv     (L, B, K-1, conv_dim), state (L, B, H, P, N)
-  RWKV : shift_a/shift_c (L, B, d), wkv (L, B, H, hd, hd)
-plus shared metadata: pos (B, T) absolute position per slot, valid (B, T),
-index () — next write offset.
-
-The cached-sequence dim T carries the ``seq_kv`` logical axis => sharded over
-the *model* mesh axis (flash-decoding style).  This is the one layout that
-shards evenly for every assigned arch (kv head counts 8/10/16/32/40 do not
-all divide 16; T always does).  Softmax and the probs@V contraction over the
-sharded T insert only tiny (B*H-sized) all-reduces.
-
-Writes use one-hot contractions, never dynamic-update-slice on the sharded
-dim (the T5X trick), so updates partition cleanly under GSPMD.
-
-Overflow policy (non-windowed caches): a write slot ``>= T`` has an all-zero
-``jax.nn.one_hot`` row, so the token would be *silently dropped* — never
-clamped or wrapped.  Instead of dropping, every advance records a per-slot
-``overflow`` flag (when the cache carries one) that the serving layer reads
-back and RAISES on (:class:`CacheOverflowError`); host-side entry points
-(``generate``, ``BatchingEngine.submit``) additionally reject requests that
-cannot fit before anything is traced.  Setting ``REPRO_CACHE_CHECKS=1``
-arms an in-graph debug assert that raises from inside the computation.
-
-Masked writes: ``advance_meta(..., token_mask=)`` supports right-padded
-multi-slot prefill — masked-out tokens write nothing and do not advance the
-per-slot ``index``, so a single batched prefill can admit several requests
-into their slots while leaving mid-decode slots untouched.
+Every attribute still resolves (forwarded to ``repro.serve._cache``) but
+emits a ``DeprecationWarning``; this shim is removed next release.
 """
 from __future__ import annotations
 
-import os
-from typing import Any
+import warnings
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs.base import ModelConfig
-from repro.models.params import PSpec
+from repro.serve import _cache
 
 
-class CacheOverflowError(ValueError):
-    """A non-windowed cache write would land past the sequence capacity T.
-
-    One-hot rows for out-of-range slots are all-zero, so without this guard
-    the overflowing tokens would be silently dropped (the pre-PR4 bug)."""
-
-
-# ---------------------------------------------------------------------------
-# Cache spec construction (PSpec trees -> works for init AND dry-run)
-# ---------------------------------------------------------------------------
-
-
-def cache_specs(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> dict:
-    """PSpec tree for a fresh decode cache."""
-    T = max_len if cfg.sliding_window is None else min(cfg.sliding_window, max_len)
-    L = cfg.num_layers
-    tree: dict[str, Any] = {
-        "pos": PSpec((batch, T), ("batch", "seq_kv"), init="zeros", dtype=jnp.int32),
-        "valid": PSpec((batch, T), ("batch", "seq_kv"), init="zeros", dtype=jnp.bool_),
-        # per-sequence write offset: continuous batching gives slots
-        # different lengths
-        "index": PSpec((batch,), ("batch",), init="zeros", dtype=jnp.int32),
-    }
-    def kv(n_layers):
-        return {
-            "k": PSpec(
-                (n_layers, batch, T, cfg.num_kv_heads, cfg.head_dim),
-                ("layers", "batch", "seq_kv", None, None),
-                init="zeros",
-            ),
-            "v": PSpec(
-                (n_layers, batch, T, cfg.num_kv_heads, cfg.head_dim),
-                ("layers", "batch", "seq_kv", None, None),
-                init="zeros",
-            ),
-        }
-    if cfg.family in ("dense", "moe", "vlm"):
-        if cfg.attention == "mla":
-            tree["layers"] = {
-                "c_kv": PSpec(
-                    (L, batch, T, cfg.kv_lora_rank),
-                    ("layers", "batch", "seq_kv", None),
-                    init="zeros",
-                ),
-                "k_rope": PSpec(
-                    (L, batch, T, cfg.qk_rope_head_dim),
-                    ("layers", "batch", "seq_kv", None),
-                    init="zeros",
-                ),
-            }
-        else:
-            tree["layers"] = kv(L)
-    elif cfg.family == "hybrid":  # zamba2: ssd states + shared-attn kv caches
-        n_shared = _num_shared_invocations(cfg)
-        tree["layers"] = _ssd_state_specs(cfg, L, batch)
-        tree["shared_attn"] = kv(n_shared)
-    elif cfg.family == "ssm":  # rwkv6
-        H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
-        shift_axes = ("layers", "batch", None)
-        tree["layers"] = {
-            "shift_a": PSpec((L, batch, cfg.d_model), shift_axes, init="zeros"),
-            "shift_c": PSpec((L, batch, cfg.d_model), shift_axes, init="zeros"),
-            "wkv": PSpec(
-                (L, batch, H, hd, hd),
-                ("layers", "batch", "heads", None, None),
-                init="zeros",
-                dtype=jnp.float32,
-            ),
-        }
-        # rwkv needs no pos/valid ring: state is O(1)
-        tree.pop("pos"), tree.pop("valid")
-    elif cfg.family == "encdec":  # whisper: decoder self-KV + static cross-KV
-        tree["layers"] = kv(L)
-        tree["cross"] = {
-            "k": PSpec(
-                (L, batch, max_len, cfg.num_kv_heads, cfg.head_dim),
-                ("layers", "batch", "seq_kv", None, None),
-                init="zeros",
-            ),
-            "v": PSpec(
-                (L, batch, max_len, cfg.num_kv_heads, cfg.head_dim),
-                ("layers", "batch", "seq_kv", None, None),
-                init="zeros",
-            ),
-        }
-    else:
-        raise ValueError(cfg.family)
-    return tree
-
-
-def _num_shared_invocations(cfg: ModelConfig) -> int:
-    if not cfg.shared_attn_every:
-        return 0
-    return cfg.num_layers // cfg.shared_attn_every
-
-
-def _ssd_state_specs(cfg: ModelConfig, L: int, batch: int) -> dict:
-    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
-    return {
-        "conv": PSpec(
-            (L, batch, cfg.conv_kernel - 1, conv_dim),
-            ("layers", "batch", None, None),
-            init="zeros",
-        ),
-        "state": PSpec(
-            (L, batch, cfg.mamba_heads, cfg.mamba_head_dim, cfg.ssm_state),
-            ("layers", "batch", "heads", None, None),
-            init="zeros",
-            dtype=jnp.float32,
-        ),
-    }
-
-
-# ---------------------------------------------------------------------------
-# Metadata advance (once per step) + one-hot writes (per layer)
-# ---------------------------------------------------------------------------
-
-
-def _debug_overflow_assert(overflowed: jax.Array) -> None:
-    """Env-gated in-graph assert (REPRO_CACHE_CHECKS=1): raise from inside
-    the computation when any slot overflowed its cache row."""
-    if not os.environ.get("REPRO_CACHE_CHECKS"):
-        return
-
-    def _check(o):
-        if bool(o.any()):
-            raise CacheOverflowError(
-                "cache write past max_len detected in-graph "
-                f"(overflowed slots: {o.nonzero()[0].tolist()})"
-            )
-
-    jax.debug.callback(_check, overflowed)
-
-
-def advance_meta(
-    cache: dict,
-    positions: jax.Array,
-    window: int | None,
-    token_mask: jax.Array | None = None,
-) -> tuple[dict, dict]:
-    """Advance pos/valid/index for the S tokens written this step.
-
-    Returns ``(new_cache, meta)`` where ``meta`` carries everything the
-    per-layer writes need: post-write ``pos``/``valid``, the *pre-write*
-    per-slot ``index``, the explicit write ``slots`` (B, S) and the write
-    ``mask`` ((B, S) bool or None) — layers never reconstruct slots from
-    index arithmetic.  ``token_mask`` marks real tokens in a right-padded
-    batch: masked positions write nothing and do not advance ``index``.
-    """
-    S_consumed = positions.shape[1]
-    if "pos" not in cache:  # O(1)-state families (rwkv): index only
-        adv = (
-            token_mask.sum(1).astype(jnp.int32)
-            if token_mask is not None
-            else S_consumed
-        )
-        new = dict(cache, index=cache["index"] + adv)
-        return new, {"index": cache["index"]}
-    T = cache["pos"].shape[1]
-    S = S_consumed
-    mask = token_mask
-    if window is not None and S > T:
-        # ring cache: only the last T tokens survive; slicing first keeps
-        # slot writes unique (T consecutive positions mod T is a permutation)
-        positions = positions[:, -T:]
-        mask = mask[:, -T:] if mask is not None else None
-        S = T
-    meta_mask = mask
-    if window is not None:
-        slots = positions % T
-        overflow = cache.get("overflow")
-    else:
-        slots = cache["index"][:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
-        over = slots >= T  # would be an all-zero one-hot row: token dropped
-        if mask is not None:
-            over = over & mask
-        over_rows = over.any(1)
-        _debug_overflow_assert(over_rows)
-        overflow = (
-            cache["overflow"] | over_rows if "overflow" in cache else None
-        )
-        if mask is None and S == T:
-            # the per-layer writes take the whole-row fast path here
-            # (:func:`_fresh_overwrite`), which cannot express a partially
-            # in-range (0 < index < T) write — suppress those rows' pos/
-            # valid writes too, so metadata never claims slots whose K/V
-            # were not written (the row is flagged overflow above instead)
-            meta_mask = jnp.broadcast_to(
-                (cache["index"] == 0)[:, None], slots.shape
-            )
-    mvalid = (
-        meta_mask.astype(jnp.int32)[..., None]
-        if meta_mask is not None
-        else jnp.ones(slots.shape + (1,), jnp.int32)
+def __getattr__(name: str):
+    if name.startswith("__"):  # import machinery probes; never warn
+        raise AttributeError(name)
+    try:
+        value = getattr(_cache, name)
+    except AttributeError:
+        raise AttributeError(
+            f"module 'repro.serve.cache' has no attribute {name!r}"
+        ) from None
+    warnings.warn(
+        "repro.serve.cache is deprecated; import from repro.serve instead "
+        "(this shim is removed next release)",
+        DeprecationWarning,
+        stacklevel=2,
     )
-    oh = jax.nn.one_hot(slots, T, dtype=jnp.int32) * mvalid  # (B, S, T)
-    written = oh.sum(1)  # (B, T)
-    pos = cache["pos"] * (1 - written) + jnp.einsum(
-        "bst,bs->bt", oh, positions.astype(jnp.int32)
-    )
-    valid = cache["valid"] | (written > 0)
-    adv = (
-        token_mask.sum(1).astype(jnp.int32)
-        if token_mask is not None
-        else S_consumed
-    )
-    new = dict(cache, pos=pos, valid=valid, index=cache["index"] + adv)
-    if overflow is not None:
-        new["overflow"] = overflow
-    meta = {
-        "pos": pos,
-        "valid": valid,
-        "index": cache["index"],  # pre-write offsets (fast-path gating)
-        "slots": slots,
-        "mask": mask,
-    }
-    return new, meta
-
-
-def _onehot_write(
-    buf: jax.Array,
-    new: jax.Array,
-    slots: jax.Array,
-    mask: jax.Array | None = None,
-) -> jax.Array:
-    """buf: (B, T, ...); new: (B, S, ...); slots: (B, S) -> updated buf.
-    ``mask`` (B, S) suppresses writes for padded / inactive positions."""
-    T = buf.shape[1]
-    oh = jax.nn.one_hot(slots, T, dtype=buf.dtype)  # (B, S, T)
-    if mask is not None:
-        oh = oh * mask.astype(buf.dtype)[..., None]
-    keep = 1 - oh.sum(1)  # (B, T)
-    keep = keep.reshape(keep.shape + (1,) * (buf.ndim - 2))
-    add = jnp.einsum("bst,bs...->bt...", oh, new)
-    return buf * keep + add
-
-
-def _fresh_overwrite(buf, new, index):
-    """S == T fast path, gated PER ROW on a fresh slot (pre-write index 0):
-    fresh rows take the whole-row overwrite; non-fresh rows stay entirely
-    unchanged — a (B, S, T) one-hot is never materialized.  A non-fresh
-    row's write is rejected as a unit: ``advance_meta`` flags it overflow
-    and suppresses its pos/valid updates too (see the ``S == T`` branch
-    there), so metadata never claims slots this path did not write.  The
-    pre-PR4 bug was overwriting ALL rows from slot 0 regardless of
-    ``index``, clobbering mid-decode sequences."""
-    sel = (index == 0).reshape((buf.shape[0],) + (1,) * (buf.ndim - 1))
-    return jnp.where(sel, new, buf)
-
-
-def update_kv_cache(cache: dict, k, v, positions, ctx):
-    """Write new K/V (B, S, ...) and return full cache views + key metadata.
-
-    ``cache`` is one layer's {"k", "v"} plus the step-level "_meta" dict
-    from :func:`advance_meta` (post-write pos/valid, pre-write index,
-    explicit write slots + mask).
-    """
-    meta = cache["_meta"]
-    T = cache["k"].shape[1]
-    window = ctx.cfg.sliding_window
-    S = positions.shape[1]
-    if window is not None and S > T:  # ring: only the last T tokens survive
-        k, v = k[:, -T:], v[:, -T:]
-        S = T
-    slots, mask = meta["slots"], meta["mask"]
-    kd, vd = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
-    if S == T and window is None and mask is None:
-        new_k = _fresh_overwrite(cache["k"], kd, meta["index"])
-        new_v = _fresh_overwrite(cache["v"], vd, meta["index"])
-    else:
-        new_k = _onehot_write(cache["k"], kd, slots, mask)
-        new_v = _onehot_write(cache["v"], vd, slots, mask)
-    new_k = ctx.shard.constrain(new_k, "batch", "seq_kv", None, None)
-    new_v = ctx.shard.constrain(new_v, "batch", "seq_kv", None, None)
-    return {"k": new_k, "v": new_v}, new_k, new_v, meta["pos"], meta["valid"]
-
-
-def update_mla_cache(cache: dict, c_kv, k_rope, positions, ctx):
-    meta = cache["_meta"]
-    T = cache["c_kv"].shape[1]
-    S = positions.shape[1]
-    slots, mask = meta["slots"], meta["mask"]
-    cd = c_kv.astype(cache["c_kv"].dtype)
-    rd = k_rope.astype(cache["k_rope"].dtype)
-    if S == T and mask is None:
-        new_c = _fresh_overwrite(cache["c_kv"], cd, meta["index"])
-        new_r = _fresh_overwrite(cache["k_rope"], rd, meta["index"])
-    else:
-        new_c = _onehot_write(cache["c_kv"], cd, slots, mask)
-        new_r = _onehot_write(cache["k_rope"], rd, slots, mask)
-    new_c = ctx.shard.constrain(new_c, "batch", "seq_kv", None)
-    new_r = ctx.shard.constrain(new_r, "batch", "seq_kv", None)
-    return {"c_kv": new_c, "k_rope": new_r}, new_c, new_r, meta["pos"], meta["valid"]
+    return value

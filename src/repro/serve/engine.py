@@ -1,460 +1,28 @@
-"""Serving engine: a device-resident batched scheduler over slot caches.
+"""Deprecated module path — import from :mod:`repro.serve` instead.
 
-The TableNet integration is first-class: pass ``lut_params`` (from
-``core.convert.convert_params``, ideally per-layer-planned via
-``core.planner.plan_model``) and every converted projection executes via
-the paper's LUT path — ``ExecCfg(use_pallas=True)`` routes through the
-Pallas kernel on real devices, the jnp oracle otherwise, and
-``ExecCfg(lut_grouped=True)`` additionally fuses same-shape projections
-(QKV, gate/up) into one grouped dispatch per decode step.  The scheduler
-is agnostic to all of it: both steps inherit the choice from the ``Ctx``
-they are built with, so the grouped pre-stacked fast path rides through
-unchanged.
-
-Scheduler architecture (``BatchingEngine``):
-
-* **Device-resident slot state.**  The cache carries, besides the KV ring,
-  per-slot ``slot_active`` / ``slot_remaining`` / ``slot_key`` /
-  ``next_tok`` / ``overflow`` leaves.  Both the prefill and the decode
-  step are jitted functions ``(params, cache, ...) -> (cache, packed)``
-  whose cache argument is **donated** — steady-state decode does zero
-  full-cache allocations (XLA aliases every cache buffer in place) and no
-  host-side cache surgery ever happens (the old ``_splice_cache``
-  full-cache copies are gone).
-* **Fused on-device sampling.**  ``SampleCfg`` (greedy / temperature /
-  top-k) executes inside the jitted steps.  Non-greedy draws use
-  ``fold_in(slot_key, index)`` — ``slot_key`` is derived from the request
-  uid at admission and ``index`` is the slot's write offset — so a sampled
-  stream is a pure function of (engine seed, uid, position) and identical
-  under batched-admit and per-slot-admit schedules.
-* **Batched multi-slot prefill.**  Admission right-pads up to
-  ``num_slots`` queued prompts into one (num_slots, S_bucket) batch and
-  runs ONE prefill that writes each prompt directly into its slot via the
-  one-hot slot machinery (``token_mask`` masks pad positions and
-  mid-decode slots).  ``admit="per-slot"`` admits one request per prefill
-  call instead — same compiled step, more calls (the measured baseline in
-  ``benchmarks/serving.py``).
-* **One small readback per step.**  Each step returns a packed (B, 3)
-  int32 array ``[token, done, overflow]``; ``step()`` reads it back once
-  (steady-state decode: exactly one host readback; an admission round
-  adds one for its prefill).  Blocking per-slot ``int(...)`` scalar syncs
-  are gone.
-
-Overflow policy: requests that cannot fit (``prompt + max_new - 1 >
-max_len``) raise :class:`CacheOverflowError` at ``submit()``; the packed
-``overflow`` column (accumulated by the cache layer whenever a write slot
-would fall past ``max_len``) is checked on every readback as a backstop,
-so overflowing tokens can never be silently dropped.
-
-``decode_step`` is what the decode_32k / long_500k dry-run cells lower: one
-new token against a seq_len-deep cache, caches seq-sharded over the model
-axis (DESIGN.md §4).
+Every attribute still resolves (forwarded to ``repro.serve._engine``) but
+emits a ``DeprecationWarning``; this shim is removed next release.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable, Optional
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.base import ModelConfig
-from repro.models.layers import Ctx, SampleCfg, sample_tokens
-from repro.models.model import model_forward
-from repro.models.params import abstract_params, init_params
-from repro.serve.cache import CacheOverflowError, cache_specs
-
-__all__ = [
-    "BatchingEngine",
-    "CacheOverflowError",
-    "Request",
-    "SampleCfg",
-    "abstract_cache",
-    "generate",
-    "make_cache",
-    "make_decode_step",
-    "make_prefill_step",
-]
-
-# families whose caches support slot-targeted masked prefill writes
-_ENGINE_FAMILIES = ("dense", "moe", "vlm")
+from repro.serve import _engine
 
 
-def make_cache(
-    cfg: ModelConfig, batch: int, max_len: int, ctx: Ctx, dtype=jnp.bfloat16
-):
-    specs = cache_specs(cfg, batch, max_len)
-    return init_params(specs, jax.random.PRNGKey(0), default_dtype=dtype)
-
-
-def abstract_cache(
-    cfg: ModelConfig, batch: int, max_len: int, ctx: Ctx, dtype=jnp.bfloat16
-):
-    specs = cache_specs(cfg, batch, max_len)
-    return abstract_params(
-        specs,
-        default_dtype=dtype,
-        sharding_fn=(
-            ctx.shard.param_sharding if ctx.shard.mesh is not None else None
-        ),
+def __getattr__(name: str):
+    if name.startswith("__"):  # import machinery probes; never warn
+        raise AttributeError(name)
+    try:
+        value = getattr(_engine, name)
+    except AttributeError:
+        raise AttributeError(
+            f"module 'repro.serve.engine' has no attribute {name!r}"
+        ) from None
+    warnings.warn(
+        "repro.serve.engine is deprecated; import from repro.serve instead "
+        "(this shim is removed next release)",
+        DeprecationWarning,
+        stacklevel=2,
     )
-
-
-def _serve_ctx(ctx: Ctx) -> Ctx:
-    return dataclasses.replace(ctx, ex=dataclasses.replace(ctx.ex, remat="none"))
-
-
-def _slot_keys(cache: dict) -> jax.Array:
-    """Per-slot sampling keys at the current write offsets (B, 2) uint32."""
-    return jax.vmap(jax.random.fold_in)(cache["slot_key"], cache["index"])
-
-
-def make_prefill_step(ctx: Ctx) -> Callable:
-    """(params, inputs, cache) -> (last-token logits, filled cache)."""
-    sctx = _serve_ctx(ctx)
-
-    def prefill(params, inputs, cache):
-        logits, cache, _ = model_forward(params, inputs, sctx, cache=cache)
-        return logits[:, -1:], cache
-
-    return prefill
-
-
-def make_decode_step(ctx: Ctx, sample: SampleCfg | None = None) -> Callable:
-    """(params, cache, tokens (B,1)) -> (next tokens (B,1), logits, cache).
-
-    With a non-greedy ``sample``, the cache must carry a ``slot_key`` leaf
-    ((B, 2) uint32 per-row PRNG keys); sampling runs fused on device.
-    """
-    scfg = sample or SampleCfg()
-    sctx = _serve_ctx(ctx)
-
-    def decode(params, cache, tokens):
-        logits, cache, _ = model_forward(
-            params, {"tokens": tokens}, sctx, cache=cache
-        )
-        keys = _slot_keys(cache) if scfg.mode != "greedy" else None
-        nxt = sample_tokens(logits[:, -1], scfg, keys)[:, None]
-        return nxt, logits, cache
-
-    return decode
-
-
-def generate(
-    params,
-    ctx: Ctx,
-    prompts: jax.Array,
-    max_new: int,
-    max_len: int | None = None,
-    eos_id: Optional[int] = None,
-    enc_embeds: jax.Array | None = None,
-    embeds: jax.Array | None = None,
-    sample: SampleCfg | None = None,
-    key: jax.Array | None = None,
-) -> jax.Array:
-    """Reference generation loop used by tests/examples.
-
-    Semantics are aligned with :class:`BatchingEngine`: each row stops at
-    its first ``eos_id`` token (the EOS itself is emitted); since the
-    return value is rectangular (B, max_new), positions past a row's EOS
-    are padded with ``eos_id``.  Non-greedy ``sample`` draws with
-    ``fold_in(fold_in(key, row), position)`` per row.  Raises
-    :class:`CacheOverflowError` up front when ``prompt + max_new - 1``
-    writes cannot fit in ``max_len`` (a non-windowed cache would silently
-    drop the overflowing tokens otherwise — the pre-PR4 bug).
-    """
-    B, S = prompts.shape
-    scfg = sample or SampleCfg()
-    pre = S + (embeds.shape[1] if embeds is not None else 0)
-    T = max_len or (pre + max_new)
-    if ctx.cfg.sliding_window is None and pre + max_new - 1 > T:
-        raise CacheOverflowError(
-            f"prompt ({pre} tokens) + max_new ({max_new}) needs "
-            f"{pre + max_new - 1} cache slots but max_len is {T}; raise "
-            "max_len — overflowing one-hot writes would drop tokens"
-        )
-    cache = make_cache(ctx.cfg, B, T, ctx)
-    if scfg.mode != "greedy":
-        base = key if key is not None else jax.random.PRNGKey(0)
-        cache["slot_key"] = jax.vmap(
-            lambda r: jax.random.fold_in(base, r)
-        )(jnp.arange(B, dtype=jnp.int32))
-    prefill = jax.jit(make_prefill_step(ctx), donate_argnums=(2,))
-    decode = jax.jit(make_decode_step(ctx, scfg), donate_argnums=(1,))
-    inputs = {"tokens": prompts}
-    if enc_embeds is not None:
-        inputs["enc_embeds"] = enc_embeds
-    if embeds is not None:
-        inputs["embeds"] = embeds
-    logits, cache = prefill(params, inputs, cache)
-    keys = _slot_keys(cache) if scfg.mode != "greedy" else None
-    tok = sample_tokens(logits[:, -1], scfg, keys)[:, None]
-    out = [tok]
-    done = np.zeros((B,), bool)
-    for _ in range(max_new - 1):
-        if eos_id is not None:
-            done = done | (np.asarray(tok[:, 0]) == eos_id)
-            if done.all():
-                break
-        tok, _, cache = decode(params, cache, tok)
-        if eos_id is not None:
-            tok = jnp.where(jnp.asarray(done)[:, None], eos_id, tok)
-        out.append(tok)
-    toks = jnp.concatenate(out, axis=1)
-    if toks.shape[1] < max_new:  # every row hit EOS early: pad rectangle
-        pad = jnp.full((B, max_new - toks.shape[1]), eos_id, jnp.int32)
-        toks = jnp.concatenate([toks, pad], axis=1)
-    return toks
-
-
-# ---------------------------------------------------------------------------
-# Device-resident batched scheduler
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: Any  # (S,) int32
-    max_new: int
-    generated: list = dataclasses.field(default_factory=list)
-    done: bool = False
-
-
-@functools.lru_cache(maxsize=32)
-def _engine_steps(ctx: Ctx, scfg: SampleCfg, eos_id: Optional[int]):
-    """Compiled engine steps, shared across engine instances (lru-cached so
-    repeated engine construction — benchmarks, tests — never recompiles).
-
-    prefill: (params, cache, tokens, lens, admit, uids, max_news, base_key)
-             -> (cache, packed)
-    decode:  (params, cache) -> (cache, packed)
-    with packed (B, 3) int32 = [sampled token, done, overflow] — the single
-    small array the host reads back per step.  Both donate their cache.
-    """
-    # force logits="all": the batched prefill gathers each slot's logits at
-    # its own last REAL position (lens - 1); under logits="last" the model
-    # would return only the right-padded final position's head — pad logits
-    sctx = dataclasses.replace(
-        ctx, ex=dataclasses.replace(ctx.ex, remat="none", logits="all")
-    )
-
-    def _sample(last, cache):
-        keys = _slot_keys(cache) if scfg.mode != "greedy" else None
-        return sample_tokens(last, scfg, keys)
-
-    def _packed(tok, done, cache):
-        return jnp.stack(
-            [tok, done.astype(jnp.int32), cache["overflow"].astype(jnp.int32)],
-            axis=1,
-        )
-
-    def prefill(params, cache, tokens, lens, admit, uids, max_news, base_key):
-        B, S = tokens.shape
-        fresh_keys = jax.vmap(lambda u: jax.random.fold_in(base_key, u))(uids)
-        adm1 = admit[:, None]
-        cache = dict(
-            cache,
-            index=jnp.where(admit, 0, cache["index"]),
-            pos=jnp.where(adm1, 0, cache["pos"]),
-            valid=cache["valid"] & ~adm1,
-            overflow=cache["overflow"] & ~admit,
-            slot_key=jnp.where(adm1, fresh_keys, cache["slot_key"]),
-            slot_remaining=jnp.where(admit, max_news - 1, cache["slot_remaining"]),
-        )
-        mask = (jnp.arange(S, dtype=jnp.int32)[None, :] < lens[:, None]) & adm1
-        logits, cache, _ = model_forward(
-            params, {"tokens": tokens, "token_mask": mask}, sctx, cache=cache
-        )
-        last = jnp.take_along_axis(
-            logits, jnp.maximum(lens - 1, 0)[:, None, None], axis=1
-        )[:, 0]
-        tok = _sample(last, cache)
-        eos_hit = (tok == eos_id) if eos_id is not None else jnp.zeros_like(admit)
-        done = admit & (eos_hit | (cache["slot_remaining"] <= 0))
-        cache = dict(
-            cache,
-            slot_active=(cache["slot_active"] | admit) & ~done,
-            next_tok=jnp.where(adm1, tok[:, None], cache["next_tok"]),
-        )
-        return cache, _packed(tok, done, cache)
-
-    def decode(params, cache):
-        active = cache["slot_active"]
-        logits, cache, _ = model_forward(
-            params,
-            {"tokens": cache["next_tok"], "token_mask": active[:, None]},
-            sctx,
-            cache=cache,
-        )
-        tok = _sample(logits[:, -1], cache)
-        remaining = cache["slot_remaining"] - active.astype(jnp.int32)
-        eos_hit = (tok == eos_id) if eos_id is not None else jnp.zeros_like(active)
-        done = active & (eos_hit | (remaining <= 0))
-        cache = dict(
-            cache,
-            slot_remaining=remaining,
-            slot_active=active & ~done,
-            next_tok=jnp.where(active[:, None], tok[:, None], cache["next_tok"]),
-        )
-        return cache, _packed(tok, done, cache)
-
-    return (
-        jax.jit(prefill, donate_argnums=(1,)),
-        jax.jit(decode, donate_argnums=(1,)),
-    )
-
-
-def _bucket(n: int, cap: int) -> int:
-    """Right-pad prompts to a power-of-two bucket (bounds recompilation)."""
-    b = 4
-    while b < n:
-        b *= 2
-    return min(b, cap)
-
-
-class BatchingEngine:
-    """Fixed-slot continuous batching, fully device-resident: finished
-    sequences are swapped out for queued requests between decode steps via
-    batched masked prefill (see the module docstring for the scheduler
-    architecture, sampling determinism, readback and overflow contracts).
-    """
-
-    def __init__(
-        self,
-        params,
-        ctx: Ctx,
-        num_slots: int,
-        max_len: int,
-        eos_id: Optional[int] = None,
-        sample: SampleCfg | None = None,
-        seed: int = 0,
-        admit: str = "batched",
-        prefill_bucket: int | None = None,
-    ):
-        if ctx.cfg.family not in _ENGINE_FAMILIES:
-            raise NotImplementedError(
-                f"BatchingEngine needs slot-targeted cache writes; family "
-                f"{ctx.cfg.family!r} has recurrent/cross caches without them"
-            )
-        if admit not in ("batched", "per-slot"):
-            raise ValueError(f"admit must be 'batched' or 'per-slot': {admit!r}")
-        self.params, self.ctx = params, ctx
-        self.num_slots, self.max_len = num_slots, max_len
-        self.eos_id = eos_id
-        self.sample = sample or SampleCfg()
-        self.admit_mode = admit
-        self.queue: list[Request] = []
-        self.slots: list[Optional[Request]] = [None] * num_slots
-        self.cache = make_cache(ctx.cfg, num_slots, max_len, ctx)
-        self._T = self.cache["pos"].shape[1]  # min(window, max_len) for SWA
-        self.prefill_bucket = prefill_bucket
-        if prefill_bucket is not None and prefill_bucket > self._T:
-            raise ValueError(
-                f"prefill_bucket {prefill_bucket} exceeds cache capacity {self._T}"
-            )
-        self.cache.update(
-            overflow=jnp.zeros((num_slots,), bool),
-            slot_active=jnp.zeros((num_slots,), bool),
-            slot_remaining=jnp.zeros((num_slots,), jnp.int32),
-            slot_key=jnp.zeros((num_slots, 2), jnp.uint32),
-            next_tok=jnp.zeros((num_slots, 1), jnp.int32),
-        )
-        self._base_key = jax.random.PRNGKey(seed)
-        self._prefill, self._decode = _engine_steps(ctx, self.sample, eos_id)
-        self.readbacks = 0  # host syncs: 1/decode step + 1/admission prefill
-
-    def submit(self, req: Request):
-        plen = int(req.prompt.shape[0])
-        if plen < 1:
-            raise ValueError(f"request {req.uid}: empty prompt")
-        cap = self.prefill_bucket or self._T
-        if plen > cap:
-            raise ValueError(
-                f"request {req.uid}: prompt ({plen}) exceeds the prefill "
-                f"capacity ({cap} tokens)"
-            )
-        if (
-            self.ctx.cfg.sliding_window is None
-            and plen + req.max_new - 1 > self.max_len
-        ):
-            raise CacheOverflowError(
-                f"request {req.uid}: prompt ({plen}) + max_new ({req.max_new}) "
-                f"needs {plen + req.max_new - 1} cache slots but max_len is "
-                f"{self.max_len}; overflowing writes would drop tokens"
-            )
-        self.queue.append(req)
-
-    def _check(self, packed) -> np.ndarray:
-        """The ONE host readback per step; backstop overflow check."""
-        arr = np.asarray(packed)
-        self.readbacks += 1
-        if arr[:, 2].any():
-            raise CacheOverflowError(
-                f"cache overflow flagged for slots {arr[:, 2].nonzero()[0].tolist()}"
-            )
-        return arr
-
-    def _admit(self):
-        while self.queue and any(s is None for s in self.slots):
-            free = [i for i, s in enumerate(self.slots) if s is None]
-            limit = 1 if self.admit_mode == "per-slot" else len(free)
-            batch: list[Request] = []
-            while self.queue and len(batch) < limit:
-                req = self.queue.pop(0)
-                if req.max_new <= 0:
-                    req.done = True  # nothing requested; don't pay a prefill
-                    continue
-                batch.append(req)
-            if not batch:
-                return
-            B = self.num_slots
-            S = self.prefill_bucket or _bucket(
-                max(int(r.prompt.shape[0]) for r in batch), self._T
-            )
-            tokens = np.zeros((B, S), np.int32)
-            lens = np.ones((B,), np.int32)
-            admit = np.zeros((B,), bool)
-            uids = np.zeros((B,), np.int32)
-            max_news = np.ones((B,), np.int32)
-            placed = list(zip(batch, free))
-            for req, s in placed:
-                plen = int(req.prompt.shape[0])
-                tokens[s, :plen] = np.asarray(req.prompt)
-                lens[s], admit[s] = plen, True
-                uids[s], max_news[s] = req.uid, req.max_new
-            self.cache, packed = self._prefill(
-                self.params, self.cache, tokens, lens, admit, uids,
-                max_news, self._base_key,
-            )
-            arr = self._check(packed)
-            for req, s in placed:
-                req.generated.append(int(arr[s, 0]))
-                if arr[s, 1]:  # EOS at prefill or max_new == 1: free the
-                    req.done = True  # slot now; keep admitting into it
-                else:
-                    self.slots[s] = req
-
-    def step(self) -> bool:
-        """One decode step over all active slots; returns True if any active."""
-        self._admit()
-        if all(r is None for r in self.slots):
-            return False
-        self.cache, packed = self._decode(self.params, self.cache)
-        arr = self._check(packed)
-        for s, req in enumerate(self.slots):
-            if req is None:
-                continue
-            req.generated.append(int(arr[s, 0]))
-            if arr[s, 1]:
-                req.done = True
-                self.slots[s] = None
-        return True
-
-    def run(self) -> list[Request]:
-        all_reqs = list(self.queue)
-        while self.step():
-            pass
-        return all_reqs
+    return value

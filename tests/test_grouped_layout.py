@@ -25,7 +25,7 @@ from repro.dist.checkpoint import load_aux, restore_checkpoint, save_checkpoint
 from repro.models.layers import Ctx, ExecCfg, fused_linears, linear
 from repro.models.model import model_specs
 from repro.models.params import abstract_params, init_params
-from repro.serve.engine import generate, make_cache, make_decode_step
+from repro.serve import generate, make_cache, make_decode_step
 
 
 def _lm(arch="granite_8b", seed=0):

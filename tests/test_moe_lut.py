@@ -25,7 +25,7 @@ from repro.models.layers import Ctx, ExecCfg
 from repro.models.model import model_forward, model_specs
 from repro.models.moe import moe_ffn, moe_specs
 from repro.models.params import init_params
-from repro.serve.engine import (
+from repro.serve import (
     BatchingEngine,
     Request,
     generate,

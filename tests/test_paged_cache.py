@@ -1,0 +1,416 @@
+"""Paged KV cache + copy-on-write prefix sharing.
+
+Fast tests cover the pure pieces: page routing in ``advance_meta``
+(including the unmapped-page overflow contract), the paged write/gather
+pair against the dense one-hot reference, in-graph page copies, the
+host-side allocator's refcount/registry/eviction bookkeeping, and the
+``repro.serve`` public API + deprecation shims.
+
+Slow tests are the acceptance bar: paged ``generate`` and the paged
+``BatchingEngine`` produce token streams identical to the dense rectangle
+(dense AND grouped-LUT execution), a shared system prompt is prefilled
+once across N admissions with refcounted pages freed on retire, allocated
+pages track ``ceil(len/page_size)`` rather than ``max_len``, and the
+capacity edges (EOS at the final page slot, prompt + max_new exactly at
+capacity, SWA ring wraparound over reused pages) hold.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models.layers import Ctx, ExecCfg
+from repro.models.model import model_specs
+from repro.models.params import init_params
+from repro.serve import (
+    BatchingEngine,
+    CacheOverflowError,
+    Request,
+    advance_meta,
+    cache_specs,
+    generate,
+)
+from repro.serve._cache import _onehot_write, _paged_write, copy_pages, paged_view
+from repro.serve._paging import PageAllocator
+
+B, T, PS, KV, HD = 2, 16, 4, 2, 4
+MP = T // PS
+
+
+def _ctx(name="granite_8b", window=None):
+    cfg = get_config(name, reduced=True)
+    if window is not None:
+        cfg = dataclasses.replace(cfg, sliding_window=window)
+    return Ctx(cfg, ex=ExecCfg(remat="none"))
+
+
+def _paged_meta_cache(table=None, index=None):
+    if table is None:  # identity mapping: slot b group g -> page b*MP+g
+        table = np.arange(B * MP, dtype=np.int32).reshape(B, MP)
+    return {
+        "pos": jnp.zeros((B, T), jnp.int32),
+        "valid": jnp.zeros((B, T), bool),
+        "index": jnp.zeros((B,), jnp.int32) if index is None else jnp.asarray(index),
+        "overflow": jnp.zeros((B,), bool),
+        "page_table": jnp.asarray(table, jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# advance_meta page routing + overflow contract
+# ---------------------------------------------------------------------------
+
+
+def test_advance_meta_routes_pages():
+    S = 6
+    cache = _paged_meta_cache(index=[0, 5])
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    new, w = advance_meta(cache, positions, None)
+    assert w.page_ids is not None and w.page_offsets is not None
+    slots = np.asarray(w.slots)
+    np.testing.assert_array_equal(
+        np.asarray(w.page_offsets), slots % PS
+    )
+    table = np.arange(B * MP).reshape(B, MP)
+    want_pid = np.take_along_axis(table, slots // PS, axis=1)
+    np.testing.assert_array_equal(np.asarray(w.page_ids), want_pid)
+    assert not bool(new["overflow"].any())
+    np.testing.assert_array_equal(np.asarray(new["index"]), [6, 11])
+
+
+def test_advance_meta_unmapped_page_flags_overflow():
+    """A write landing in an unmapped (-1) page must flag overflow and be
+    excluded from the write mask AND pos/valid — never silently dropped
+    with metadata claiming it."""
+    table = np.arange(B * MP, dtype=np.int32).reshape(B, MP)
+    table[1, 1] = -1  # slot 1's second page unmapped
+    S = 6  # slot 1 writes slots 0..5 -> group 1 (slots 4, 5) is unmapped
+    cache = _paged_meta_cache(table=table)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    new, w = advance_meta(cache, positions, None)
+    np.testing.assert_array_equal(np.asarray(new["overflow"]), [False, True])
+    pid = np.asarray(w.page_ids)
+    assert (pid[1, 4:] == -1).all()  # dropped tokens route nowhere
+    mask = np.asarray(w.mask)
+    assert mask[0].all() and not mask[1, 4:].any()
+    valid = np.asarray(new["valid"])
+    assert valid[0, :S].all()
+    assert valid[1, :4].all() and not valid[1, 4:].any()
+
+
+def test_advance_meta_past_capacity_flags_overflow_paged():
+    S = 4
+    cache = _paged_meta_cache(index=[0, T - 2])  # slot 1: 14 + 4 > 16
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    new, w = advance_meta(cache, positions, None)
+    np.testing.assert_array_equal(np.asarray(new["overflow"]), [False, True])
+    assert (np.asarray(w.page_ids)[1, 2:] == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# paged write / gather / copy primitives vs the dense reference
+# ---------------------------------------------------------------------------
+
+
+def test_paged_write_view_matches_dense_reference():
+    rng = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(rng)
+    S = 5
+    dense = jax.random.normal(k1, (B, T, KV, HD))
+    new = jax.random.normal(k2, (B, S, KV, HD))
+    # unique slots per row, straddling a page boundary in row 1
+    slots = jnp.stack([jnp.arange(S) + 3 * b for b in range(B)])
+    mask = jnp.asarray([[True] * S, [True, True, False, True, True]])
+    want = _onehot_write(dense, new, slots, mask)
+
+    table = jnp.arange(B * MP, dtype=jnp.int32).reshape(B, MP)
+    paged = dense.reshape(B * MP, PS, KV, HD)  # identity layout
+    pids = jnp.take_along_axis(table, slots // PS, axis=1)
+    got_buf = _paged_write(paged, new, pids, slots % PS, mask)
+    got = paged_view(got_buf, table)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_copy_pages_moves_and_ignores_sentinels():
+    L = 3
+    buf = jax.random.normal(jax.random.PRNGKey(1), (L, B * MP, PS, KV, HD))
+    src = jnp.asarray([2, -1], jnp.int32)
+    dst = jnp.asarray([5, -1], jnp.int32)
+    out = np.asarray(copy_pages(buf, src, dst))
+    ref = np.asarray(buf).copy()
+    ref[:, 5] = ref[:, 2]
+    np.testing.assert_allclose(out, ref, rtol=1e-6)
+
+
+def test_cache_specs_rejects_ragged_pages():
+    cfg = get_config("granite_8b", reduced=True)
+    with pytest.raises(ValueError, match="whole number of pages"):
+        cache_specs(cfg, 2, 10, page_size=4)
+
+
+# ---------------------------------------------------------------------------
+# host-side allocator: refcounts, registry, COW planning, eviction
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_admit_register_retire_refcounts():
+    al = PageAllocator(num_pages=16, page_size=4, num_slots=4, pages_per_slot=4)
+    prompt = np.arange(10, dtype=np.int32)  # 2 full pages + 2 tail tokens
+    plan = al.admit(0, prompt)
+    assert plan.start == 0 and plan.copy_src == -1
+    assert al.pages_in_use == 3  # ceil(10/4)
+    al.register(0, prompt)
+    assert al.pages_in_use == 3  # registry pins the same physical pages
+
+    # partial match: same 8-token prefix, divergent tail
+    p2 = np.concatenate([prompt[:8], np.asarray([99, 98], np.int32)])
+    plan2 = al.admit(1, p2)
+    assert plan2.start == 8 and plan2.copy_src == -1
+    assert al.pages_in_use == 4  # 2 shared + 1 old tail + 1 new tail
+
+    # full-prompt match (prompt == exactly the 2 registered pages): the
+    # final token must still be re-prefilled to seed decode, and it lands
+    # INSIDE the shared second page -> COW duplicates it
+    plan3 = al.admit(2, prompt[:8])
+    assert plan3.start == 7  # plen - 1: only the seeding token re-prefills
+    assert plan3.copy_src >= 0 and plan3.copy_dst >= 0
+    assert plan3.copy_src != plan3.copy_dst
+    assert al.pages_in_use == 5
+
+    al.retire(1), al.retire(2)
+    assert al.pages_in_use == 3  # registry + slot 0 keep the prefix alive
+    al.retire(0)
+    assert al.pages_in_use == 2  # only the registry pins remain
+    al.release_prefixes()
+    assert al.pages_in_use == 0
+
+
+def test_allocator_eviction_then_exhaustion():
+    al = PageAllocator(num_pages=4, page_size=4, num_slots=2, pages_per_slot=4)
+    p = np.arange(8, dtype=np.int32)
+    assert al.admit(0, p) is not None  # 2 pages
+    al.register(0, p)
+    al.retire(0)  # pages survive via registry pins
+    assert al.pages_in_use == 2
+    # a 4-page prompt forces eviction of the (now unreferenced) registry
+    big = np.arange(100, 116, dtype=np.int32)
+    assert al.admit(0, big) is not None
+    assert al.pages_in_use == 4
+    # pool is now fully referenced by an active slot: nothing to evict
+    assert al.admit(1, np.arange(50, 54, dtype=np.int32)) is None
+    al.retire(0)
+    assert al.admit(1, np.arange(50, 54, dtype=np.int32)) is not None
+
+
+def test_allocator_windowed_maps_full_ring():
+    al = PageAllocator(
+        num_pages=8, page_size=4, num_slots=2, pages_per_slot=2, share=False
+    )
+    plan = al.admit_windowed(0)
+    assert plan.start == 0
+    assert (al.table[0] >= 0).all()
+    assert al.pages_in_use == 2
+    assert not al.ensure_page(0, 37)  # ring: always mapped already
+    al.retire(0)
+    assert al.pages_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# public API + deprecation shims
+# ---------------------------------------------------------------------------
+
+
+def test_serve_public_api_surface():
+    import repro.serve as serve
+
+    for name in (
+        "BatchingEngine", "Request", "generate", "make_cache",
+        "abstract_cache", "CacheOverflowError", "SampleCfg", "CacheWrite",
+    ):
+        assert hasattr(serve, name), name
+
+
+def test_deprecated_module_paths_warn():
+    import repro.serve as serve
+    import repro.serve.cache as old_cache
+    import repro.serve.engine as old_engine
+
+    for mod, name, want in (
+        (old_cache, "advance_meta", serve.advance_meta),
+        (old_engine, "BatchingEngine", serve.BatchingEngine),
+    ):
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            got = getattr(mod, name)
+        assert got is want
+        assert any(issubclass(w.category, DeprecationWarning) for w in rec), name
+
+
+# ---------------------------------------------------------------------------
+# end-to-end equivalence + capacity edges (compile-heavy: slow lane)
+# ---------------------------------------------------------------------------
+
+
+def _setup(name="granite_8b", seed=0, window=None):
+    ctx = _ctx(name, window=window)
+    params = init_params(model_specs(ctx.cfg), jax.random.PRNGKey(seed))
+    return ctx, params
+
+
+_PROMPTS = ((1, 2, 3, 4), (5, 6, 7), (9, 10, 11, 12, 13))
+
+
+def _run_engine(params, ctx, max_new=4, prompts=_PROMPTS, **kw):
+    eng = BatchingEngine(params, ctx, num_slots=2, max_len=32, **kw)
+    reqs = [
+        Request(uid=i, prompt=jnp.asarray(p, jnp.int32), max_new=max_new)
+        for i, p in enumerate(prompts)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return {r.uid: r.generated for r in reqs}, eng
+
+
+@pytest.mark.slow
+def test_generate_paged_matches_dense_gqa_and_mla():
+    for name, plen in (("granite_8b", 6), ("minicpm3_4b", 5)):
+        ctx, params = _setup(name)
+        prompts = jnp.asarray([list(range(1, plen + 1))], jnp.int32)
+        want = generate(params, ctx, prompts, max_new=5, max_len=16)
+        got = generate(params, ctx, prompts, max_new=5, max_len=16, page_size=4)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want), err_msg=name)
+
+
+@pytest.mark.slow
+def test_generate_paged_swa_ring_wraparound_reuses_pages():
+    """Sliding-window ring writes wrap around logical slots — and therefore
+    around the same physical pages.  The paged ring must match the dense
+    ring exactly through multiple wraparounds (window 8 = 2 pages,
+    14 total positions)."""
+    ctx, params = _setup("mixtral_8x7b", seed=2, window=8)
+    prompts = jnp.asarray([[1, 2, 3, 4, 5, 6]], jnp.int32)
+    want = generate(params, ctx, prompts, max_new=8, max_len=32)
+    got = generate(params, ctx, prompts, max_new=8, max_len=32, page_size=4)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.slow
+def test_generate_paged_exactly_at_capacity():
+    """prompt + max_new - 1 == max_len must complete without a spurious
+    CacheOverflowError: the final sampled token never writes KV."""
+    ctx, params = _setup()
+    prompts = jnp.asarray([[1, 2, 3, 4, 5]], jnp.int32)
+    want = generate(params, ctx, prompts, max_new=12, max_len=16)
+    got = generate(params, ctx, prompts, max_new=12, max_len=16, page_size=4)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert np.asarray(got).shape == (1, 12)
+
+
+@pytest.mark.slow
+def test_engine_paged_matches_dense_engine():
+    ctx, params = _setup()
+    dense, _ = _run_engine(params, ctx)
+    paged, eng = _run_engine(params, ctx, page_size=4)
+    assert dense == paged
+    # drained engine: only registry pins hold pages; releasing them empties
+    # the pool (refcounted frees on retire)
+    eng.alloc.release_prefixes()
+    assert eng.alloc.pages_in_use == 0
+
+
+@pytest.mark.slow
+def test_engine_paged_matches_grouped_lut_engine():
+    """Acceptance: identical greedy streams dense-rectangle vs paged for
+    grouped-LUT execution too (same style as test_moe_lut)."""
+    from repro.core.convert import convert_params
+
+    cfg = get_config("qwen2_moe_a2_7b", reduced=True)
+    ctx = Ctx(cfg, ex=ExecCfg(remat="none"))
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(3))
+    lut, rep = convert_params(params, chunk_size=1, convert_experts=True)
+    assert rep.grouped > 0
+    gctx = dataclasses.replace(ctx, ex=dataclasses.replace(ctx.ex, lut_grouped=True))
+    dense, _ = _run_engine(lut, gctx)
+    paged, _ = _run_engine(lut, gctx, page_size=4)
+    assert dense == paged
+
+
+@pytest.mark.slow
+def test_engine_prefix_sharing_prefills_once_and_frees():
+    """A shared 8-token system prompt across N=3 admissions is prefilled
+    ONCE: later admissions map its pages and prefill only their 2-token
+    tails (counted via engine.prefill_tokens); the shared pages are
+    refcounted and freed once the registry releases them."""
+    ctx, params = _setup()
+    sys_p = (3, 1, 4, 1, 5, 9, 2, 6)
+    prompts = tuple(sys_p + (20 + i, 30 + i) for i in range(3))
+    dense, d_eng = _run_engine(params, ctx, prompts=prompts, prefill_bucket=16)
+    paged, p_eng = _run_engine(
+        params, ctx, prompts=prompts, prefill_bucket=16, page_size=4
+    )
+    assert dense == paged
+    # dense prefills every prompt in full; paged prefills the first in full
+    # and only the divergent tails after
+    assert d_eng.prefill_tokens == sum(len(p) for p in prompts)
+    assert p_eng.prefill_tokens == len(prompts[0]) + 2 * (len(prompts) - 1)
+    # retire released the tails; the registry still pins the shared prefix
+    assert p_eng.alloc.pages_in_use == len(sys_p) // 4
+    p_eng.alloc.release_prefixes()
+    assert p_eng.alloc.pages_in_use == 0
+
+
+@pytest.mark.slow
+def test_engine_paged_allocates_proportional_to_length():
+    """Short prompts must occupy ceil(len/page_size) pages each — not the
+    max_len rectangle (the memory-footprint acceptance criterion)."""
+    ctx, params = _setup()
+    eng = BatchingEngine(params, ctx, num_slots=3, max_len=32, page_size=4)
+    for i in range(3):
+        eng.submit(
+            Request(uid=i, prompt=jnp.asarray([7 + i, 8, 9], jnp.int32), max_new=3)
+        )
+    assert eng.step()  # admission + first decode (still within page 0)
+    # 3 slots x 3-token prompts: one page each; a dense rectangle would pin
+    # the full 3 * (32/4) = 24 pages
+    assert eng.alloc.pages_in_use == 3
+    assert eng.alloc.pages_in_use < 3 * (32 // 4)
+    while eng.step():
+        pass
+    eng.alloc.release_prefixes()
+    assert eng.alloc.pages_in_use == 0
+
+
+@pytest.mark.slow
+def test_engine_eos_or_budget_at_final_page_slot():
+    """A stream ending exactly at the last slot of a page: prompt 4 tokens
+    (page 0 full), 5 generated — the final decode write lands at slot 7,
+    the last slot of page 1.  No overflow, no dangling page, identical to
+    dense."""
+    ctx, params = _setup(seed=4)
+    prompts = ((1, 2, 3, 4),)
+    dense, _ = _run_engine(params, ctx, max_new=5, prompts=prompts)
+    paged, eng = _run_engine(params, ctx, max_new=5, prompts=prompts, page_size=4)
+    assert dense == paged
+    assert len(paged[0]) == 5
+    # the budget-exhaustion done fired on the write into slot 7 (page 1's
+    # final slot); retire freed both pages, registry pins only page 0
+    eng.alloc.release_prefixes()
+    assert eng.alloc.pages_in_use == 0
+    # EOS variant: stop at the token whose KV write lands page-final
+    stream = dense[0]
+    eos = int(stream[4])
+    if eos in stream[:4]:  # greedy repeat would fire EOS before the edge
+        pytest.skip("greedy stream repeats the boundary token")
+    d2, _ = _run_engine(params, ctx, max_new=8, prompts=prompts, eos_id=eos)
+    p2, eng2 = _run_engine(
+        params, ctx, max_new=8, prompts=prompts, eos_id=eos, page_size=4
+    )
+    assert d2 == p2
+    assert p2[0][-1] == eos and len(p2[0]) == 5
+    eng2.alloc.release_prefixes()
+    assert eng2.alloc.pages_in_use == 0

@@ -14,7 +14,7 @@ from repro.core.convert import convert_params
 from repro.models.layers import Ctx, ExecCfg, SampleCfg
 from repro.models.model import model_forward, model_specs
 from repro.models.params import init_params
-from repro.serve.engine import (
+from repro.serve import (
     BatchingEngine,
     CacheOverflowError,
     Request,
@@ -280,7 +280,7 @@ def test_engine_single_readback_and_donation():
     """Steady-state decode: exactly ONE host readback per engine step, the
     donated cache buffers are consumed in place (zero full-cache copies),
     and the splice path is gone."""
-    import repro.serve.engine as engine_mod
+    import repro.serve as engine_mod
 
     assert not hasattr(engine_mod, "_splice_cache")
     cfg, ctx, params, _, _ = _setup("granite_8b")

@@ -13,7 +13,7 @@ import pytest
 
 from repro.configs.base import get_config
 from repro.models.layers import Ctx, ExecCfg
-from repro.serve.cache import (
+from repro.serve import (
     CacheOverflowError,
     advance_meta,
     update_kv_cache,
@@ -57,7 +57,7 @@ def test_advance_meta_flags_overflow():
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
     new, meta = advance_meta(cache, positions, None)
     np.testing.assert_array_equal(np.asarray(new["overflow"]), [False, True, True])
-    np.testing.assert_array_equal(np.asarray(meta["index"]), [0, 6, 5])
+    np.testing.assert_array_equal(np.asarray(meta.index), [0, 6, 5])
     np.testing.assert_array_equal(np.asarray(new["index"]), [4, 10, 9])
 
 
@@ -81,7 +81,7 @@ def test_debug_overflow_assert_env_gated():
     are read at trace time and jax caches aggressively)."""
     code = (
         "import jax.numpy as jnp, jax\n"
-        "from repro.serve.cache import advance_meta, CacheOverflowError\n"
+        "from repro.serve import advance_meta, CacheOverflowError\n"
         "cache = {'pos': jnp.zeros((1, 4), jnp.int32),\n"
         "         'valid': jnp.zeros((1, 4), bool),\n"
         "         'index': jnp.asarray([3])}\n"
@@ -163,7 +163,7 @@ def test_ring_wraparound_slots_unique():
     positions = start[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
     cache = _meta_cache(index=start)
     new, meta = advance_meta(cache, positions, window)
-    slots = np.asarray(meta["slots"])
+    slots = np.asarray(meta.slots)
     assert slots.shape == (B, T)
     for b in range(B):
         assert sorted(slots[b]) == list(range(T)), slots[b]  # a permutation
@@ -255,7 +255,7 @@ def test_generate_overflow_raises():
     used to silently drop the overflowing tokens; it must raise now."""
     from repro.models.model import model_specs
     from repro.models.params import init_params
-    from repro.serve.engine import generate
+    from repro.serve import generate
 
     ctx = _ctx()
     params = init_params(model_specs(ctx.cfg), jax.random.PRNGKey(0))
