@@ -61,7 +61,9 @@ def rows(tiny: bool = False) -> list[tuple[str, float, str]]:
         t_mat = _time(jax.jit(lambda a, w: a @ w), x, W, iters=iters)
         tag = f"B{B}_q{q}_p{p}_m{m}"
         out.append((f"kern/lut_affine_jnp_{tag}", round(t_ref, 1), "us/call"))
-        out.append((f"kern/lut_affine_pallas_{tag}", round(t_kern, 1), "us/call interpret"))
+        out.append(
+            (f"kern/lut_affine_pallas_{tag}", round(t_kern, 1), "us/call interpret")
+        )
         out.append((f"kern/matmul_ref_{tag}", round(t_mat, 1), "us/call"))
 
         # QKV-style fusion: 3 same-shape projections, one grid vs 3 dispatches
@@ -80,8 +82,12 @@ def rows(tiny: bool = False) -> list[tuple[str, float, str]]:
             tables3,
             iters=iters,
         )
-        out.append((f"kern/lut_affine_grouped3_{tag}", round(t_grp, 1), "us/call interpret"))
-        out.append((f"kern/lut_affine_dispatch3_{tag}", round(t_3x, 1), "us/call interpret"))
+        out.append(
+            (f"kern/lut_affine_grouped3_{tag}", round(t_grp, 1), "us/call interpret")
+        )
+        out.append(
+            (f"kern/lut_affine_dispatch3_{tag}", round(t_3x, 1), "us/call interpret")
+        )
         if m == 1:
             planes = codes.astype(jnp.int8)
             t_bmm = _time(
@@ -90,7 +96,9 @@ def rows(tiny: bool = False) -> list[tuple[str, float, str]]:
                 W,
                 iters=iters,
             )
-            out.append((f"kern/binary_matmul_{tag}", round(t_bmm, 1), "us/call interpret"))
+            out.append(
+                (f"kern/binary_matmul_{tag}", round(t_bmm, 1), "us/call interpret")
+            )
     return out
 
 

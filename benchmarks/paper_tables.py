@@ -32,33 +32,43 @@ def rows() -> list[tuple[str, float, str]]:
     out.append(("paper/linear_m14_MiB", round(lin["mib"], 2), "paper=17.5"))
     out.append(("paper/linear_m14_evals", lin["evals"], "paper=168"))
     out.append(("paper/linear_m14_adds", lin["shift_adds"], "paper~1650"))
-    out.append(("paper/linear_m1_KiB", round(claims["linear_m1"]["kib"], 1), "paper=30.6"))
+    out.append(
+        ("paper/linear_m1_KiB", round(claims["linear_m1"]["kib"], 1), "paper=30.6")
+    )
     mlp = claims["mlp_bitplane"]
     out.append(("paper/mlp_tables", mlp["tables"], "paper=2320"))
     out.append(("paper/mlp_MiB", round(mlp["mib"], 1), "paper=162.6"))
     out.append(("paper/mlp_adds", mlp["shift_adds"], "paper=14652918 (exact)"))
-    out.append(("paper/mlp_full_adds", claims["mlp_full"]["adds"], "paper=1330678 (exact)"))
+    out.append(
+        ("paper/mlp_full_adds", claims["mlp_full"]["adds"], "paper=1330678 (exact)")
+    )
     out.append(("paper/cnn_MiB", round(claims["cnn_bitplane"]["mib"], 0), "paper~400"))
     out.append(("paper/mlp_ref_madds", claims["mlp_ref_madds"], "paper=1332224"))
 
     # Fig. 5: linear classifier, 3-bit fixed point, both modes
     for r in figure_curve(LINEAR_CLASSIFIER, FixedPointFormat(3, 3)):
-        out.append((
-            f"fig5/{r['mode']}_m{r['chunk']}",
-            r["shift_adds"],
-            f"lut_bytes={r['bytes']}",
-        ))
+        out.append(
+            (
+                f"fig5/{r['mode']}_m{r['chunk']}",
+                r["shift_adds"],
+                f"lut_bytes={r['bytes']}",
+            )
+        )
     # Fig. 7: MLP fp16
     for r in figure_curve(MLP, Float16Format())[:8]:
-        out.append((
-            f"fig7/{r['mode']}_m{r['chunk']}",
-            r["shift_adds"],
-            f"lut_MiB={r['bytes'] / MiB:.1f}",
-        ))
+        out.append(
+            (
+                f"fig7/{r['mode']}_m{r['chunk']}",
+                r["shift_adds"],
+                f"lut_MiB={r['bytes'] / MiB:.1f}",
+            )
+        )
     # Fig. 8: CNN = conv layers (shared tables) + dense layers
     for m in (1, 2, 3):
         dense = network_cost(CNN_DENSE, Float16Format(), m)
-        convs = [conv_layer_cost(q, p, pos, Float16Format(), m) for q, p, pos in CNN_CONVS]
+        convs = [
+            conv_layer_cost(q, p, pos, Float16Format(), m) for q, p, pos in CNN_CONVS
+        ]
         total_b = dense["bytes"] + sum(c["bytes"] for c in convs)
         total_a = dense["shift_adds"] + sum(c["shift_adds"] for c in convs)
         out.append((f"fig8/bitplane_m{m}", total_a, f"lut_MiB={total_b / MiB:.1f}"))

@@ -9,6 +9,14 @@ CLI (used by the CI bench-gate to publish the roofline artifact):
 emits the same ``{"name", "value", "unit"}`` row list as the other
 benches (value = roofline fraction, -1 for skipped/failed cells), plus
 the EXPERIMENTS.md markdown table with ``--markdown``.
+
+LUT-serving cells (``params_mode == "lut"`` dryrun records) additionally
+emit a per-row gather-vs-accumulate decomposition: the LUT decode step is
+two phases — table-row *gather* (pure HBM traffic: ``planes x chunks``
+rows of ``p`` table elements per token) and shift-add *accumulate* (pure
+compute: one add per gathered element) — and the analytic split of the
+cell's roofline into those phases says which side a tiling or a narrow
+table format can still buy time on.
 """
 from __future__ import annotations
 
@@ -16,6 +24,47 @@ import json
 import os
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun.json")
+
+
+def lut_decomposition(arch: str, tokens: int) -> dict:
+    """Analytic gather-vs-accumulate split of ``tokens`` decode tokens
+    through ``arch``'s LUT-converted projections (uniform chunk-1 plan, the
+    dryrun's conversion).  Gather is HBM-bound (bytes of table rows
+    touched), accumulate is compute-bound (one shift-add per gathered
+    element); both in seconds at the chip peaks ``hlo_analysis`` uses."""
+    from repro.configs.base import get_config
+    from repro.core.lut import plane_scales
+    from repro.core.planner import plan_model
+    from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS
+    from repro.models.model import model_specs
+    from repro.models.params import abstract_params
+
+    cfg = get_config(arch)
+    params = abstract_params(model_specs(cfg))
+    mplan = plan_model(params, float("inf"), max_chunk=1)
+    gather_bytes = accum_ops = 0.0
+    for key, plan in mplan.layers.items():
+        copies = mplan.copies.get(key, 1)
+        rows = len(plane_scales(plan)) * plan.num_chunks  # gathers per token
+        elems = rows * plan.out_features
+        gather_bytes += copies * elems * max(1, plan.storage_bits // 8)
+        accum_ops += copies * elems
+    return {
+        "gather_bytes": tokens * gather_bytes,
+        "accumulate_ops": tokens * accum_ops,
+        "gather_s": tokens * gather_bytes / HBM_BW,
+        "accumulate_s": tokens * accum_ops / PEAK_FLOPS,
+    }
+
+
+def _cell_tokens(shape: str) -> int:
+    """Decoded/prefilled tokens a dryrun cell pushes through the model."""
+    from repro.launch.inputs import shape_case
+
+    case = shape_case(shape)
+    if case.kind == "decode":
+        return case.global_batch
+    return case.global_batch * case.seq_len
 
 
 def load(path: str = RESULTS) -> list[dict]:
@@ -31,14 +80,36 @@ def rows(path: str = RESULTS) -> list[tuple[str, float, str]]:
         key = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
         if r.get("status") == "ok":
             t = r["terms"]
-            out.append((
-                key,
-                round(t["roofline_fraction"], 4),
-                f"dom={t['dominant']} c={t['compute_s']:.4f} m={t['memory_s']:.4f} "
-                f"x={t['collective_s']:.4f} useful={r['useful_flops_ratio']:.2f}",
-            ))
+            out.append(
+                (
+                    key,
+                    round(t["roofline_fraction"], 4),
+                    f"dom={t['dominant']} c={t['compute_s']:.4f} "
+                    f"m={t['memory_s']:.4f} x={t['collective_s']:.4f} "
+                    f"useful={r['useful_flops_ratio']:.2f}",
+                )
+            )
+            if r.get("params_mode") == "lut" and r.get("kind") != "train":
+                d = lut_decomposition(r["arch"], _cell_tokens(r["shape"]))
+                out.append(
+                    (
+                        f"{key}/gather_s",
+                        round(d["gather_s"], 6),
+                        f"{d['gather_bytes']:.3e} B of table rows "
+                        f"(cell memory_s={t['memory_s']:.4f})",
+                    )
+                )
+                out.append(
+                    (
+                        f"{key}/accumulate_s",
+                        round(d["accumulate_s"], 6),
+                        f"{d['accumulate_ops']:.3e} shift-adds "
+                        f"(cell compute_s={t['compute_s']:.4f})",
+                    )
+                )
         else:
-            out.append((key, -1.0, f"{r.get('status')}: {r.get('reason', r.get('error',''))[:60]}"))
+            why = r.get("reason", r.get("error", ""))[:60]
+            out.append((key, -1.0, f"{r.get('status')}: {why}"))
     return out
 
 

@@ -59,6 +59,7 @@ import numpy as np
 from repro.configs.base import get_config
 from repro.core.convert import convert_params
 from repro.core.planner import plan_model
+from repro.kernels.lut_affine.autotune import attach_tuned_blocks
 from repro.models.layers import Ctx, ExecCfg, SampleCfg
 from repro.models.model import model_specs
 from repro.models.params import init_params
@@ -312,15 +313,38 @@ def _heavy_rows(modes, tiny: bool, heavy: bool) -> list[tuple[str, float, str]]:
     return out
 
 
-def rows(tiny: bool = False, heavy: bool = False) -> list[tuple[str, float, str]]:
-    cfg = get_config("granite_8b", reduced=True)
-    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
-
+def serving_model_plan(tiny: bool = False, params=None):
+    """The bench's planned conversion: uniform plan, halved-budget knapsack
+    over the widened frontier, decode-batch-tuned Pallas blocks attached.
+    Also the source of the committed autotune baseline's shape points
+    (``--dump-plan`` -> ``repro.kernels.lut_affine.autotune write``)."""
+    if params is None:
+        cfg = get_config("granite_8b", reduced=True)
+        params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
     # per-layer planning: half the uniform-chunk-2 footprint forces the
     # greedy pass to mix chunk sizes rather than apply one plan everywhere
     uniform = plan_model(params, float("inf"), max_chunk=2)
     budget = uniform.total_lut_bytes // 2
-    mplan = plan_model(params, budget, max_chunk=2)
+    # widened frontier: sigma-factored bitplane_shift tables (radix-grouped
+    # mantissa planes, i8 storage where safe) compete with plain bitplane
+    # point-by-point; the knapsack picks the cheapest-ops plan per budget
+    mplan = plan_model(
+        params,
+        budget,
+        max_chunk=2,
+        modes=("bitplane", "bitplane_shift"),
+        radices=(1, 2, 4),
+        table_formats=(None, "i8"),
+    )
+    mplan = attach_tuned_blocks(mplan, batch=2 if tiny else 4)
+    return mplan, uniform, budget
+
+
+def rows(tiny: bool = False, heavy: bool = False) -> list[tuple[str, float, str]]:
+    cfg = get_config("granite_8b", reduced=True)
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+
+    mplan, uniform, budget = serving_model_plan(tiny, params)
     # same per-layer plans, two layouts: flat per-projection vs pre-stacked
     lut_params, _ = convert_params(params, plan=mplan, group_siblings=False)
     lut_grouped_params, report = convert_params(params, plan=mplan)
@@ -374,7 +398,17 @@ def main():
     ap.add_argument("--heavy", action="store_true",
                     help="scale the open-loop traffic lane up (weekly run)")
     ap.add_argument("--out", default=None, help="write JSON rows to this path")
+    ap.add_argument("--dump-plan", default=None,
+                    help="write the serving ModelPlan (with tuned blocks) "
+                         "as JSON — feeds the autotune baseline CLI")
     args = ap.parse_args()
+    if args.dump_plan:
+        mplan, _, _ = serving_model_plan(tiny=args.tiny)
+        with open(args.dump_plan, "w") as f:
+            json.dump(mplan.to_json(), f, indent=1)
+            f.write("\n")
+        if not args.out:
+            return
     payload = [
         {"name": name, "value": value, "unit": unit}
         for name, value, unit in rows(tiny=args.tiny, heavy=args.heavy)

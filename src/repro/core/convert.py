@@ -44,7 +44,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.lut import LUTPlan, build_luts
+from repro.core.lut import LUTPlan, build_luts, quantize_tables
 from repro.core.planner import ModelPlan, path_key
 from repro.core.quantize import Float16Format
 
@@ -69,20 +69,25 @@ class LUTLinear:
     tables: Any  # (..., k, entries, p)
     plan: LUTPlan
     b: Any = None  # (..., p) or None
+    # scalar power-of-2 dequant scale when ``plan.table_format`` stores the
+    # tables narrow (i8/i16); None for full-width tables.  A leaf (not aux):
+    # it is data derived from the weights, and it must ride checkpoints.
+    scale: Any = None
 
     def tree_flatten_with_keys(self):
         return (
             (
                 (jax.tree_util.GetAttrKey("tables"), self.tables),
                 (jax.tree_util.GetAttrKey("b"), self.b),
+                (jax.tree_util.GetAttrKey("scale"), self.scale),
             ),
             self.plan,
         )
 
     @classmethod
     def tree_unflatten(cls, plan, children):
-        tables, b = children
-        return cls(tables, plan, b)
+        tables, b, scale = children
+        return cls(tables, plan, b, scale)
 
 
 @jax.tree_util.register_pytree_with_keys_class
@@ -104,12 +109,16 @@ class LUTGroup:
     plan: LUTPlan
     members: tuple  # sibling keys in call-site order, e.g. ("wk", "wv")
     b: Any = None  # None | (..., G, p) | tuple[(..., p) | None, ...]
+    # ONE scalar dequant scale shared by every member (the group leaf is a
+    # single stacked array, quantized as one); None for full-width tables.
+    scale: Any = None
 
     def tree_flatten_with_keys(self):
         return (
             (
                 (jax.tree_util.GetAttrKey("tables"), self.tables),
                 (jax.tree_util.GetAttrKey("b"), self.b),
+                (jax.tree_util.GetAttrKey("scale"), self.scale),
             ),
             (self.plan, self.members),
         )
@@ -117,8 +126,8 @@ class LUTGroup:
     @classmethod
     def tree_unflatten(cls, aux, children):
         plan, members = aux
-        tables, b = children
-        return cls(tables, plan, members, b)
+        tables, b, scale = children
+        return cls(tables, plan, members, b, scale)
 
     def member_bias(self, g: int):
         if self.b is None:
@@ -265,15 +274,28 @@ def convert_params(
         used_plan_keys.add(path_key(path))
         return layer_plan
 
-    def convert_one(node: dict, layer_plan: LUTPlan) -> LUTLinear:
+    def finalize_tables(tables, layer_plan: LUTPlan, trailing: int):
+        """(stored tables, scale): narrow-quantize when the plan asks for it.
+
+        ``trailing`` = dims of one dispatched table set; leading (scan)
+        dims keep per-set scales so the leaf stays scan-sliceable."""
+        if layer_plan.table_format is None:
+            return tables.astype(table_dtype), None
+        return quantize_tables(tables, layer_plan.table_format, trailing)
+
+    def convert_one(node: dict, layer_plan: LUTPlan, expert: bool = False) -> LUTLinear:
         w = node["w"]
-        tables = _build_tables(w, layer_plan, table_dtype)
+        tables, scale = finalize_tables(
+            _build_tables(w, layer_plan, jnp.float32), layer_plan, 3 + expert
+        )
         stats["converted"] += 1
         stats["w_bytes"] += w.size * w.dtype.itemsize
         stats["t_bytes"] += tables.size * tables.dtype.itemsize
-        return LUTLinear(tables=tables, plan=layer_plan, b=node.get("b"))
+        return LUTLinear(tables=tables, plan=layer_plan, b=node.get("b"), scale=scale)
 
-    def convert_group(path: tuple, node: dict, members: tuple) -> Optional[LUTGroup]:
+    def convert_group(
+        path: tuple, node: dict, members: tuple, expert: bool = False
+    ) -> Optional[LUTGroup]:
         """One LUTGroup for ``members``, or None when they can't share a
         plan (then they convert individually, like before grouping)."""
         key_tuple = frozenset(path_key(path + (m,)) for m in members)
@@ -294,11 +316,22 @@ def convert_params(
                 f"group {group_key(members)} at {path_key(path)} has "
                 f"mismatched member plans — grouped siblings must share one"
             )
-        singles = [convert_one(node[m], plans[0]) for m in members]
-        tables = jnp.stack(
-            [s.tables for s in singles], axis=singles[0].tables.ndim - 3
+        member_tables = [
+            _build_tables(node[m]["w"], plans[0], jnp.float32) for m in members
+        ]
+        # quantize the STACKED leaf as one, so the whole group shares one
+        # dequant scale (the group executes as a single fused dispatch)
+        tables, scale = finalize_tables(
+            jnp.stack(member_tables, axis=member_tables[0].ndim - 3),
+            plans[0],
+            4 + expert,
         )
-        biases = [s.b for s in singles]
+        stats["converted"] += len(members)
+        for m in members:
+            w = node[m]["w"]
+            stats["w_bytes"] += w.size * w.dtype.itemsize
+        stats["t_bytes"] += tables.size * tables.dtype.itemsize
+        biases = [node[m].get("b") for m in members]
         if all(b is not None for b in biases):
             b = jnp.stack(biases, axis=biases[0].ndim - 1)
         elif any(b is not None for b in biases):
@@ -306,7 +339,9 @@ def convert_params(
         else:
             b = None
         stats["groups"] += 1
-        return LUTGroup(tables=tables, plan=plans[0], members=members, b=b)
+        return LUTGroup(
+            tables=tables, plan=plans[0], members=members, b=b, scale=scale
+        )
 
     def convert_expert_member(path: tuple, key: str, w3) -> Any:
         # same eligibility/plan rules as plain linears (member_plan), so
@@ -315,7 +350,7 @@ def convert_params(
         if layer_plan is None:
             stats["skipped"] += 1
             return w3
-        return convert_one({"w": w3}, layer_plan)
+        return convert_one({"w": w3}, layer_plan, expert=True)
 
     def walk(path: tuple, node: Any):
         if _is_linear_node(node):
@@ -338,7 +373,7 @@ def convert_params(
                     k: {"w": v} for k, v in node.items() if k in EXPERT_WEIGHT_KEYS
                 }
                 for members in expert_sibling_groups(node):
-                    g = convert_group(path, wrapped, members)
+                    g = convert_group(path, wrapped, members, expert=True)
                     if g is not None:
                         egrouped[group_key(members)] = g
                         econsumed |= set(members)

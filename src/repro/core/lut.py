@@ -11,6 +11,14 @@ look-up tables:
   the partial output vector ``W_chunk · alpha``.
 * ``mode="full"`` (fixed point): each table is indexed by the *totality* of
   the chunk's bits (``m * r_I`` index bits) — fewest ops, biggest tables.
+* ``mode="bitplane_shift"`` (binary16, chunk 1): the exponent is factored
+  OUT of the table and applied at accumulate time as a per-element scale
+  ``sigma(e) = 2**(e-25)`` — a barrel shift in hardware, so the path stays
+  multiplier-free.  Tables index only ``[sign?][mantissa slice]`` and
+  collapse from ``2**(r+6)`` to ``2**(r+1)`` entries per chunk (the
+  sigma-laden entries repeat 32x across exponent values); the packed code
+  carries the exponent in its high bits.  This is the cache-resident
+  variant: a whole model's tables fit in L2.
 
 Signed fixed point follows the paper's MSB trick: the MSB plane passes
 through the *same* tables and is subtracted after a left shift — realised
@@ -46,13 +54,35 @@ class LUTPlan:
     fmt: Format
     mode: str = "bitplane"  # "bitplane" | "full"
     out_bits: int = 16  # r_O, for size accounting only (compute is fp32)
+    # Storage format of the table entries: None keeps the converter's
+    # table_dtype (accounted at out_bits); "i8"/"i16" store integer tables
+    # with one power-of-2 dequant scale per table set, folded into the
+    # per-plane accumulate (a shift, not a multiply).
+    table_format: str | None = None
+    # Autotuned Pallas tile sizes (block_b, block_p, block_k), persisted
+    # through ModelPlan JSON so tuned plans ride checkpoints.  None falls
+    # back to the static heuristic in kernels.lut_affine.
+    blocks: tuple[int, int, int] | None = None
 
     def __post_init__(self):
-        if self.mode not in ("bitplane", "full"):
+        if self.mode not in ("bitplane", "full", "bitplane_shift"):
             raise ValueError(f"unknown mode {self.mode!r}")
         if self.mode == "full" and isinstance(self.fmt, Float16Format):
             if self.chunk_size != 1:
                 raise ValueError("full-bits float LUTs only support chunk_size=1")
+        if self.mode == "bitplane_shift":
+            if not isinstance(self.fmt, Float16Format):
+                raise ValueError("bitplane_shift requires Float16Format")
+            if self.chunk_size != 1:
+                # >1 element per index would need one exponent shift per
+                # element inside a single gathered row — not representable.
+                raise ValueError("bitplane_shift only supports chunk_size=1")
+        if self.table_format not in (None, "i8", "i16"):
+            raise ValueError(f"unknown table_format {self.table_format!r}")
+        if self.blocks is not None:
+            object.__setattr__(self, "blocks", tuple(int(v) for v in self.blocks))
+            if len(self.blocks) != 3 or any(v <= 0 for v in self.blocks):
+                raise ValueError(f"blocks must be 3 positive ints, got {self.blocks}")
         if self.index_bits > 24:
             raise ValueError(
                 f"LUT index width {self.index_bits} bits is impractically large"
@@ -74,7 +104,10 @@ class LUTPlan:
             if self.mode == "full":
                 # all 16 bits, minus the sign bit (always 0 post-ReLU).
                 return 15
-            return self.fmt.fields_per_element  # 1 mantissa bit + 5 exp bits
+            if self.mode == "bitplane_shift":
+                # exponent lives outside the index (applied as a shift).
+                return self.fmt.mantissa_radix + (1 if self.fmt.signed else 0)
+            return self.fmt.fields_per_element  # mantissa slice + 5 exp bits
         return 1 if self.mode == "bitplane" else self.fmt.total_bits
 
     @property
@@ -103,8 +136,18 @@ class LUTPlan:
         return self.out_features * (self.lut_evaluations - 1)
 
     @property
+    def storage_bits(self) -> int:
+        """Bits per stored table entry (``out_bits`` unless a narrow
+        ``table_format`` overrides it)."""
+        if self.table_format == "i8":
+            return 8
+        if self.table_format == "i16":
+            return 16
+        return self.out_bits
+
+    @property
     def total_lut_bits(self) -> int:
-        return self.num_chunks * self.num_entries * self.out_features * self.out_bits
+        return self.num_chunks * self.num_entries * self.out_features * self.storage_bits
 
     @property
     def total_lut_bytes(self) -> int:
@@ -139,21 +182,37 @@ def _fixed_full_coeffs(plan: LUTPlan) -> np.ndarray:
 
 
 def _float_bitplane_coeffs(plan: LUTPlan) -> np.ndarray:
-    """(entries, m): (+/-) bit * sigma(exp) per element slot (paper Fig. 1;
-    field layout [sign?][mantissa bit][5-bit exponent])."""
+    """(entries, m): (+/-) mantissa_slice * sigma(exp) per element slot (paper
+    Fig. 1; field layout [sign?][radix-bit mantissa slice][5-bit exponent])."""
     fmt: Float16Format = plan.fmt  # type: ignore[assignment]
-    f = fmt.fields_per_element  # 6 unsigned / 7 signed
+    f = fmt.fields_per_element  # radix + 5 unsigned / radix + 6 signed
+    r = fmt.mantissa_radix
     idx = np.arange(plan.num_entries, dtype=np.int64)
     slots = np.arange(plan.chunk_size)
     fields = (idx[:, None] >> (slots[None, :] * f)) & (2**f - 1)
-    bits = (fields >> fmt.exp_bits) & 1
+    slices = (fields >> fmt.exp_bits) & (2**r - 1)
     exps = fields & (2**fmt.exp_bits - 1)
     sigma = 2.0 ** (np.maximum(exps, 1).astype(np.float64) - 25.0)
-    coeff = bits.astype(np.float64) * sigma
+    coeff = slices.astype(np.float64) * sigma
     if fmt.signed:
-        sign = fields >> (fmt.exp_bits + 1)
+        sign = fields >> (fmt.exp_bits + r)
         coeff = coeff * (1.0 - 2.0 * sign)
     return coeff
+
+
+def _float_shift_coeffs(plan: LUTPlan) -> np.ndarray:
+    """(entries, 1): (+/-) mantissa_slice per index — NO sigma baked in.
+
+    The exponent scale is applied at accumulate time (``bitplane_shift``), so
+    entry values span only ``[-(2**r - 1), 2**r - 1]`` — which is what makes
+    narrow integer storage of these tables accuracy-safe."""
+    fmt: Float16Format = plan.fmt  # type: ignore[assignment]
+    r = fmt.mantissa_radix
+    idx = np.arange(plan.num_entries, dtype=np.int64)
+    coeff = (idx & (2**r - 1)).astype(np.float64)
+    if fmt.signed:
+        coeff = coeff * (1.0 - 2.0 * (idx >> r))
+    return coeff[:, None]
 
 
 def _float_full_coeffs(plan: LUTPlan) -> np.ndarray:
@@ -173,11 +232,12 @@ def build_luts(W: jax.Array, plan: LUTPlan) -> jax.Array:
     lets one table serve every plane.
     """
     if isinstance(plan.fmt, Float16Format):
-        coeffs = (
-            _float_bitplane_coeffs(plan)
-            if plan.mode == "bitplane"
-            else _float_full_coeffs(plan)
-        )
+        if plan.mode == "bitplane":
+            coeffs = _float_bitplane_coeffs(plan)
+        elif plan.mode == "bitplane_shift":
+            coeffs = _float_shift_coeffs(plan)
+        else:
+            coeffs = _float_full_coeffs(plan)
     else:
         if plan.mode == "bitplane":
             # pattern bit i contributes W row as-is; scale handled per plane.
@@ -230,10 +290,20 @@ def pack_codes(x: jax.Array, plan: LUTPlan) -> jax.Array:
             u = jax.lax.bitcast_convert_type(h, jnp.uint16).astype(jnp.int32)
             return u[..., None, :]  # (..., 1, k) with k == q
         exp, planes = plan.fmt.decompose(h)  # (...,q), (n,...,q)
+        if plan.mode == "bitplane_shift":
+            r = plan.fmt.mantissa_radix
+            fields = planes
+            if plan.fmt.signed:
+                fields = fields + (plan.fmt.sign_bits(h) << r)[None]
+            # exponent rides in the high bits: gather with
+            # ``code & (entries-1)``, shift with ``code >> index_bits``.
+            codes = fields + (exp << plan.index_bits)[None]
+            return jnp.moveaxis(codes.astype(jnp.int32), 0, -2)  # (..., n, k)
         fields = (planes << plan.fmt.exp_bits) + exp[None]
         if plan.fmt.signed:
             sign = plan.fmt.sign_bits(h)
-            fields = fields + (sign << (plan.fmt.exp_bits + 1))[None]
+            shift = plan.fmt.exp_bits + plan.fmt.mantissa_radix
+            fields = fields + (sign << shift)[None]
         codes = _pack_fields(fields, plan)  # (n, ..., k)
         return jnp.moveaxis(codes, 0, -2)  # (..., n, k)
     fmt: FixedPointFormat = plan.fmt  # type: ignore[assignment]
@@ -253,22 +323,90 @@ def pack_codes(x: jax.Array, plan: LUTPlan) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
+def table_scale(
+    tables: jax.Array, table_format: str, trailing: int | None = None
+) -> jax.Array:
+    """Power-of-2 dequant scale for quantizing ``tables`` to ``table_format``.
+
+    The scale is ``2**ceil(log2(maxabs / qmax))`` so folding it into the
+    per-plane accumulate stays a shift, never a multiply.  ``trailing`` is
+    the number of trailing dims forming ONE dispatched table set (3 for a
+    ``(k, E, p)`` linear, +1 for a group stack, +1 for an expert stack):
+    those dims share a scalar, while leading scan dims — sliced off by the
+    layer scan before any dispatch sees them — get their own entry, keeping
+    the leaf sliceable alongside its tables.  ``None`` = one scalar for the
+    whole leaf.  Safe under tracing (``eval_shape`` / ``vmap``): pure jnp,
+    no host round-trip.
+    """
+    qmax = {"i8": 127.0, "i16": 32767.0}[table_format]
+    t = jnp.abs(tables.astype(jnp.float32))
+    if trailing is None or trailing >= tables.ndim:
+        maxabs = jnp.max(t)
+    else:
+        maxabs = jnp.max(t, axis=tuple(range(tables.ndim - trailing, tables.ndim)))
+    maxabs = jnp.maximum(maxabs, jnp.finfo(jnp.float32).tiny)
+    return jnp.exp2(jnp.ceil(jnp.log2(maxabs / qmax)))
+
+
+def quantize_tables(
+    tables: jax.Array, table_format: str, trailing: int | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """fp32 tables -> (narrow integer tables, dequant scale).
+
+    ``tables ≈ narrow.astype(f32) * scale`` with ``scale`` a power of two
+    shared per table SET (see :func:`table_scale`; per-plane folding of a
+    per-chunk scale would break the shared-table bitplane trick, so one
+    scalar per dispatch it is).
+    """
+    dtype = {"i8": jnp.int8, "i16": jnp.int16}[table_format]
+    qmax = {"i8": 127.0, "i16": 32767.0}[table_format]
+    s = table_scale(tables, table_format, trailing)
+    sb = s.reshape(s.shape + (1,) * (tables.ndim - s.ndim))
+    q = jnp.clip(jnp.round(tables.astype(jnp.float32) / sb), -qmax, qmax)
+    return q.astype(dtype), s
+
+
 def apply_luts(
     tables: jax.Array,
     codes: jax.Array,
     plan: LUTPlan,
     bias: jax.Array | None = None,
     accum_dtype=jnp.float32,
+    scales: jax.Array | None = None,
 ) -> jax.Array:
     """``(..., n, k)`` codes + ``(k, E, p)`` tables -> ``(..., p)``.
 
     out = sum_j scale_j * sum_c T[c, codes[..., j, c], :]  (+ bias)
+
+    The two nested sums contract in ONE einsum over ``(n, k)`` — on CPU/GPU
+    backends the decode step is dispatch-bound, and fusing the plane-sum
+    with the scale-weighted reduce removes a full table-sized intermediate.
+    ``scales`` overrides the plan's plane scales (callers fold narrow-table
+    dequant scales in here; both are powers of two, so the fold is exact).
+
+    ``bitplane_shift`` codes carry the element exponent in their high bits:
+    the gather indexes ``code & (entries-1)`` and the accumulate weights
+    each element by ``sigma(exp) = 2**(max(e,1)-25)`` — the barrel shift the
+    mode's name refers to.
     """
     k = plan.num_chunks
-    gathered = tables[jnp.arange(k), codes]  # (..., n, k, p)
-    per_plane = jnp.sum(gathered.astype(accum_dtype), axis=-2)  # (..., n, p)
-    scales = jnp.asarray(plane_scales(plan), accum_dtype)
-    out = jnp.einsum("...np,n->...p", per_plane, scales)
+    if scales is None:
+        scales = jnp.asarray(plane_scales(plan), accum_dtype)
+    scales = scales.astype(accum_dtype)
+    if plan.mode == "bitplane_shift":
+        idx = codes & (plan.num_entries - 1)
+        exp = codes[..., 0, :] >> plan.index_bits  # same for every plane
+        sig = jnp.exp2(jnp.maximum(exp, 1).astype(accum_dtype) - 25.0)  # (..., k)
+        gathered = tables[jnp.arange(k), idx]  # (..., n, k, p)
+        # scale rows by sigma BEFORE the plane contraction: XLA fuses the
+        # broadcast multiply into the gather consumer, so this costs the
+        # same as the sigma-free einsum (measured; the batched-weight
+        # einsum "...nkp,...nk->...p" is ~5x slower on CPU).
+        gathered = gathered.astype(accum_dtype) * sig[..., None, :, None]
+        out = jnp.einsum("...nkp,n->...p", gathered, scales)
+    else:
+        gathered = tables[jnp.arange(k), codes]  # (..., n, k, p)
+        out = jnp.einsum("...nkp,n->...p", gathered.astype(accum_dtype), scales)
     if bias is not None:
         out = out + bias.astype(accum_dtype)
     return out

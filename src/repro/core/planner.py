@@ -42,6 +42,20 @@ class PlanPoint:
         )
 
 
+def _narrow_format_safe(fmt, mode: str) -> bool:
+    """Whether i8/i16 storage with ONE power-of-2 scale per table set keeps
+    quantization error at the int8-weight level.  True when table entries
+    don't bake in the fp16 exponent range: the sigma-factored
+    ``bitplane_shift`` tables span only ``[-(2**r - 1), 2**r - 1]`` times the
+    weight range, and fixed-point bitplane tables are plain subset sums of
+    weight rows.  Sigma-laden float tables (``bitplane`` / ``full``) span
+    ~2**30 in magnitude across entries, which one 8/16-bit scale cannot
+    represent — a narrow format there silently zeroes most entries."""
+    if isinstance(fmt, Float16Format):
+        return mode == "bitplane_shift"
+    return mode == "bitplane"
+
+
 def enumerate_plans(
     in_features: int,
     out_features: int,
@@ -49,27 +63,49 @@ def enumerate_plans(
     modes: Sequence[str] = ("bitplane", "full"),
     max_index_bits: int = 24,
     max_chunk: int | None = None,
+    table_formats: Sequence[str | None] = (None,),
 ) -> list[PlanPoint]:
-    """All uniform-chunk plans whose index width stays implementable."""
+    """All uniform-chunk plans whose index width stays implementable.
+
+    ``table_formats`` extends the frontier with narrow-storage variants
+    (``"i8"`` / ``"i16"``); they are emitted only where single-scale
+    quantization is accuracy-safe (see :func:`_narrow_format_safe`).
+    """
     points: list[PlanPoint] = []
     is_float = isinstance(fmt, Float16Format)
     for mode in modes:
-        fpe = (
-            (6 if mode == "bitplane" else 15)
-            if is_float
-            else (1 if mode == "bitplane" else fmt.total_bits)
-        )
+        if is_float:
+            if mode == "bitplane":
+                fpe = fmt.fields_per_element
+            elif mode == "bitplane_shift":
+                fpe = fmt.mantissa_radix + (1 if fmt.signed else 0)
+            else:
+                fpe = 15
+        else:
+            if mode == "bitplane_shift":
+                continue  # float16-only mode
+            fpe = 1 if mode == "bitplane" else fmt.total_bits
         hi = max_index_bits // fpe
         if max_chunk is not None:
             hi = min(hi, max_chunk)
         for m in range(1, max(hi, 0) + 1):
-            if mode == "full" and is_float and m != 1:
+            if mode in ("full", "bitplane_shift") and is_float and m != 1:
                 continue
-            try:
-                plan = LUTPlan(in_features, out_features, m, fmt, mode=mode)
-            except ValueError:
-                continue
-            points.append(PlanPoint.of(plan))
+            for table_format in table_formats:
+                if table_format is not None and not _narrow_format_safe(fmt, mode):
+                    continue
+                try:
+                    plan = LUTPlan(
+                        in_features,
+                        out_features,
+                        m,
+                        fmt,
+                        mode=mode,
+                        table_format=table_format,
+                    )
+                except ValueError:
+                    continue
+                points.append(PlanPoint.of(plan))
     return points
 
 
@@ -122,7 +158,10 @@ def default_serving_plan(
 
 def _fmt_to_json(fmt) -> dict:
     if isinstance(fmt, Float16Format):
-        return {"kind": "float16", "signed": fmt.signed}
+        out = {"kind": "float16", "signed": fmt.signed}
+        if fmt.mantissa_radix != 1:
+            out["mantissa_radix"] = fmt.mantissa_radix
+        return out
     return {
         "kind": "fixed",
         "total_bits": fmt.total_bits,
@@ -133,12 +172,14 @@ def _fmt_to_json(fmt) -> dict:
 
 def _fmt_from_json(d: Mapping) -> Any:
     if d["kind"] == "float16":
-        return Float16Format(signed=d["signed"])
+        return Float16Format(
+            signed=d["signed"], mantissa_radix=d.get("mantissa_radix", 1)
+        )
     return FixedPointFormat(d["total_bits"], d["frac_bits"], signed=d["signed"])
 
 
 def plan_to_json(plan: LUTPlan) -> dict:
-    return {
+    out = {
         "in_features": plan.in_features,
         "out_features": plan.out_features,
         "chunk_size": plan.chunk_size,
@@ -146,9 +187,15 @@ def plan_to_json(plan: LUTPlan) -> dict:
         "mode": plan.mode,
         "out_bits": plan.out_bits,
     }
+    if plan.table_format is not None:
+        out["table_format"] = plan.table_format
+    if plan.blocks is not None:
+        out["blocks"] = list(plan.blocks)
+    return out
 
 
 def plan_from_json(d: Mapping) -> LUTPlan:
+    blocks = d.get("blocks")
     return LUTPlan(
         d["in_features"],
         d["out_features"],
@@ -156,6 +203,8 @@ def plan_from_json(d: Mapping) -> LUTPlan:
         _fmt_from_json(d["fmt"]),
         mode=d["mode"],
         out_bits=d["out_bits"],
+        table_format=d.get("table_format"),
+        blocks=tuple(blocks) if blocks is not None else None,
     )
 
 
@@ -343,6 +392,8 @@ def plan_model(
     signed: bool = True,
     group_siblings: bool = True,
     convert_experts: bool = False,
+    radices: Sequence[int] = (1,),
+    table_formats: Sequence[str | None] = (None,),
 ) -> ModelPlan:
     """Choose a per-layer plan for every eligible linear under a global budget.
 
@@ -370,10 +421,22 @@ def plan_model(
     different plans and silently defeat conversion-time fusion.  The group
     memberships are recorded on ``ModelPlan.groups``.
 
+    ``radices`` widens the frontier with multi-bit mantissa-plane variants
+    of a Float16 ``fmt`` (``Float16Format.mantissa_radix``) and
+    ``table_formats`` with narrow table storage (``"i8"``/``"i16"``, where
+    accuracy-safe) — both default to the paper's setting so the frontier
+    only widens when a caller opts in.
+
     Raises ``ValueError`` if even the minimal per-layer plans exceed
     ``max_lut_bytes``.
     """
     fmt = fmt if fmt is not None else Float16Format(signed=signed)
+    if isinstance(fmt, Float16Format):
+        fmt_variants = [
+            dataclasses.replace(fmt, mantissa_radix=r) for r in sorted(set(radices))
+        ]
+    else:
+        fmt_variants = [fmt]
     entries = list(
         iter_linear_layers(params, min_features, predicate, convert_experts)
     )
@@ -401,7 +464,18 @@ def plan_model(
         q, p = shapes[item[0]]
         assert all(shapes[k] == (q, p) for k in item), item
         if (q, p) not in frontier_cache:
-            pts = enumerate_plans(q, p, fmt, modes=modes, max_chunk=max_chunk)
+            pts = [
+                pt
+                for fv in fmt_variants
+                for pt in enumerate_plans(
+                    q,
+                    p,
+                    fv,
+                    modes=modes,
+                    max_chunk=max_chunk,
+                    table_formats=table_formats,
+                )
+            ]
             frontier_cache[(q, p)] = tradeoff_curve(pts)
         frontier = frontier_cache[(q, p)]
         if not frontier:

@@ -138,9 +138,26 @@ class Float16Format:
     it handles fixed point signs — the sign bit joins the exponent in every
     LUT field (7 index bits/element), needed for LM layers whose inputs are
     norm/residual activations rather than ReLU outputs.
+
+    ``mantissa_radix=r`` groups ``r`` mantissa bits per plane instead of the
+    paper's 1: ``ceil(11/r)`` planes, each LUT field carrying an ``r``-bit
+    mantissa slice next to the exponent, plane scales ``(2**r)**j``.  The
+    decomposition stays *exact* (the planes partition the same 11 mantissa
+    bits) and the accumulate stays shift-and-add — a shift by ``r*j`` in
+    hardware — but each table gains ``2**(r-1)`` entries per element.  It is
+    the memory-for-evaluations trade orthogonal to chunk size: radix trades
+    bits *within* an element, chunking trades elements *within* an index.
     """
 
     signed: bool = False
+    mantissa_radix: int = 1
+
+    def __post_init__(self):
+        if not (1 <= self.mantissa_radix <= _F16_MAN_BITS + 1):
+            raise ValueError(
+                f"mantissa_radix must be in [1, {_F16_MAN_BITS + 1}], "
+                f"got {self.mantissa_radix}"
+            )
 
     @property
     def exp_bits(self) -> int:
@@ -148,13 +165,13 @@ class Float16Format:
 
     @property
     def num_planes(self) -> int:
-        # 10 stored mantissa bits + the implicit leading bit.
-        return _F16_MAN_BITS + 1
+        # 10 stored mantissa bits + the implicit leading bit, radix at a time.
+        return -(-(_F16_MAN_BITS + 1) // self.mantissa_radix)
 
     @property
     def fields_per_element(self) -> int:
-        # 1 mantissa bit + full exponent (+ sign) index the LUT (paper Fig. 1).
-        return 1 + _F16_EXP_BITS + (1 if self.signed else 0)
+        # mantissa slice + full exponent (+ sign) index the LUT (paper Fig. 1).
+        return self.mantissa_radix + _F16_EXP_BITS + (1 if self.signed else 0)
 
     def quantize(self, x: jax.Array) -> jax.Array:
         """float -> binary16 (unsigned mode clamps negatives to 0)."""
@@ -174,18 +191,23 @@ class Float16Format:
         """Return ``(exponent, mantissa_planes)``.
 
         ``exponent`` is int32 with shape of ``h``; ``mantissa_planes`` has a
-        leading axis of ``num_planes`` bits (plane 10 = implicit leading bit,
-        1 iff the number is normal).
+        leading axis of ``num_planes`` values, each the ``mantissa_radix``-bit
+        slice ``j`` of the 11-bit mantissa (10 stored bits plus the implicit
+        leading bit, which is 1 iff the number is normal).  At the default
+        radix 1, plane 10 is the implicit bit.
         """
+        r = self.mantissa_radix
         bits = jax.lax.bitcast_convert_type(h.astype(jnp.float16), jnp.uint16).astype(
             jnp.int32
         )
         exp = (bits >> _F16_MAN_BITS) & (2**_F16_EXP_BITS - 1)
         man = bits & (2**_F16_MAN_BITS - 1)
-        planes = jnp.arange(_F16_MAN_BITS, dtype=jnp.int32)
-        man_planes = (man[None, ...] >> planes.reshape((-1,) + (1,) * man.ndim)) & 1
-        implicit = (exp > 0).astype(jnp.int32)[None, ...]
-        return exp, jnp.concatenate([man_planes, implicit], axis=0)
+        man = man | ((exp > 0).astype(jnp.int32) << _F16_MAN_BITS)
+        shifts = r * jnp.arange(self.num_planes, dtype=jnp.int32)
+        slices = (man[None, ...] >> shifts.reshape((-1,) + (1,) * man.ndim)) & (
+            2**r - 1
+        )
+        return exp, slices
 
     @staticmethod
     def sign_bits(h: jax.Array) -> jax.Array:
@@ -199,7 +221,8 @@ class Float16Format:
         return 2.0 ** (e.astype(jnp.float32) - (_F16_BIAS + _F16_MAN_BITS))
 
     def plane_scales(self) -> np.ndarray:
-        return (2.0 ** np.arange(self.num_planes)).astype(np.float64)
+        r = self.mantissa_radix
+        return (2.0 ** (r * np.arange(self.num_planes))).astype(np.float64)
 
 
 # ---------------------------------------------------------------------------

@@ -18,8 +18,15 @@ fixed VMEM budget:
 
 Block sizes are chosen so this stays under ~4 MiB (cf. ``ops.py``).  The
 plane loop is a ``fori_loop`` (n <= 16); the chunk loop is unrolled over the
-chunk tile.  All accumulation is fp32 regardless of the table dtype,
-matching the paper's full-precision-output claim.
+chunk tile.  All accumulation is fp32 regardless of the table dtype — narrow
+(int8/int16) tables are widened per gathered row, their dequant scale folded
+into ``scales`` by the caller — matching the paper's full-precision-output
+claim.
+
+``shift_bits > 0`` selects the ``bitplane_shift`` contract: the code's low
+``shift_bits`` index the (tiny, exponent-free) table and its high bits carry
+the element's fp16 exponent, applied to the gathered row as
+``2**(max(e,1)-25)`` — the barrel shift of the mode's name.
 """
 from __future__ import annotations
 
@@ -31,13 +38,33 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(codes_ref, tables_ref, scales_ref, out_ref, *, block_k: int, planes: int):
+def _gather_row(tables2d, code, shift_bits: int):
+    """(E, pb) table + (bb,) codes -> (bb, pb) rows, sigma-scaled when the
+    codes carry an exponent in their high bits (bitplane_shift)."""
+    if shift_bits:
+        idx = code & (tables2d.shape[0] - 1)
+        rows = jnp.take(tables2d, idx, axis=0).astype(jnp.float32)
+        sig = jnp.exp2(jnp.maximum(code >> shift_bits, 1).astype(jnp.float32) - 25.0)
+        return rows * sig[:, None]
+    return jnp.take(tables2d, code, axis=0).astype(jnp.float32)
+
+
+def _kernel(
+    codes_ref,
+    tables_ref,
+    scales_ref,
+    out_ref,
+    *,
+    block_k: int,
+    planes: int,
+    shift_bits: int,
+):
     """One (batch, out, chunk) grid step.
 
-    codes_ref : (bb, n, kb) int32     VMEM
-    tables_ref: (kb, E, pb) f32/bf16  VMEM
-    scales_ref: (n, 1) f32            VMEM (2-D for TPU layout friendliness)
-    out_ref   : (bb, pb) f32          VMEM (revisited across chunk tiles)
+    codes_ref : (bb, n, kb) int32         VMEM
+    tables_ref: (kb, E, pb) f32/bf16/int8 VMEM
+    scales_ref: (n, 1) f32                VMEM (2-D for TPU layout friendliness)
+    out_ref   : (bb, pb) f32              VMEM (revisited across chunk tiles)
     """
     kt = pl.program_id(2)
 
@@ -49,8 +76,7 @@ def _kernel(codes_ref, tables_ref, scales_ref, out_ref, *, block_k: int, planes:
         plane = jnp.zeros(out_ref.shape, jnp.float32)
         for c in range(block_k):  # static unroll over the chunk tile
             idx = codes_ref[:, j, c]  # (bb,) int32
-            rows = jnp.take(tables_ref[c], idx, axis=0)  # (bb, pb) row gather
-            plane = plane + rows.astype(jnp.float32)
+            plane = plane + _gather_row(tables_ref[c], idx, shift_bits)
         return acc + scales_ref[j, 0] * plane
 
     acc = jax.lax.fori_loop(
@@ -60,7 +86,14 @@ def _kernel(codes_ref, tables_ref, scales_ref, out_ref, *, block_k: int, planes:
 
 
 def _grouped_kernel(
-    codes_ref, tables_ref, scales_ref, out_ref, *, block_k: int, planes: int
+    codes_ref,
+    tables_ref,
+    scales_ref,
+    out_ref,
+    *,
+    block_k: int,
+    planes: int,
+    shift_bits: int,
 ):
     """One (group, batch, out, chunk) grid step.
 
@@ -83,8 +116,7 @@ def _grouped_kernel(
         plane = jnp.zeros(out_ref.shape[1:], jnp.float32)
         for c in range(block_k):  # static unroll over the chunk tile
             idx = codes_ref[:, j, c]  # (bb,) int32
-            rows = jnp.take(tables_ref[0, c], idx, axis=0)  # (bb, pb)
-            plane = plane + rows.astype(jnp.float32)
+            plane = plane + _gather_row(tables_ref[0, c], idx, shift_bits)
         return acc + scales_ref[j, 0] * plane
 
     acc = jax.lax.fori_loop(
@@ -103,6 +135,7 @@ def _experts_kernel(
     block_b: int,
     block_k: int,
     planes: int,
+    shift_bits: int,
 ):
     """One (group, token, out, expert, chunk) grid step.
 
@@ -136,8 +169,7 @@ def _experts_kernel(
             plane = jnp.zeros(out_ref.shape[1:], jnp.float32)
             for c in range(block_k):  # static unroll over the chunk tile
                 idx = codes_ref[:, j, c]  # (bb,) int32
-                rows_t = jnp.take(tables_ref[0, 0, c], idx, axis=0)  # (bb, pb)
-                plane = plane + rows_t.astype(jnp.float32)
+                plane = plane + _gather_row(tables_ref[0, 0, c], idx, shift_bits)
             return acc + scales_ref[j, 0] * plane
 
         acc = jax.lax.fori_loop(
@@ -156,6 +188,7 @@ def lut_affine_experts_pallas(
     block_p: int,
     block_k: int,
     interpret: bool,
+    shift_bits: int = 0,
 ) -> jax.Array:
     """Ragged (MoE expert) LUT affine: every token row against its own
     expert's pre-stacked tables, all ``G`` fused projections of the stack in
@@ -169,7 +202,11 @@ def lut_affine_experts_pallas(
     grid = (G, T // block_b, p // block_p, E, k // block_k)
 
     kernel = functools.partial(
-        _experts_kernel, block_b=block_b, block_k=block_k, planes=n
+        _experts_kernel,
+        block_b=block_b,
+        block_k=block_k,
+        planes=n,
+        shift_bits=shift_bits,
     )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -208,6 +245,7 @@ def lut_affine_grouped_pallas(
     block_p: int,
     block_k: int,
     interpret: bool,
+    shift_bits: int = 0,
 ) -> jax.Array:
     """All ``G`` same-shape projections of one decode step in a single grid:
     one Pallas dispatch instead of ``G`` (QKV / gate-up fusion)."""
@@ -217,7 +255,9 @@ def lut_affine_grouped_pallas(
     assert B % block_b == 0 and p % block_p == 0 and k % block_k == 0
     grid = (G, B // block_b, p // block_p, k // block_k)
 
-    kernel = functools.partial(_grouped_kernel, block_k=block_k, planes=n)
+    kernel = functools.partial(
+        _grouped_kernel, block_k=block_k, planes=n, shift_bits=shift_bits
+    )
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -241,6 +281,7 @@ def lut_affine_pallas(
     block_p: int,
     block_k: int,
     interpret: bool,
+    shift_bits: int = 0,
 ) -> jax.Array:
     B, n, k = codes.shape
     k2, E, p = tables.shape
@@ -248,7 +289,9 @@ def lut_affine_pallas(
     assert B % block_b == 0 and p % block_p == 0 and k % block_k == 0
     grid = (B // block_b, p // block_p, k // block_k)
 
-    kernel = functools.partial(_kernel, block_k=block_k, planes=n)
+    kernel = functools.partial(
+        _kernel, block_k=block_k, planes=n, shift_bits=shift_bits
+    )
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -42,9 +42,12 @@ def _pick_blocks(B: int, k: int, E: int, p: int, n: int, G: int = 1):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_b", "block_p", "block_k", "interpret")
+    jax.jit,
+    static_argnames=("block_b", "block_p", "block_k", "interpret", "shift_bits"),
 )
-def _lut_affine_padded(codes, tables, scales, block_b, block_p, block_k, interpret):
+def _lut_affine_padded(
+    codes, tables, scales, block_b, block_p, block_k, interpret, shift_bits
+):
     return lut_affine_pallas(
         codes,
         tables,
@@ -53,6 +56,7 @@ def _lut_affine_padded(codes, tables, scales, block_b, block_p, block_k, interpr
         block_p=block_p,
         block_k=block_k,
         interpret=interpret,
+        shift_bits=shift_bits,
     )
 
 
@@ -63,8 +67,14 @@ def lut_affine(
     bias: jax.Array | None = None,
     *,
     interpret: bool | None = None,
+    blocks: tuple[int, int, int] | None = None,
+    shift_bits: int = 0,
 ) -> jax.Array:
-    """out[..., :] = sum_j scales[j] * sum_c tables[c, codes[..., j, c], :] + bias"""
+    """out[..., :] = sum_j scales[j] * sum_c tables[c, codes[..., j, c], :] + bias
+
+    ``blocks`` overrides the static ``_pick_blocks`` heuristic with autotuned
+    ``(block_b, block_p, block_k)`` tile sizes (see ``autotune.py``);
+    ``shift_bits`` selects the ``bitplane_shift`` code contract."""
     if interpret is None:
         interpret = default_interpret()
     *lead, n, k = codes.shape
@@ -75,14 +85,14 @@ def lut_affine(
         B *= d
     codes2 = codes.reshape(B, n, k)
 
-    block_b, block_p, block_k = _pick_blocks(B, k, E, p, n)
+    block_b, block_p, block_k = blocks or _pick_blocks(B, k, E, p, n)
     Bp, pp, kp = ceil_to(B, block_b), ceil_to(p, block_p), ceil_to(k, block_k)
     codes2 = pad_axis(pad_axis(codes2, 0, Bp), 2, kp)
     # padded chunks index entry 0 of a zero table -> contribute nothing
     tables_p = pad_axis(pad_axis(tables, 0, kp), 2, pp)
 
     out = _lut_affine_padded(
-        codes2, tables_p, scales, block_b, block_p, block_k, interpret
+        codes2, tables_p, scales, block_b, block_p, block_k, interpret, shift_bits
     )[:B, :p]
     if bias is not None:
         out = out + bias.astype(out.dtype)
@@ -90,10 +100,11 @@ def lut_affine(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_b", "block_p", "block_k", "interpret")
+    jax.jit,
+    static_argnames=("block_b", "block_p", "block_k", "interpret", "shift_bits"),
 )
 def _lut_affine_grouped_padded(
-    codes, tables, scales, block_b, block_p, block_k, interpret
+    codes, tables, scales, block_b, block_p, block_k, interpret, shift_bits
 ):
     return lut_affine_grouped_pallas(
         codes,
@@ -103,6 +114,7 @@ def _lut_affine_grouped_padded(
         block_p=block_p,
         block_k=block_k,
         interpret=interpret,
+        shift_bits=shift_bits,
     )
 
 
@@ -113,6 +125,8 @@ def lut_affine_grouped(
     biases: jax.Array | None = None,  # (G, p)
     *,
     interpret: bool | None = None,
+    blocks: tuple[int, int, int] | None = None,
+    shift_bits: int = 0,
 ) -> jax.Array:
     """Fused batched decode path: ``out[g, ..., :] = lut_affine(codes,
     tables[g], scales) (+ biases[g])`` for all ``G`` projections in ONE
@@ -130,14 +144,14 @@ def lut_affine_grouped(
         B *= d
     codes2 = codes.reshape(B, n, k)
 
-    block_b, block_p, block_k = _pick_blocks(B, k, E, p, n, G=G)
+    block_b, block_p, block_k = blocks or _pick_blocks(B, k, E, p, n, G=G)
     Bp, pp, kp = ceil_to(B, block_b), ceil_to(p, block_p), ceil_to(k, block_k)
     codes2 = pad_axis(pad_axis(codes2, 0, Bp), 2, kp)
     # padded chunks index entry 0 of a zero table -> contribute nothing
     tables_p = pad_axis(pad_axis(tables, 1, kp), 3, pp)
 
     out = _lut_affine_grouped_padded(
-        codes2, tables_p, scales, block_b, block_p, block_k, interpret
+        codes2, tables_p, scales, block_b, block_p, block_k, interpret, shift_bits
     )[:, :B, :p]
     if biases is not None:
         out = out + biases[:, None, :].astype(out.dtype)
@@ -145,10 +159,11 @@ def lut_affine_grouped(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_b", "block_p", "block_k", "interpret")
+    jax.jit,
+    static_argnames=("block_b", "block_p", "block_k", "interpret", "shift_bits"),
 )
 def _lut_affine_experts_padded(
-    offsets, codes, tables, scales, block_b, block_p, block_k, interpret
+    offsets, codes, tables, scales, block_b, block_p, block_k, interpret, shift_bits
 ):
     return lut_affine_experts_pallas(
         offsets,
@@ -159,6 +174,7 @@ def _lut_affine_experts_padded(
         block_p=block_p,
         block_k=block_k,
         interpret=interpret,
+        shift_bits=shift_bits,
     )
 
 
@@ -169,6 +185,8 @@ def lut_affine_experts(
     group_sizes: jax.Array,  # (E,) int32 tokens per expert, sum == T
     *,
     interpret: bool | None = None,
+    blocks: tuple[int, int, int] | None = None,
+    shift_bits: int = 0,
 ) -> jax.Array:
     """Ragged MoE dispatch over pre-stacked expert tables: token row ``t``
     (sorted by expert, the ``lax.ragged_dot`` layout) is evaluated against
@@ -183,7 +201,7 @@ def lut_affine_experts(
     assert k == k2, f"codes have {k} chunks, tables {k2}"  # before padding
     assert group_sizes.shape == (E,), (group_sizes.shape, E)
 
-    block_b, block_p, block_k = _pick_blocks(T, k, En, p, n)
+    block_b, block_p, block_k = blocks or _pick_blocks(T, k, En, p, n)
     Tp, pp, kp = ceil_to(T, block_b), ceil_to(p, block_p), ceil_to(k, block_k)
     codes2 = pad_axis(pad_axis(codes, 0, Tp), 2, kp)
     # padded chunks index entry 0 of a zero table -> contribute nothing;
@@ -195,6 +213,14 @@ def lut_affine_experts(
     )
 
     out = _lut_affine_experts_padded(
-        offsets, codes2, tables_p, scales, block_b, block_p, block_k, interpret
+        offsets,
+        codes2,
+        tables_p,
+        scales,
+        block_b,
+        block_p,
+        block_k,
+        interpret,
+        shift_bits,
     )[:, :T, :p]
     return out

@@ -5,14 +5,27 @@ import jax
 import jax.numpy as jnp
 
 
+def _sigma_rows(gathered: jax.Array, codes: jax.Array, shift_bits: int):
+    """bitplane_shift: codes carry the element exponent above the index
+    bits; scale each gathered row by ``2**(max(e,1)-25)``."""
+    sig = jnp.exp2(
+        jnp.maximum(codes >> shift_bits, 1).astype(jnp.float32) - 25.0
+    )
+    return gathered * sig[..., None]
+
+
 def lut_affine_ref(
     codes: jax.Array,  # (B, n, k) int32
     tables: jax.Array,  # (k, E, p)
     scales: jax.Array,  # (n,)
+    shift_bits: int = 0,
 ) -> jax.Array:
-    k = tables.shape[0]
-    gathered = tables[jnp.arange(k), codes]  # (B, n, k, p)
-    per_plane = jnp.sum(gathered.astype(jnp.float32), axis=-2)  # (B, n, p)
+    k, E, _ = tables.shape
+    idx = codes & (E - 1) if shift_bits else codes
+    gathered = tables[jnp.arange(k), idx].astype(jnp.float32)  # (B, n, k, p)
+    if shift_bits:
+        gathered = _sigma_rows(gathered, codes, shift_bits)
+    per_plane = jnp.sum(gathered, axis=-2)  # (B, n, p)
     return jnp.einsum("bnp,n->bp", per_plane, scales.astype(jnp.float32))
 
 
@@ -20,9 +33,10 @@ def lut_affine_grouped_ref(
     codes: jax.Array,  # (B, n, k) int32 — shared across the group
     tables: jax.Array,  # (G, k, E, p)
     scales: jax.Array,  # (n,)
+    shift_bits: int = 0,
 ) -> jax.Array:
     """(G, B, p): every group member applied to the same packed input."""
-    return jax.vmap(lambda t: lut_affine_ref(codes, t, scales))(tables)
+    return jax.vmap(lambda t: lut_affine_ref(codes, t, scales, shift_bits))(tables)
 
 
 def expert_of_token(group_sizes: jax.Array, num_tokens: int) -> jax.Array:
@@ -42,6 +56,7 @@ def lut_affine_experts_ref(
     tables: jax.Array,  # (E, G, k, En, p) pre-stacked per-expert tables
     scales: jax.Array,  # (n,)
     group_sizes: jax.Array,  # (E,) int32, sum == T
+    shift_bits: int = 0,
 ) -> jax.Array:
     """(G, T, p): row ``t`` evaluated against ITS expert's tables.
 
@@ -51,14 +66,17 @@ def lut_affine_experts_ref(
     and no ``(T, ..., entries, p)`` materialisation.
     """
     T = codes.shape[0]
-    E, G, k, _, _ = tables.shape
+    E, G, k, En, _ = tables.shape
+    idx = codes & (En - 1) if shift_bits else codes
     eot = jnp.minimum(expert_of_token(group_sizes, T), E - 1)
     gathered = tables[
         eot[:, None, None, None],  # (T, 1, 1, 1)
         jnp.arange(G, dtype=jnp.int32)[None, :, None, None],
         jnp.arange(k, dtype=jnp.int32)[None, None, None, :],
-        codes[:, None, :, :],  # (T, 1, n, k)
-    ]  # (T, G, n, k, p)
-    per_plane = jnp.sum(gathered.astype(jnp.float32), axis=-2)  # (T, G, n, p)
+        idx[:, None, :, :],  # (T, 1, n, k)
+    ].astype(jnp.float32)  # (T, G, n, k, p)
+    if shift_bits:
+        gathered = _sigma_rows(gathered, codes[:, None, :, :], shift_bits)
+    per_plane = jnp.sum(gathered, axis=-2)  # (T, G, n, p)
     out = jnp.einsum("tgnp,n->tgp", per_plane, scales.astype(jnp.float32))
     return jnp.moveaxis(out, 0, 1)  # (G, T, p)

@@ -1,5 +1,8 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+from repro.launch.backend import BackendConfig
+
+BackendConfig(host_device_count=512).apply()
 # ^^ MUST precede any jax-importing module: jax locks the device count at
 # first init.  Only the dry-run sees 512 placeholder devices.
 

@@ -139,6 +139,7 @@ def _lut_apply(
     ctx: Ctx,
     codes: jax.Array | None = None,  # pre-packed (shared across a group)
     scales: jax.Array | None = None,
+    scale: jax.Array | None = None,  # narrow-table dequant scale
 ) -> jax.Array:
     """One converted projection under the plan stored at conversion time
     (no shape sniffing — fixed-point and fp16 plans with colliding entry
@@ -149,11 +150,23 @@ def _lut_apply(
         codes = pack_codes(x, plan)
     if scales is None:
         scales = jnp.asarray(plane_scales(plan), jnp.float32)
+    if scale is not None:  # power-of-2 dequant folds into the plane scales
+        scales = scales * scale
+    shifted = plan.mode == "bitplane_shift"
     if ex.use_pallas:
         from repro.kernels.lut_affine.ops import lut_affine
 
-        y = lut_affine(codes, tables, scales, bias=b)
-    elif ex.linear_mode == "onehot_mxu":
+        y = lut_affine(
+            codes,
+            tables,
+            scales,
+            bias=b,
+            blocks=plan.blocks,
+            shift_bits=plan.index_bits if shifted else 0,
+        )
+    elif ex.linear_mode == "onehot_mxu" and not shifted:
+        # (bitplane_shift codes carry the exponent above the index bits, so
+        # they cannot feed a one-hot of width num_entries — use the oracle.)
         onehot = jax.nn.one_hot(codes, plan.num_entries, dtype=jnp.bfloat16)
         per_plane = jnp.einsum(
             "...nke,kep->...np",
@@ -165,7 +178,7 @@ def _lut_apply(
         if b is not None:
             y = y + b
     else:
-        y = apply_luts(tables, codes, plan, bias=b)
+        y = apply_luts(tables, codes, plan, bias=b, scales=scales)
     return y.astype(x.dtype)
 
 
@@ -173,7 +186,7 @@ def linear(p: dict | LUTLinear, x: jax.Array, ctx: Ctx) -> jax.Array:
     """y = x @ W (+ b), or its TableNet-converted equivalents."""
     ex = ctx.ex
     if isinstance(p, LUTLinear):  # converted layer: paper-faithful LUT path
-        return _lut_apply(p.tables, p.b, p.plan, x, ctx)
+        return _lut_apply(p.tables, p.b, p.plan, x, ctx, scale=p.scale)
     b = p.get("b")
     if ex.linear_mode == "binary_matmul":  # beyond-paper MXU bitplane path
         fmt = FixedPointFormat(ex.fixed_bits, ex.fixed_frac, signed=True)
@@ -201,7 +214,13 @@ def linear(p: dict | LUTLinear, x: jax.Array, ctx: Ctx) -> jax.Array:
     return y
 
 
-def _group_apply(node: LUTGroup, wanted: list[str], x: jax.Array, ctx: Ctx):
+def _group_apply(
+    node: LUTGroup,
+    wanted: list[str],
+    x: jax.Array,
+    ctx: Ctx,
+    codes: jax.Array | None = None,  # pre-packed (shared across sibling groups)
+):
     """Execute (a subset of) a pre-stacked :class:`LUTGroup` against ``x``.
 
     The input is packed ONCE for the whole group.  When every member is
@@ -216,12 +235,18 @@ def _group_apply(node: LUTGroup, wanted: list[str], x: jax.Array, ctx: Ctx):
     over fusion.
     """
     plan = node.plan
-    codes = pack_codes(x, plan)
+    if codes is None:
+        codes = pack_codes(x, plan)
     scales = jnp.asarray(plane_scales(plan), jnp.float32)
+    if node.scale is not None:  # shared dequant scale of the stacked leaf
+        scales = scales * node.scale
     fuse = (
         len(wanted) == len(node.members)
         and ctx.ex.lut_grouped
-        and ctx.ex.linear_mode != "onehot_mxu"
+        # onehot_mxu has no grouped equivalent — except under bitplane_shift,
+        # whose exponent-carrying codes cannot feed a one-hot at all: there
+        # every execution mode runs the same gather, so fusing stays exact.
+        and (ctx.ex.linear_mode != "onehot_mxu" or plan.mode == "bitplane_shift")
     )
     outs: dict[str, jax.Array] = {}
     if fuse:
@@ -229,9 +254,18 @@ def _group_apply(node: LUTGroup, wanted: list[str], x: jax.Array, ctx: Ctx):
         if ctx.ex.use_pallas:
             from repro.kernels.lut_affine.ops import lut_affine_grouped
 
-            y = lut_affine_grouped(codes, node.tables, scales, biases=stacked_b)
+            y = lut_affine_grouped(
+                codes,
+                node.tables,
+                scales,
+                biases=stacked_b,
+                blocks=plan.blocks,
+                shift_bits=plan.index_bits if plan.mode == "bitplane_shift" else 0,
+            )
         else:
-            y = jax.vmap(lambda t: apply_luts(t, codes, plan))(node.tables)
+            y = jax.vmap(lambda t: apply_luts(t, codes, plan, scales=scales))(
+                node.tables
+            )
             if stacked_b is not None:
                 y = y + stacked_b.reshape(
                     stacked_b.shape[:1] + (1,) * (y.ndim - 2) + stacked_b.shape[-1:]
@@ -270,11 +304,20 @@ def fused_linears(
     identical to the unfused path.
     """
     outs: dict[str, jax.Array] = {}
+    packed: dict[tuple, jax.Array] = {}  # share codes across same-input groups
     for node in parent.values():
         if isinstance(node, LUTGroup):
             wanted = [m for m in node.members if m in names]
             if wanted:
-                outs.update(_group_apply(node, wanted, x, ctx))
+                key = (
+                    node.plan.in_features,
+                    node.plan.chunk_size,
+                    node.plan.mode,
+                    node.plan.fmt,
+                )
+                if key not in packed:
+                    packed[key] = pack_codes(x, node.plan)
+                outs.update(_group_apply(node, wanted, x, ctx, codes=packed[key]))
     for name in names:
         if name not in outs:
             outs[name] = linear(parent[name], x, ctx)

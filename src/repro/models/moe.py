@@ -114,16 +114,29 @@ def _ragged_lut(
     codes: jax.Array,  # (T, n, k) expert-sorted
     group_sizes: jax.Array,  # (E,)
     ex: ExecCfg,
+    scale: jax.Array | None = None,  # narrow-table dequant scale
 ) -> jax.Array:
     """(G, T, p) float32 — every token row against ITS expert's tables."""
     scales = jnp.asarray(plane_scales(plan), jnp.float32)
+    if scale is not None:  # power-of-2 dequant folds into the plane scales
+        scales = scales * scale
+    shift = plan.index_bits if plan.mode == "bitplane_shift" else 0
     if ex.use_pallas:
         from repro.kernels.lut_affine.ops import lut_affine_experts
 
-        return lut_affine_experts(codes, tables, scales, group_sizes)
+        return lut_affine_experts(
+            codes,
+            tables,
+            scales,
+            group_sizes,
+            blocks=plan.blocks,
+            shift_bits=shift,
+        )
     from repro.kernels.lut_affine.ref import lut_affine_experts_ref
 
-    return lut_affine_experts_ref(codes, tables, scales, group_sizes)
+    return lut_affine_experts_ref(
+        codes, tables, scales, group_sizes, shift_bits=shift
+    )
 
 
 def _moe_local(
@@ -158,12 +171,21 @@ def _moe_local(
             g = node.members.index(name)
             plan = _local_plan(node.plan, node.tables)
             codes = sorted_codes(plan, src, gather)
-            y = _ragged_lut(node.tables[:, g : g + 1], plan, codes, group_sizes, ex)
+            y = _ragged_lut(
+                node.tables[:, g : g + 1],
+                plan,
+                codes,
+                group_sizes,
+                ex,
+                scale=node.scale,
+            )
             return y[0].astype(x.dtype)
         if isinstance(node, LUTLinear):
             plan = _local_plan(node.plan, node.tables)
             codes = sorted_codes(plan, src, gather)
-            y = _ragged_lut(node.tables[:, None], plan, codes, group_sizes, ex)[0]
+            y = _ragged_lut(
+                node.tables[:, None], plan, codes, group_sizes, ex, scale=node.scale
+            )[0]
             return y.astype(x.dtype)
         rows = jnp.take(src, token_of, axis=0) if gather else src
         return jax.lax.ragged_dot(rows, node, group_sizes)
@@ -174,7 +196,9 @@ def _moe_local(
         # pre-stacked gate/up pair: ONE fused ragged dispatch for both
         plan = _local_plan(gate_node.plan, gate_node.tables)
         codes = sorted_codes(plan, x, gather=True)
-        gu = _ragged_lut(gate_node.tables, plan, codes, group_sizes, ex)
+        gu = _ragged_lut(
+            gate_node.tables, plan, codes, group_sizes, ex, scale=gate_node.scale
+        )
         order_g = {m: i for i, m in enumerate(gate_node.members)}
         g = gu[order_g["w_gate"]].astype(x.dtype)
         u = gu[order_g["w_up"]].astype(x.dtype)
@@ -203,25 +227,34 @@ def _down_chunks_shardable(plan: LUTPlan, tp_size: int) -> bool:
     return tp_size > 1 and plan.in_features % (tp_size * plan.chunk_size) == 0
 
 
+def _lut_node_spec(node, tables_spec: P):
+    """Node-shaped in_spec for a LUT leaf bundle: the table leaf gets
+    ``tables_spec``; the scalar dequant scale (present only for narrow
+    table formats) is replicated; expert biases are never emitted by
+    conversion, so ``b`` stays the empty subtree."""
+    return dataclasses.replace(
+        node, tables=tables_spec, b=None, scale=None if node.scale is None else P()
+    )
+
+
 def _expert_specs(experts: dict, tp: tuple) -> dict:
-    """shard_map in_specs for the expert tree: one spec per node (a pytree
-    prefix — LUT nodes carry only their table leaf; expert biases are never
-    emitted by conversion).  Gate/up shard their output (d_ff) dim — the
-    table p axis — over the model axis exactly like the dense weights; the
-    down projection shards its contraction: the weight's d_ff dim when
-    dense, the table chunk axis when converted."""
+    """shard_map in_specs for the expert tree: one spec subtree per node.
+    Gate/up shard their output (d_ff) dim — the table p axis — over the
+    model axis exactly like the dense weights; the down projection shards
+    its contraction: the weight's d_ff dim when dense, the table chunk axis
+    when converted."""
     tpa = tp[0] if tp else None
-    specs: dict[str, P] = {}
+    specs: dict = {}
     for key, node in experts.items():
         if key == "router":
             specs[key] = P(None, None)
         elif isinstance(node, LUTGroup):  # (E, G, k, entries, p=f)
-            specs[key] = P(None, None, None, None, tpa)
+            specs[key] = _lut_node_spec(node, P(None, None, None, None, tpa))
         elif isinstance(node, LUTLinear):
             if key == "w_down":  # (E, k, entries, d): shard chunks (= d_ff)
-                specs[key] = P(None, tpa, None, None)
+                specs[key] = _lut_node_spec(node, P(None, tpa, None, None))
             else:  # (E, k, entries, f): shard the output dim
-                specs[key] = P(None, None, None, tpa)
+                specs[key] = _lut_node_spec(node, P(None, None, None, tpa))
         elif key == "w_down":  # (E, f, d)
             specs[key] = P(None, tpa, None)
         else:  # raw (E, d, f) gate/up

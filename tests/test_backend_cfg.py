@@ -1,0 +1,69 @@
+"""repro.launch.backend: flag merging, env application, the post-init
+guard, and the CLI argument trio."""
+import argparse
+
+import pytest
+
+from repro.launch import backend
+from repro.launch.backend import BackendConfig
+
+
+def test_merged_flags_inherit_env_and_append_ours_last():
+    cfg = BackendConfig(xla_flags=("--xla_b=2",))
+    assert cfg.merged_xla_flags({"XLA_FLAGS": "--xla_a=1"}) == "--xla_a=1 --xla_b=2"
+    assert cfg.merged_xla_flags({}) == "--xla_b=2"
+
+
+def test_merged_flags_replace_stale_device_count():
+    cfg = BackendConfig(host_device_count=512)
+    env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8 --xla_a=1"}
+    merged = cfg.merged_xla_flags(env)
+    assert merged.count("--xla_force_host_platform_device_count") == 1
+    assert "--xla_force_host_platform_device_count=512" in merged
+    assert "--xla_a=1" in merged
+
+
+def test_apply_writes_only_configured_keys(monkeypatch):
+    monkeypatch.setattr(backend, "jax_initialised", lambda: False)
+    env: dict[str, str] = {}
+    BackendConfig().apply(env)
+    assert env == {}  # empty config: no spurious empty XLA_FLAGS
+    BackendConfig(platform="cpu", host_device_count=4).apply(env)
+    assert env["JAX_PLATFORMS"] == "cpu"
+    assert env["XLA_FLAGS"] == "--xla_force_host_platform_device_count=4"
+
+
+def test_apply_refuses_after_jax_initialised(monkeypatch):
+    monkeypatch.setattr(backend, "jax_initialised", lambda: True)
+    with pytest.raises(RuntimeError, match="already locked"):
+        BackendConfig(platform="cpu").apply({})
+
+
+def test_jax_initialised_reflects_backend_registry():
+    # this test process imports jax and runs computations elsewhere in the
+    # suite, so the only portable assertions are type and the sys.modules
+    # coupling: a process that never imported jax reports False
+    import sys
+
+    assert isinstance(backend.jax_initialised(), bool)
+    saved = {
+        k: sys.modules.pop(k) for k in list(sys.modules) if k == "jax._src.xla_bridge"
+    }
+    try:
+        assert backend.jax_initialised() is False
+    finally:
+        sys.modules.update(saved)
+
+
+def test_cli_round_trip():
+    ap = argparse.ArgumentParser()
+    backend.add_args(ap)
+    # values starting with "--" must use the = form, or argparse eats them
+    argv = ["--platform", "cpu", "--host-device-count", "8"]
+    argv += ["--xla-flag=--xla_a=1", "--xla-flag=--xla_b=2"]
+    args = ap.parse_args(argv)
+    cfg = backend.from_args(args)
+    assert cfg == BackendConfig(
+        platform="cpu", host_device_count=8, xla_flags=("--xla_a=1", "--xla_b=2")
+    )
+    assert backend.from_args(ap.parse_args([])) == BackendConfig()

@@ -1,0 +1,180 @@
+"""tools/bench_compare.py CLI contract: threshold/normalize comparison,
+--require-ge with --ge-slack, --require-rows, and loud failures on
+malformed input or silently vanished rows.  Driven through subprocess so
+exit codes (the thing CI gates on) are what is actually asserted."""
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+SCRIPT = REPO / "tools" / "bench_compare.py"
+
+
+def _rows(*pairs, unit="us"):
+    return [{"name": n, "value": v, "unit": unit} for n, v in pairs]
+
+
+def _write(tmp_path, name, payload):
+    p = tmp_path / name
+    p.write_text(json.dumps(payload))
+    return str(p)
+
+
+def _run(*args):
+    return subprocess.run(
+        [sys.executable, str(SCRIPT), *args],
+        capture_output=True,
+        text=True,
+        cwd=REPO,
+    )
+
+
+# ---------------------------------------------------------------------------
+# --baseline / --threshold / --normalize
+# ---------------------------------------------------------------------------
+
+
+def test_threshold_pass_and_fail(tmp_path):
+    base = _write(tmp_path, "base.json", _rows(("kern/x_us", 100.0)))
+    ok = _write(tmp_path, "ok.json", _rows(("kern/x_us", 120.0)))
+    bad = _write(tmp_path, "bad.json", _rows(("kern/x_us", 200.0)))
+    assert _run(ok, "--baseline", base, "--threshold", "1.5").returncode == 0
+    r = _run(bad, "--baseline", base, "--threshold", "1.5")
+    assert r.returncode == 1
+    assert "regressed" in r.stdout
+
+
+def test_normalize_divides_by_jnp_reference(tmp_path):
+    # raw timing doubles, but so does the jnp normalizer row: the ratio of
+    # ratios is 1.0 and the gate must pass under --normalize (and fail raw)
+    tag = "B8_q4_p128_m1"
+    base = _write(
+        tmp_path,
+        "base.json",
+        _rows((f"kern/pallas_{tag}", 50.0), (f"kern/lut_affine_jnp_{tag}", 100.0)),
+    )
+    new = _write(
+        tmp_path,
+        "new.json",
+        _rows((f"kern/pallas_{tag}", 100.0), (f"kern/lut_affine_jnp_{tag}", 200.0)),
+    )
+    assert _run(new, "--baseline", base, "--threshold", "1.5").returncode == 1
+    assert (
+        _run(new, "--baseline", base, "--threshold", "1.5", "--normalize").returncode
+        == 0
+    )
+
+
+def test_missing_gated_baseline_row_fails(tmp_path):
+    base = _write(tmp_path, "base.json", _rows(("kern/x_us", 100.0)))
+    new = _write(tmp_path, "new.json", _rows(("kern/renamed_us", 100.0)))
+    r = _run(new, "--baseline", base)
+    assert r.returncode == 1
+    assert "missing" in r.stdout
+
+
+def test_matmul_ref_rows_are_context_only(tmp_path):
+    # matmul_ref is dispatch-noise; a 10x swing must not gate, but with no
+    # other comparable rows the "nothing compared" guard still fails the run
+    base = _write(
+        tmp_path,
+        "base.json",
+        _rows(("kern/matmul_ref_x_us", 10.0), ("kern/x_us", 100.0)),
+    )
+    new = _write(
+        tmp_path,
+        "new.json",
+        _rows(("kern/matmul_ref_x_us", 100.0), ("kern/x_us", 100.0)),
+    )
+    assert _run(new, "--baseline", base).returncode == 0
+    only = _write(tmp_path, "only.json", _rows(("kern/matmul_ref_x_us", 10.0)))
+    r = _run(only, "--baseline", only)
+    assert r.returncode == 1
+    assert "no comparable rows" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# --require-ge / --ge-slack
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "a,b,slack,rc",
+    [
+        (60.0, 100.0, 0.5, 0),  # 60 >= 50
+        (40.0, 100.0, 0.5, 1),  # 40 <  50
+        (95.0, 100.0, 0.9, 0),
+        (85.0, 100.0, 0.9, 1),
+    ],
+)
+def test_require_ge_slack(tmp_path, a, b, slack, rc):
+    new = _write(
+        tmp_path,
+        "new.json",
+        _rows(("serve/a", a), ("serve/b", b), unit="tok/s"),
+    )
+    r = _run(new, "--require-ge", "serve/a", "serve/b", "--ge-slack", str(slack))
+    assert r.returncode == rc
+
+
+def test_require_ge_missing_row_fails(tmp_path):
+    new = _write(tmp_path, "new.json", _rows(("serve/a", 1.0), unit="tok/s"))
+    r = _run(new, "--require-ge", "serve/a", "serve/absent")
+    assert r.returncode == 1
+    assert "missing row" in r.stdout
+
+
+def test_require_ge_repeatable(tmp_path):
+    new = _write(
+        tmp_path,
+        "new.json",
+        _rows(("serve/a", 100.0), ("serve/b", 100.0), ("serve/c", 500.0), unit="t"),
+    )
+    ge = ["--require-ge", "serve/a", "serve/b", "--require-ge", "serve/c", "serve/a"]
+    assert _run(new, *ge, "--ge-slack", "0.9").returncode == 0
+    # one failing pair fails the run even when the other passes
+    ge = ["--require-ge", "serve/a", "serve/b", "--require-ge", "serve/a", "serve/c"]
+    assert _run(new, *ge, "--ge-slack", "0.9").returncode == 1
+
+
+# ---------------------------------------------------------------------------
+# --require-rows
+# ---------------------------------------------------------------------------
+
+
+def test_require_rows(tmp_path):
+    companion = _write(
+        tmp_path, "comp.json", _rows(("serve/a", 1.0), ("serve/b", 2.0), unit="t")
+    )
+    full = _write(
+        tmp_path, "full.json", _rows(("serve/a", 5.0), ("serve/b", 6.0), unit="t")
+    )
+    partial = _write(tmp_path, "part.json", _rows(("serve/a", 5.0), unit="t"))
+    assert _run(full, "--require-rows", companion).returncode == 0
+    r = _run(partial, "--require-rows", companion)
+    assert r.returncode == 1
+    assert "serve/b" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# malformed input
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "payload",
+    [
+        {"not": "a list"},
+        [{"name": "x"}],  # missing value
+        [{"value": 1.0}],  # missing name
+        ["just a string"],
+    ],
+)
+def test_malformed_rows_rejected_at_load(tmp_path, payload):
+    bad = _write(tmp_path, "bad.json", payload)
+    r = _run(bad)
+    assert r.returncode != 0
+    assert "malformed" in r.stderr or "expected a JSON list" in r.stderr

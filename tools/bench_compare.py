@@ -108,15 +108,31 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("new", help="freshly produced benchmark JSON")
     ap.add_argument("--baseline", help="committed baseline JSON to compare against")
-    ap.add_argument("--threshold", type=float, default=1.5,
-                    help="fail when new > threshold * baseline (time rows)")
-    ap.add_argument("--normalize", action="store_true",
-                    help="divide timings by each file's own lut_affine_jnp rows")
-    ap.add_argument("--require-ge", nargs=2, metavar=("A", "B"), action="append",
-                    default=[], help="require value[A] >= ge-slack * value[B] in NEW")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=1.5,
+        help="fail when new > threshold * baseline (time rows)",
+    )
+    ap.add_argument(
+        "--normalize",
+        action="store_true",
+        help="divide timings by each file's own lut_affine_jnp rows",
+    )
+    ap.add_argument(
+        "--require-ge",
+        nargs=2,
+        metavar=("A", "B"),
+        action="append",
+        default=[],
+        help="require value[A] >= ge-slack * value[B] in NEW",
+    )
     ap.add_argument("--ge-slack", type=float, default=0.9)
-    ap.add_argument("--require-rows", metavar="FILE",
-                    help="every row name in FILE must exist in NEW")
+    ap.add_argument(
+        "--require-rows",
+        metavar="FILE",
+        help="every row name in FILE must exist in NEW",
+    )
     args = ap.parse_args()
 
     new = load(args.new)

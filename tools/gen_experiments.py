@@ -32,9 +32,13 @@ def dryrun_summary(records) -> str:
             f"| {m.get('temp_mib', 0) / 1024:.2f} "
             f"| {r.get('compile_s', 0):.0f} |"
         )
-    skips = [f"  * {r['arch']} {r['shape']}: {r['reason']}" for r in sk
-             if r["mesh"] == "single"]
-    return "\n".join(lines) + "\n\nSkipped cells (spec rule):\n" + "\n".join(sorted(set(skips)))
+    skips = [
+        f"  * {r['arch']} {r['shape']}: {r['reason']}"
+        for r in sk
+        if r["mesh"] == "single"
+    ]
+    skipped = "\n".join(sorted(set(skips)))
+    return "\n".join(lines) + "\n\nSkipped cells (spec rule):\n" + skipped
 
 
 def main():

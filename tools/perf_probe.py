@@ -58,7 +58,10 @@ def main():
         db = (b["link_bytes"] - a["link_bytes"]) / dd / 2**20
         print(f"  {op:20s} {dc:6.1f} ops/layer  {db:10.2f} MiB/layer")
     print("-- depth-1 totals (embed/head/loss overhead) --")
-    print(f"flops {c1[0]/1e9:.2f} GF, hbm {c1[1]/2**30:.2f} GiB, link {c1[2]/2**20:.2f} MiB")
+    print(
+        f"flops {c1[0] / 1e9:.2f} GF, hbm {c1[1] / 2**30:.2f} GiB, "
+        f"link {c1[2] / 2**20:.2f} MiB"
+    )
     for op, rec in sorted(ops1.items()):
         print(f"  {op:20s} {rec['count']:5d} ops {rec['link_bytes']/2**20:10.2f} MiB")
 
