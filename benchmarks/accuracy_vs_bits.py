@@ -5,6 +5,11 @@ patterns) reproduces the paper's *trend*: accuracy saturates by ~3 input
 bits and does not improve with more precision.  The LUT path is evaluated
 with the *same tables* at every bit width (exactness is tested separately —
 here we measure classification accuracy of the quantised-input model).
+
+The ``fig4/tl1_*`` rows extend the sweep down the table-bytes axis with the
+TL1 activation-side family: the classifier's weights ternarized (absmean)
+and served from packed base-3 pair indices at ~16x fewer persistent table
+bytes than the weight family, across activation bit widths.
 """
 from __future__ import annotations
 
@@ -13,6 +18,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_config
+from repro.core.convert import convert_params
+from repro.core.lut import LUTPlan
+from repro.core.lut_tl1 import TL1Plan
+from repro.core.planner import ModelPlan
 from repro.core.quantize import FixedPointFormat
 from repro.data.synthetic import image_batch
 from repro.models.layers import Ctx
@@ -53,6 +62,21 @@ def accuracy(params, ctx, bits: int | None, n=2000, seed=0) -> float:
     return correct / tot
 
 
+def tl1_accuracy(params, ctx, act_bits: int | None, n=2000, seed=0) -> float:
+    """Accuracy with ``fc`` converted to the TL1 family (ternary weights,
+    activation-side LUT) at ``act_bits`` activation quantization."""
+    q, p = params["fc"]["w"].shape
+    plan = ModelPlan({"fc": TL1Plan(q, p, act_bits=act_bits)})
+    conv, _ = convert_params(params, plan=plan)
+    correct = tot = 0
+    for s in range(n // 500):
+        x, y = image_batch(500, 10_000 + s, seed=seed)
+        logits = linear_classifier_forward(conv, x, ctx)
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == y))
+        tot += 500
+    return correct / tot
+
+
 def rows() -> list[tuple[str, float, str]]:
     params, ctx = train_linear()
     ref = accuracy(params, ctx, None)
@@ -60,4 +84,22 @@ def rows() -> list[tuple[str, float, str]]:
     for bits in range(1, 9):
         acc = accuracy(params, ctx, bits)
         out.append((f"fig4/bits_{bits}", round(acc, 4), f"delta={acc - ref:+.4f}"))
+    # accuracy vs TABLE BYTES: the TL1 family's design point — ternary
+    # weights cost q*p/4 persistent bytes vs the weight family's tables
+    # (reference: the int8-input bitplane chunk-2 plan, the same input
+    # regime the fig4 sweep saturates in)
+    q, p = params["fc"]["w"].shape
+    weight_bytes = LUTPlan(
+        q, p, 2, FixedPointFormat(8, 8, signed=False), mode="bitplane"
+    ).total_lut_bytes
+    for act_bits in (None, 8, 4, 2):
+        acc = tl1_accuracy(params, ctx, act_bits)
+        tl1_bytes = TL1Plan(q, p, act_bits=act_bits).total_lut_bytes
+        label = "fp" if act_bits is None else f"a{act_bits}"
+        out.append((
+            f"fig4/tl1_{label}",
+            round(acc, 4),
+            f"{tl1_bytes}B tables (weight-family {weight_bytes}B), "
+            f"delta={acc - ref:+.4f}",
+        ))
     return out

@@ -13,9 +13,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.lut import LUTPlan, apply_luts, build_luts, pack_codes, plane_scales
+from repro.core.lut_tl1 import TL1Plan, apply_tl1, build_tl1_tables, quantize_acts
 from repro.core.quantize import Float16Format
 from repro.kernels.binary_matmul.ops import binary_matmul
 from repro.kernels.lut_affine.ops import lut_affine, lut_affine_grouped
+from repro.kernels.lut_tl1.ops import lut_tl1, lut_tl1_grouped
 
 
 def _time(fn, *args, iters=5) -> float:
@@ -99,6 +101,43 @@ def rows(tiny: bool = False) -> list[tuple[str, float, str]]:
             out.append(
                 (f"kern/binary_matmul_{tag}", round(t_bmm, 1), "us/call interpret")
             )
+
+        # TL1 activation-side family at the same (B, q, p) shape: ternary
+        # weights packed as base-3 pair indices, per-token 9-entry LUT
+        tl1_plan = TL1Plan(q, p)
+        tl1_tables, tl1_scale = build_tl1_tables(W)
+        tl1_codes, act_scale = quantize_acts(x, tl1_plan)
+        t_tl1_ref = _time(
+            jax.jit(
+                lambda a, t: apply_tl1(t, a, tl1_plan, scale=tl1_scale)
+            ),
+            x,
+            tl1_tables,
+            iters=iters,
+        )
+        t_tl1 = _time(
+            lambda c, t: lut_tl1(c, t, act_scale, tl1_scale, interpret=True),
+            tl1_codes,
+            tl1_tables,
+            iters=iters,
+        )
+        tl1_tables3 = jnp.stack([tl1_tables] * 3)
+        tl1_scale3 = jnp.stack([tl1_scale] * 3)
+        t_tl1_grp = _time(
+            lambda c, t: lut_tl1_grouped(c, t, act_scale, tl1_scale3,
+                                         interpret=True),
+            tl1_codes,
+            tl1_tables3,
+            iters=iters,
+        )
+        out.append((f"kern/lut_tl1_jnp_{tag}", round(t_tl1_ref, 1), "us/call"))
+        out.append(
+            (f"kern/lut_tl1_pallas_{tag}", round(t_tl1, 1), "us/call interpret")
+        )
+        out.append(
+            (f"kern/lut_tl1_grouped3_{tag}", round(t_tl1_grp, 1),
+             "us/call interpret")
+        )
     return out
 
 

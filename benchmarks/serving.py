@@ -34,6 +34,11 @@ end (admission prefills + decode + the one packed readback per step):
   vs ``convert_experts=True`` LUT experts (the ragged ``lut_affine_experts``
   path, gate/up pre-stacked): the multiplier-free MoE serving path is
   exercised and tracked per commit
+* ``engine_weight_lut`` / ``engine_tl1`` — table-FAMILY head-to-head: the
+  weight-table champion conversion vs the same model planned entirely into
+  the TL1 activation-side family (ternary weights as packed base-3 pair
+  indices, per-token 9-entry LUT built each decode step);
+  ``plan_tl1_table_mib`` records the ~16x persistent-bytes gap alongside
 
 The heavy-traffic lane (``serve/heavy_*`` rows, scaled up by ``--heavy``
 for the weekly scheduled run) drives the paged engine open-loop: Poisson
@@ -235,6 +240,57 @@ def _engine_moe_tps(tiny: bool, reps: int = 7) -> dict:
     }
 
 
+def _engine_family_tps(params, mplan, cfg, tiny: bool, reps: int = 7) -> dict:
+    """Head-to-head between the two table FAMILIES serving the same reduced
+    LM end to end through the :class:`BatchingEngine`:
+
+    * ``engine_weight_lut`` — the weight-table champion: the planned
+      conversion under ``serving_model_plan`` in the pre-stacked grouped
+      layout (the bench's best weight-family configuration)
+    * ``engine_tl1`` — the SAME model planned entirely into the TL1
+      activation-side family (ternary weights packed as base-3 pair
+      indices, per-token 9-entry LUT built each decode step)
+
+    Interleaved rotated rounds + median, like the other engine lanes."""
+    tl1_plan = serving_tl1_plan(tiny, params)
+    weight_params, _ = convert_params(params, plan=mplan)
+    tl1_params, _ = convert_params(params, plan=tl1_plan)
+    ex = ExecCfg(remat="none", lut_grouped=True)
+    runs = {
+        "engine_weight_lut": (weight_params, Ctx(cfg, ex=ex)),
+        "engine_tl1": (tl1_params, Ctx(cfg, ex=ex)),
+    }
+    num_slots = 2
+    max_new = 8 if tiny else 16
+    key = jax.random.PRNGKey(6)
+    prompts = []
+    for i in range(2 * num_slots):
+        key, k = jax.random.split(key)
+        prompts.append(jax.random.randint(k, (3 + i % 4,), 0, cfg.vocab_size))
+    total = len(prompts) * max_new
+
+    def run(name):
+        p, ctx = runs[name]
+        return _engine_run(
+            p, ctx, admit="batched", sample=SampleCfg(), prompts=prompts,
+            max_new=max_new, num_slots=num_slots,
+        )
+
+    names = list(runs)
+    for name in names:  # warmup: compile prefill+decode per param layout
+        run(name)
+    rounds = []
+    for i in range(reps):
+        order = names[i % len(names):] + names[: i % len(names)]
+        rounds.append({name: run(name) for name in order})
+    out = {
+        name: total / statistics.median(r[name] for r in rounds)
+        for name in runs
+    }
+    out["plan_tl1_table_mib"] = tl1_plan.total_lut_bytes / 2**20
+    return out
+
+
 def _heavy_workload(vocab: int, n_req: int, seed: int = 5):
     """Open-loop traffic: Poisson arrivals (exponential gaps), a 50/50 mix
     of short and long prompts, half of them opening with a shared 16-token
@@ -340,6 +396,18 @@ def serving_model_plan(tiny: bool = False, params=None):
     return mplan, uniform, budget
 
 
+def serving_tl1_plan(tiny: bool = False, params=None):
+    """The family head-to-head's TL1 conversion: the whole model planned
+    into the activation-side family, decode-tuned blocks attached.  Its
+    shape points join the committed autotune baseline (``--dump-plan``
+    merges them under ``tl1/``-prefixed keys)."""
+    if params is None:
+        cfg = get_config("granite_8b", reduced=True)
+        params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+    tl1 = plan_model(params, float("inf"), families=("tl1",))
+    return attach_tuned_blocks(tl1, batch=2 if tiny else 4)
+
+
 def rows(tiny: bool = False, heavy: bool = False) -> list[tuple[str, float, str]]:
     cfg = get_config("granite_8b", reduced=True)
     params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
@@ -382,6 +450,13 @@ def rows(tiny: bool = False, heavy: bool = False) -> list[tuple[str, float, str]
     moe_note = "end-to-end MoE engine run, 2 slots, 4 requests"
     for name, tps in _engine_moe_tps(tiny).items():
         out.append((f"serve/{name}_tok_per_s", round(tps, 2), moe_note))
+    fam = _engine_family_tps(params, mplan, cfg, tiny)
+    out.append(("serve/plan_tl1_table_mib",
+                round(fam.pop("plan_tl1_table_mib"), 3),
+                f"vs {round(mplan.total_lut_bytes / 2**20, 2)} weight-champ"))
+    fam_note = "end-to-end engine run, 2 slots, 4 requests; family head-to-head"
+    for name, tps in fam.items():
+        out.append((f"serve/{name}_tok_per_s", round(tps, 2), fam_note))
     out.extend(_heavy_rows(named_runs, tiny, heavy))
     return out
 
@@ -403,9 +478,25 @@ def main():
                          "as JSON — feeds the autotune baseline CLI")
     args = ap.parse_args()
     if args.dump_plan:
+        import dataclasses
+
         mplan, _, _ = serving_model_plan(tiny=args.tiny)
+        tl1 = serving_tl1_plan(tiny=args.tiny)
+        # merge both families' dispatch shapes into ONE plan dump (tl1/
+        # key prefix keeps the layer keys disjoint) so the committed
+        # autotune baseline re-searches weight AND tl1 tune points
+        merged = dataclasses.replace(
+            mplan,
+            layers={**mplan.layers,
+                    **{f"tl1/{k}": v for k, v in tl1.layers.items()}},
+            groups=mplan.groups + tuple(
+                tuple(f"tl1/{m}" for m in g) for g in tl1.groups
+            ),
+            copies={**mplan.copies,
+                    **{f"tl1/{k}": v for k, v in tl1.copies.items()}},
+        )
         with open(args.dump_plan, "w") as f:
-            json.dump(mplan.to_json(), f, indent=1)
+            json.dump(merged.to_json(), f, indent=1)
             f.write("\n")
         if not args.out:
             return

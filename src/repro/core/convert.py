@@ -39,14 +39,17 @@ expert leaves via the ragged LUT path (codes packed once per token; the
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.lut import LUTPlan, build_luts, quantize_tables
+from repro.core.lut_tl1 import TL1Plan, build_tl1_tables
 from repro.core.planner import ModelPlan, path_key
 from repro.core.quantize import Float16Format
+
+AnyPlan = Union[LUTPlan, TL1Plan]
 
 # Sibling key sets that execute against the SAME input at their call sites
 # (models.layers.attention / models.layers.mlp / models.encdec) and are
@@ -66,12 +69,16 @@ class LUTLinear:
     reads chunk/format/mode directly instead of sniffing table shapes.
     """
 
-    tables: Any  # (..., k, entries, p)
-    plan: LUTPlan
+    # weight family: (..., k, entries, p) table entries.
+    # tl1 family: (..., kb, p) uint8 packed base-3 weight-pair indices.
+    tables: Any
+    plan: AnyPlan
     b: Any = None  # (..., p) or None
-    # scalar power-of-2 dequant scale when ``plan.table_format`` stores the
-    # tables narrow (i8/i16); None for full-width tables.  A leaf (not aux):
-    # it is data derived from the weights, and it must ride checkpoints.
+    # Weight family: scalar power-of-2 dequant scale when
+    # ``plan.table_format`` stores the tables narrow (i8/i16); None for
+    # full-width tables.  TL1 family: the absmean ternary weight scale
+    # (always present).  A leaf (not aux): it is data derived from the
+    # weights, and it must ride checkpoints.
     scale: Any = None
 
     def tree_flatten_with_keys(self):
@@ -105,12 +112,14 @@ class LUTGroup:
     holes (mixed) — mixed-bias groups still fuse.
     """
 
-    tables: Any  # (..., G, k, entries, p)
-    plan: LUTPlan
+    tables: Any  # (..., G, k, entries, p); tl1: (..., G, kb, p) uint8
+    plan: AnyPlan
     members: tuple  # sibling keys in call-site order, e.g. ("wk", "wv")
     b: Any = None  # None | (..., G, p) | tuple[(..., p) | None, ...]
-    # ONE scalar dequant scale shared by every member (the group leaf is a
-    # single stacked array, quantized as one); None for full-width tables.
+    # Weight family: ONE scalar dequant scale shared by every member (the
+    # group leaf is a single stacked array, quantized as one); None for
+    # full-width tables.  TL1 family: per-member ternary scales, stacked
+    # ``(..., G)`` (each member's absmean fit is its own).
     scale: Any = None
 
     def tree_flatten_with_keys(self):
@@ -220,6 +229,18 @@ def _build_tables(w, plan: LUTPlan, dtype):
     return fn(w).astype(dtype)
 
 
+def _build_tl1(w):
+    """build_tl1_tables vmapped over any leading (layer/expert) dims.
+
+    Returns ``(packed (..., kb, p) uint8, scale (...) f32)`` — one ternary
+    scale per weight matrix, shaped like the leading dims."""
+
+    fn = build_tl1_tables
+    for _ in range(w.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(w.astype(jnp.float32))
+
+
 def convert_params(
     params: dict,
     chunk_size: int = 1,
@@ -254,7 +275,7 @@ def convert_params(
         {frozenset(g) for g in plan.groups} if plan is not None else None
     )
 
-    def member_plan(path: tuple, node: dict) -> Optional[LUTPlan]:
+    def member_plan(path: tuple, node: dict) -> Optional[AnyPlan]:
         """The plan this linear converts under, or None to leave it dense."""
         w = node["w"]
         q, p = w.shape[-2:]
@@ -283,11 +304,14 @@ def convert_params(
             return tables.astype(table_dtype), None
         return quantize_tables(tables, layer_plan.table_format, trailing)
 
-    def convert_one(node: dict, layer_plan: LUTPlan, expert: bool = False) -> LUTLinear:
+    def convert_one(node: dict, layer_plan: AnyPlan, expert: bool = False) -> LUTLinear:
         w = node["w"]
-        tables, scale = finalize_tables(
-            _build_tables(w, layer_plan, jnp.float32), layer_plan, 3 + expert
-        )
+        if isinstance(layer_plan, TL1Plan):
+            tables, scale = _build_tl1(w)
+        else:
+            tables, scale = finalize_tables(
+                _build_tables(w, layer_plan, jnp.float32), layer_plan, 3 + expert
+            )
         stats["converted"] += 1
         stats["w_bytes"] += w.size * w.dtype.itemsize
         stats["t_bytes"] += tables.size * tables.dtype.itemsize
@@ -316,16 +340,23 @@ def convert_params(
                 f"group {group_key(members)} at {path_key(path)} has "
                 f"mismatched member plans — grouped siblings must share one"
             )
-        member_tables = [
-            _build_tables(node[m]["w"], plans[0], jnp.float32) for m in members
-        ]
-        # quantize the STACKED leaf as one, so the whole group shares one
-        # dequant scale (the group executes as a single fused dispatch)
-        tables, scale = finalize_tables(
-            jnp.stack(member_tables, axis=member_tables[0].ndim - 3),
-            plans[0],
-            4 + expert,
-        )
+        if isinstance(plans[0], TL1Plan):
+            built = [_build_tl1(node[m]["w"]) for m in members]
+            # stack G just before the packed-chunk axis: (..., G, kb, p);
+            # ternary scales are per member, stacked to (..., G)
+            tables = jnp.stack([t for t, _ in built], axis=built[0][0].ndim - 2)
+            scale = jnp.stack([s for _, s in built], axis=-1)
+        else:
+            member_tables = [
+                _build_tables(node[m]["w"], plans[0], jnp.float32) for m in members
+            ]
+            # quantize the STACKED leaf as one, so the whole group shares one
+            # dequant scale (the group executes as a single fused dispatch)
+            tables, scale = finalize_tables(
+                jnp.stack(member_tables, axis=member_tables[0].ndim - 3),
+                plans[0],
+                4 + expert,
+            )
         stats["converted"] += len(members)
         for m in members:
             w = node[m]["w"]

@@ -64,6 +64,11 @@ class LUTPlan:
     # back to the static heuristic in kernels.lut_affine.
     blocks: tuple[int, int, int] | None = None
 
+    # The table-family axis: "weight" = tables built from weights at convert
+    # time, indexed by activation codes (every mode above).  The second
+    # family, "tl1" (repro.core.lut_tl1.TL1Plan), inverts the layout.
+    table_family = "weight"
+
     def __post_init__(self):
         if self.mode not in ("bitplane", "full", "bitplane_shift"):
             raise ValueError(f"unknown mode {self.mode!r}")

@@ -1,0 +1,231 @@
+"""TL1 activation-side look-up tables (the second table family).
+
+The weight-side family in :mod:`repro.core.lut` builds ``2**index_bits``-entry
+tables *from the weights* at convert time and indexes them with activation
+codes.  TL1 (SNIPPETS snippet 1, BitNet lineage) inverts that layout:
+
+* **Convert time** — weights are ternarised (absmean, −1/0/+1, one fp32 scale
+  per weight matrix) and every *pair* of ternary weights along the input axis
+  collapses into a base-3 index ``(t0+1)*3 + (t1+1)`` in ``0..8``.  Two such
+  4-bit indices pack per byte (low nibble first), so the persistent table
+  leaf is ``ceil(ceil(q/2)/2) x p`` uint8 — ``q*p/4`` bytes, radically
+  smaller than any weight-side table.
+* **Decode time** — activations are quantized per token (int8 absmax by
+  default) and a tiny 9-entry LUT is built *per weight-pair chunk per step*:
+  ``lut[c, i] = s0(i)*a[2c] + s1(i)*a[2c+1]`` with ``s(i) = i//3-1, i%3-1``.
+  All nine entries are sums/differences of two activations — adds only.
+  The matmul is then ``y[p] = s_w * s_a * sum_c lut[c, widx[c, p]]``:
+  gathers and adds, no multiplies over weight-sized operands.
+
+Entries are int16 (activations are int8 so each entry fits ±254); the
+accumulator is int32 — int16 would overflow beyond ~128 chunks, so the
+"int16" in the TL1 lineage refers to the table entries, and we document the
+wider accumulate honestly.  ``act_bits=None`` selects an exact fp32 variant
+(no activation quantization; the adds are exact w.r.t. a dense matmul over
+the ternarised weights) used by the stream-equivalence tests.
+
+This module is the pure-jnp oracle; ``repro.kernels.lut_tl1`` implements the
+same contract as Pallas kernels (plain + grouped) and is tested against it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import absmax_int_quantize, ternary_quantize
+
+
+@dataclasses.dataclass(frozen=True)
+class TL1Plan:
+    """How one affine layer (q -> p) maps onto TL1 activation-side tables.
+
+    Mirrors :class:`repro.core.lut.LUTPlan`'s accounting surface
+    (``num_chunks`` / ``num_entries`` / ``lut_evaluations`` /
+    ``shift_add_ops`` / ``total_lut_bytes`` / ``blocks``) so the planner's
+    ``PlanPoint`` and the autotuner's ``TunePoint`` are family-polymorphic.
+    """
+
+    in_features: int  # q
+    out_features: int  # p
+    # Activation quantization width (per-token absmax).  None = exact fp32
+    # activations (adds only, bit-exact vs dense over the ternary weights).
+    act_bits: int | None = 8
+    # Autotuned Pallas tile sizes (block_b, block_p, block_k) where block_k
+    # counts *packed bytes* along the input axis; persisted via ModelPlan
+    # JSON like the weight family's.
+    blocks: tuple[int, int, int] | None = None
+
+    table_family = "tl1"
+
+    def __post_init__(self):
+        if self.act_bits is not None and not (2 <= int(self.act_bits) <= 8):
+            raise ValueError(f"act_bits must be None or in [2, 8], got {self.act_bits}")
+        if self.blocks is not None:
+            object.__setattr__(self, "blocks", tuple(int(v) for v in self.blocks))
+            if len(self.blocks) != 3 or any(v <= 0 for v in self.blocks):
+                raise ValueError(f"blocks must be 3 positive ints, got {self.blocks}")
+
+    # -- derived sizes --------------------------------------------------------
+    @property
+    def chunk_size(self) -> int:  # input elements per index
+        return 2
+
+    @property
+    def num_chunks(self) -> int:  # k: weight pairs (4-bit indices)
+        return -(-self.in_features // 2)
+
+    @property
+    def packed_chunks(self) -> int:  # kb: bytes per output column
+        return -(-self.num_chunks // 2)
+
+    @property
+    def padded_in(self) -> int:
+        return 4 * self.packed_chunks
+
+    @property
+    def num_entries(self) -> int:  # 3**2 activation sums per chunk LUT
+        return 9
+
+    @property
+    def num_planes(self) -> int:
+        return 1
+
+    # -- cost accounting ------------------------------------------------------
+    @property
+    def lut_evaluations(self) -> int:
+        return self.num_chunks
+
+    @property
+    def shift_add_ops(self) -> int:
+        """Adds per token: ``p*(k-1)`` accumulate + ``9k`` per-step LUT build
+        (each of the 9 entries is at most one add of two activations)."""
+        return self.out_features * (self.num_chunks - 1) + 9 * self.num_chunks
+
+    @property
+    def storage_bits(self) -> int:  # per packed *index pair* (one byte)
+        return 8
+
+    @property
+    def total_lut_bits(self) -> int:
+        """Persistent bytes only: the packed weight-index leaf.  The 9-entry
+        activation LUT is transient per decode step (like the weight family's
+        packed codes) and is deliberately not charged to the byte budget."""
+        return self.packed_chunks * self.out_features * self.storage_bits
+
+    @property
+    def total_lut_bytes(self) -> int:
+        return self.total_lut_bits // 8
+
+
+# ---------------------------------------------------------------------------
+# Packing (convert time)
+# ---------------------------------------------------------------------------
+
+
+def pack_ternary(t: jax.Array) -> jax.Array:
+    """(q, p) ternary codes in {-1,0,+1} -> (kb, p) uint8 packed indices.
+
+    Pairs along the input axis become base-3 indices ``(t0+1)*3 + (t1+1)``;
+    two indices pack per byte, low nibble first (the exemplar's layout).
+    The ragged tail pads with ternary 0, whose LUT entry is built from
+    zero-padded activations — exact.
+    """
+    q, p = t.shape
+    pad = -q % 4
+    tp = jnp.pad(t.astype(jnp.int32), ((0, pad), (0, 0)))
+    idx = (tp[0::2] + 1) * 3 + (tp[1::2] + 1)  # (k_pad, p) in 0..8
+    return (idx[0::2] | (idx[1::2] << 4)).astype(jnp.uint8)  # (kb, p)
+
+
+def unpack_indices(packed: jax.Array) -> jax.Array:
+    """(..., kb, p) uint8 -> (..., 2*kb, p) int32 base-3 indices in 0..8."""
+    b = packed.astype(jnp.int32)
+    lo, hi = b & 15, b >> 4
+    k2 = 2 * packed.shape[-2]
+    stacked = jnp.stack([lo, hi], axis=-2)  # (..., kb, 2, p)
+    return stacked.reshape(*packed.shape[:-2], k2, packed.shape[-1])
+
+
+def build_tl1_tables(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(q, p) weights -> (packed (kb, p) uint8, scale () f32)."""
+    t, s = ternary_quantize(w)
+    return pack_ternary(t), s
+
+
+# ---------------------------------------------------------------------------
+# Application (decode time) — the oracle
+# ---------------------------------------------------------------------------
+
+
+def quantize_acts(x: jax.Array, plan: TL1Plan) -> tuple[jax.Array, jax.Array | None]:
+    """(..., q) activations -> (codes (..., padded_in), per-token scale | None).
+
+    int path: int32 codes + (..., 1) fp32 scale; exact path (``act_bits is
+    None``): fp32 values, scale None.  Padding is zeros, so padded chunks
+    contribute 0 through any LUT entry.
+    """
+    q = plan.in_features
+    if x.shape[-1] != q:
+        raise ValueError(f"activation width {x.shape[-1]} != plan in_features {q}")
+    pad = plan.padded_in - q
+    if plan.act_bits is None:
+        a = jnp.asarray(x, jnp.float32)
+        return jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, pad)]), None
+    codes, scale = absmax_int_quantize(x, bits=int(plan.act_bits), axis=-1)
+    return jnp.pad(codes, [(0, 0)] * (codes.ndim - 1) + [(0, pad)]), scale
+
+
+def build_act_lut(acts: jax.Array) -> jax.Array:
+    """(..., 2k) activation codes -> (..., k, 9) per-chunk LUT, adds only.
+
+    Entry ``i`` of chunk ``c`` is ``s0*a[2c] + s1*a[2c+1]`` with
+    ``s0 = i//3 - 1`` and ``s1 = i%3 - 1``.  int32 codes yield int16 entries
+    (int8 activations sum within ±254); fp32 codes stay fp32.
+    """
+    a0, a1 = acts[..., 0::2], acts[..., 1::2]
+    z = jnp.zeros_like(a0)
+    lut = jnp.stack(
+        [-a0 - a1, -a0, a1 - a0, -a1, z, a1, a0 - a1, a0, a0 + a1], axis=-1
+    )
+    return lut.astype(jnp.int16) if jnp.issubdtype(lut.dtype, jnp.integer) else lut
+
+
+def _accumulate(lut: jax.Array, idx: jax.Array) -> jax.Array:
+    """lut (..., k2, 9) x idx (k2, p) -> (..., p); int32 or fp32 accumulate."""
+    p = idx.shape[-1]
+    g = jnp.take_along_axis(lut, jnp.broadcast_to(idx, lut.shape[:-1] + (p,)), axis=-1)
+    acc_dtype = jnp.int32 if jnp.issubdtype(g.dtype, jnp.integer) else jnp.float32
+    return jnp.sum(g.astype(acc_dtype), axis=-2)
+
+
+def apply_tl1(
+    tables: jax.Array,
+    x: jax.Array,
+    plan: TL1Plan,
+    bias: jax.Array | None = None,
+    scale: jax.Array | None = None,
+    acts: tuple[jax.Array, jax.Array | None] | None = None,
+) -> jax.Array:
+    """Oracle TL1 affine: tables (kb, p) uint8, x (..., q) -> (..., p).
+
+    ``scale`` is the ternary weight scale from conversion (defaults to 1).
+    ``acts`` optionally carries pre-quantized activations (the grouped path
+    shares one quantization across all members of a fused group).
+    """
+    codes, s_a = quantize_acts(x, plan) if acts is None else acts
+    lut = build_act_lut(codes)
+    acc = _accumulate(lut, unpack_indices(tables)).astype(jnp.float32)
+    y = acc * s_a if s_a is not None else acc
+    if scale is not None:
+        y = y * scale
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def tl1_linear_reference(w: jax.Array, x: jax.Array, plan: TL1Plan, bias=None):
+    """Convert-and-apply in one call (tests / accuracy bench convenience)."""
+    packed, s = build_tl1_tables(w)
+    return apply_tl1(packed, x, plan, bias=bias, scale=s)

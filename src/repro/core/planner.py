@@ -17,22 +17,30 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Callable, Iterable, Iterator, Mapping, Sequence
+from typing import Any, Callable, Iterable, Iterator, Mapping, Sequence, Union
 
 from repro.core.lut import LUTPlan
+from repro.core.lut_tl1 import TL1Plan
 from repro.core.quantize import FixedPointFormat, Float16Format
+
+# The two table families the pipeline is polymorphic over.  Both plan types
+# expose the same accounting surface (num_chunks / total_lut_bytes /
+# lut_evaluations / shift_add_ops / blocks), so a PlanPoint — and therefore
+# the knapsack — treats them uniformly.
+AnyPlan = Union[LUTPlan, TL1Plan]
+TABLE_FAMILIES = ("weight", "tl1")
 
 
 @dataclasses.dataclass(frozen=True)
 class PlanPoint:
-    plan: LUTPlan
+    plan: AnyPlan
     num_tables: int
     lut_bytes: int
     lut_evaluations: int
     shift_add_ops: int
 
     @staticmethod
-    def of(plan: LUTPlan) -> "PlanPoint":
+    def of(plan: AnyPlan) -> "PlanPoint":
         return PlanPoint(
             plan=plan,
             num_tables=plan.num_chunks,
@@ -178,7 +186,17 @@ def _fmt_from_json(d: Mapping) -> Any:
     return FixedPointFormat(d["total_bits"], d["frac_bits"], signed=d["signed"])
 
 
-def plan_to_json(plan: LUTPlan) -> dict:
+def plan_to_json(plan: AnyPlan) -> dict:
+    if isinstance(plan, TL1Plan):
+        out = {
+            "family": "tl1",
+            "in_features": plan.in_features,
+            "out_features": plan.out_features,
+            "act_bits": plan.act_bits,
+        }
+        if plan.blocks is not None:
+            out["blocks"] = list(plan.blocks)
+        return out
     out = {
         "in_features": plan.in_features,
         "out_features": plan.out_features,
@@ -194,8 +212,22 @@ def plan_to_json(plan: LUTPlan) -> dict:
     return out
 
 
-def plan_from_json(d: Mapping) -> LUTPlan:
+def plan_from_json(d: Mapping) -> AnyPlan:
+    # "family" is absent from plans serialized before the TL1 family existed;
+    # those are all weight-family, so the default keeps old ModelPlan JSON
+    # (and the checkpoints it rides on) loading unchanged.
+    family = d.get("family", "weight")
     blocks = d.get("blocks")
+    blocks = tuple(blocks) if blocks is not None else None
+    if family == "tl1":
+        return TL1Plan(
+            d["in_features"],
+            d["out_features"],
+            act_bits=d.get("act_bits", 8),
+            blocks=blocks,
+        )
+    if family != "weight":
+        raise ValueError(f"unknown table family {family!r}")
     return LUTPlan(
         d["in_features"],
         d["out_features"],
@@ -204,7 +236,7 @@ def plan_from_json(d: Mapping) -> LUTPlan:
         mode=d["mode"],
         out_bits=d["out_bits"],
         table_format=d.get("table_format"),
-        blocks=tuple(blocks) if blocks is not None else None,
+        blocks=blocks,
     )
 
 
@@ -230,10 +262,16 @@ class ModelPlan:
     reconverts identically after an elastic restore.
     """
 
-    layers: Mapping[str, LUTPlan]
+    layers: Mapping[str, AnyPlan]
     budget_bytes: int | None = None
     groups: tuple = ()  # tuple[tuple[str, ...], ...] of layer path keys
     copies: Mapping[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def families(self) -> tuple[str, ...]:
+        """Distinct table families present, in TABLE_FAMILIES order."""
+        present = {p.table_family for p in self.layers.values()}
+        return tuple(f for f in TABLE_FAMILIES if f in present)
 
     @property
     def total_lut_bytes(self) -> int:
@@ -267,7 +305,8 @@ class ModelPlan:
     def summary(self) -> str:
         return (
             f"ModelPlan: {len(self.layers)} layers "
-            f"({len(self.groups)} fused groups), "
+            f"({len(self.groups)} fused groups, "
+            f"families {'+'.join(self.families) or 'none'}), "
             f"{self.total_lut_bytes / 2**20:.1f} MiB tables, "
             f"{self.total_shift_add_ops:,} shift/add ops"
         )
@@ -394,6 +433,8 @@ def plan_model(
     convert_experts: bool = False,
     radices: Sequence[int] = (1,),
     table_formats: Sequence[str | None] = (None,),
+    families: Sequence[str] = ("weight",),
+    tl1_act_bits: int | None = 8,
 ) -> ModelPlan:
     """Choose a per-layer plan for every eligible linear under a global budget.
 
@@ -427,9 +468,24 @@ def plan_model(
     accuracy-safe) — both default to the paper's setting so the frontier
     only widens when a caller opts in.
 
+    ``families`` widens the frontier across TABLE FAMILIES: with ``"tl1"``
+    included, every item's frontier also carries the activation-side TL1
+    point (ternary weights packed to base-3 indices, ``q*p/4`` persistent
+    bytes, ``tl1_act_bits`` activation quantization) so each layer/group
+    independently lands on weight-table vs TL1 under the one global byte
+    budget.  TL1 is the smallest-bytes point by an order of magnitude;
+    upgrades move individual items to weight-table plans wherever the
+    budget buys the most shift/add reduction — so one model mixes families.
+
     Raises ``ValueError`` if even the minimal per-layer plans exceed
     ``max_lut_bytes``.
     """
+    families = tuple(families)
+    if not families or any(f not in TABLE_FAMILIES for f in families):
+        raise ValueError(
+            f"families must be a non-empty subset of {TABLE_FAMILIES}, "
+            f"got {families}"
+        )
     fmt = fmt if fmt is not None else Float16Format(signed=signed)
     if isinstance(fmt, Float16Format):
         fmt_variants = [
@@ -464,18 +520,22 @@ def plan_model(
         q, p = shapes[item[0]]
         assert all(shapes[k] == (q, p) for k in item), item
         if (q, p) not in frontier_cache:
-            pts = [
-                pt
-                for fv in fmt_variants
-                for pt in enumerate_plans(
-                    q,
-                    p,
-                    fv,
-                    modes=modes,
-                    max_chunk=max_chunk,
-                    table_formats=table_formats,
-                )
-            ]
+            pts = []
+            if "weight" in families:
+                pts += [
+                    pt
+                    for fv in fmt_variants
+                    for pt in enumerate_plans(
+                        q,
+                        p,
+                        fv,
+                        modes=modes,
+                        max_chunk=max_chunk,
+                        table_formats=table_formats,
+                    )
+                ]
+            if "tl1" in families:
+                pts.append(PlanPoint.of(TL1Plan(q, p, act_bits=tl1_act_bits)))
             frontier_cache[(q, p)] = tradeoff_curve(pts)
         frontier = frontier_cache[(q, p)]
         if not frontier:

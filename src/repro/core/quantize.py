@@ -226,6 +226,53 @@ class Float16Format:
 
 
 # ---------------------------------------------------------------------------
+# Ternary weights (TL1 / BitNet-style activation-side tables)
+# ---------------------------------------------------------------------------
+
+
+def ternary_quantize(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Absmean ternarisation of a weight matrix: ``w ~= s * t``, t in {-1,0,+1}.
+
+    ``t = clip(round(w / mean|w|), -1, 1)`` picks the codes; the scale is
+    then re-fit in closed form (least squares over the chosen codes),
+    ``s = <w, t> / <t, t>``.  The refit makes the quantizer *idempotent*:
+    ``ternary_quantize(s * t) == (t, s)`` exactly, which the TL1 stream-
+    equivalence tests rely on (ternarise once, serve dense and TL1 from the
+    same values).
+
+    Returns ``(t, s)`` with ``t`` int8 of ``w``'s shape and ``s`` a float32
+    scalar (per call — vmap over leading dims for stacked weights).
+    """
+    w = jnp.asarray(w, jnp.float32)
+    s0 = jnp.maximum(jnp.mean(jnp.abs(w)), 1e-12)
+    t = jnp.clip(jnp.round(w / s0), -1.0, 1.0)
+    s = jnp.sum(w * t) / jnp.maximum(jnp.sum(t * t), 1.0)
+    return t.astype(jnp.int8), s.astype(jnp.float32)
+
+
+def ternary_fake_quant(w: jax.Array) -> jax.Array:
+    """``s * t`` at ``w``'s dtype — the dense stand-in for a TL1 layer."""
+    t, s = ternary_quantize(w)
+    return (s * t.astype(jnp.float32)).astype(w.dtype)
+
+
+def absmax_int_quantize(
+    x: jax.Array, bits: int = 8, axis: int = -1
+) -> tuple[jax.Array, jax.Array]:
+    """Per-token symmetric absmax quantization of activations.
+
+    Returns ``(q, scale)`` with ``q`` int32 codes in ``[-(2**(bits-1)-1),
+    2**(bits-1)-1]`` and ``scale`` shaped like ``x`` with ``axis`` kept at
+    size 1, so ``x ~= q * scale``.
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
+    return q, scale.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
 # Stochastic rounding as a LUT (paper §Stochastic rounding)
 # ---------------------------------------------------------------------------
 

@@ -48,25 +48,49 @@ _VMEM_BUDGET = 4 * 2**20  # keep in lock-step with ops._VMEM_BUDGET
 
 @dataclasses.dataclass(frozen=True)
 class TunePoint:
-    """The shape a LUT-affine dispatch presents to the kernel."""
+    """The shape a LUT dispatch presents to the kernel (either family).
+
+    For ``family="tl1"`` the axes reinterpret: ``k`` counts *packed bytes*
+    along the input (the ``lut_tl1`` chunk axis), ``entries`` is the 9-entry
+    per-pair activation LUT, ``n`` is 1 and ``table_bytes`` 1 (uint8 packed
+    indices).
+    """
 
     B: int  # batch rows per dispatch (decode: batch size)
-    k: int  # chunks
-    entries: int  # table entries per chunk
+    k: int  # chunks (tl1: packed bytes)
+    entries: int  # table entries per chunk (tl1: 9)
     p: int  # output features
-    n: int  # planes
+    n: int  # planes (tl1: 1)
     G: int = 1  # grouped fan-out (1 = ungrouped)
     table_bytes: int = 4  # bytes per stored table element (4/2/1)
+    family: str = "weight"  # table family: "weight" | "tl1"
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
 
     @classmethod
     def from_json(cls, d: Mapping) -> "TunePoint":
-        return cls(**{f.name: int(d[f.name]) for f in dataclasses.fields(cls)})
+        # "family" is a string and absent from pre-TL1 baseline rows
+        vals = {
+            f.name: int(d[f.name])
+            for f in dataclasses.fields(cls)
+            if f.name != "family"
+        }
+        return cls(**vals, family=str(d.get("family", "weight")))
 
     @classmethod
     def from_plan(cls, plan, batch: int, G: int = 1) -> "TunePoint":
+        if plan.table_family == "tl1":
+            return cls(
+                B=int(batch),
+                k=plan.packed_chunks,
+                entries=plan.num_entries,
+                p=plan.out_features,
+                n=1,
+                G=int(G),
+                table_bytes=1,
+                family="tl1",
+            )
         from repro.core.lut import plane_scales
 
         return cls(
@@ -98,7 +122,11 @@ def candidate_blocks(pt: TunePoint) -> list[tuple[int, int, int]]:
     for bb in bbs:
         for bp in bps:
             for bk in bks:
-                tile = pt.G * bk * pt.entries * bp * pt.table_bytes
+                if pt.family == "tl1":
+                    # the packed-index tile is plain bytes — no entries axis
+                    tile = pt.G * bk * bp * pt.table_bytes
+                else:
+                    tile = pt.G * bk * pt.entries * bp * pt.table_bytes
                 if tile <= _VMEM_BUDGET:
                     out.append((bb, bp, bk))
     return out
@@ -113,6 +141,16 @@ def analytic_cost(pt: TunePoint, blocks: tuple[int, int, int]) -> float:
         * (ceil_to(pt.k, bk) // bk)
         * pt.G
     )
+    if pt.family == "tl1":
+        # per step: packed-byte tile + activation-code tile DMA; work is the
+        # in-kernel 9-entry LUT build (2 per byte) plus two p-wide gathers
+        # per packed byte
+        table_tile = bk * bp * pt.table_bytes
+        codes_tile = bb * 4 * bk * 4
+        work = bb * bk * (2 * pt.entries + 2 * bp)
+        return steps * (
+            _STEP_OVERHEAD + _DMA * (table_tile + codes_tile) + _FMA * work
+        )
     table_tile = bk * pt.entries * bp * pt.table_bytes
     codes_tile = bb * pt.n * bk * 4
     gather = bb * pt.n * bk * bp  # rows gathered x width, accumulated
@@ -127,6 +165,26 @@ def _measure(pt: TunePoint, blocks: tuple[int, int, int], reps: int = 5) -> floa
     from repro.kernels.lut_affine.ops import lut_affine, lut_affine_grouped
 
     key = jax.random.PRNGKey(0)
+    if pt.family == "tl1":
+        from repro.kernels.lut_tl1.ops import lut_tl1, lut_tl1_grouped
+
+        acts = jax.random.randint(key, (pt.B, 4 * pt.k), -127, 128, jnp.int32)
+        tshape = (pt.k, pt.p) if pt.G == 1 else (pt.G, pt.k, pt.p)
+        packed = jnp.zeros(tshape, jnp.uint8)
+
+        def run_tl1():
+            if pt.G > 1:
+                return lut_tl1_grouped(acts, packed, blocks=blocks)
+            return lut_tl1(acts, packed, blocks=blocks)
+
+        run_tl1().block_until_ready()
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            run_tl1().block_until_ready()
+            ts.append(time.perf_counter() - t0)
+        return sorted(ts)[len(ts) // 2]
+
     codes = jax.random.randint(key, (pt.B, pt.n, pt.k), 0, pt.entries, jnp.int32)
     dt = {1: jnp.int8, 2: jnp.int16, 4: jnp.float32}[pt.table_bytes]
     tshape = (pt.k, pt.entries, pt.p)

@@ -1,0 +1,178 @@
+"""Pallas TPU kernels for the TL1 activation-side LUT family.
+
+Computes ``out[b, :] = sum_c lut_b[c, widx[c, :]]`` where ``widx`` are the
+base-3 ternary weight-pair indices packed two-per-byte at conversion time
+(``repro.core.lut_tl1.pack_ternary``) and ``lut_b`` is the per-token 9-entry
+activation LUT built *inside the kernel* each step: entry ``i`` of pair
+chunk ``c`` is ``(i//3 - 1) * a[2c] + (i%3 - 1) * a[2c+1]`` — nine sums /
+differences of two activations, adds only.
+
+TPU mapping
+-----------
+Same shape discipline as ``lut_affine``: grid ``(batch_tiles, out_tiles,
+packed_chunk_tiles)`` with the output block revisited and accumulated across
+chunk tiles.  Per step the table tile is ``(kb_block, p_block)`` **bytes**
+(the packed indices), the activation tile is ``(bb, 4, kb_block)`` codes,
+and each packed byte unpacks to two nibble indices gathering from two
+freshly built ``(bb, 9)`` LUTs.  The gather is a 9-wide row lookup — the
+inverse of the weight family's ``(entries, p)`` row gather: here the table
+axis is tiny and the *index* operand is weight-shaped.
+
+LUT entries are int16 (int8 activation codes sum within ±254); accumulation
+is int32 — int16 would overflow past ~128 chunks, so the family keeps the
+exemplar's int16 *entries* and widens the accumulator honestly.  With fp32
+activation codes (``act_bits=None``) entries and accumulator stay fp32 and
+the kernel is exact w.r.t. a dense matmul over the ternary weights.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _acc_dtypes(acts_dtype):
+    if jnp.issubdtype(acts_dtype, jnp.integer):
+        return jnp.int16, jnp.int32
+    return jnp.float32, jnp.float32
+
+
+def _pair_lut(a0, a1, entry_dtype):
+    """(bb,) x2 activation codes -> (bb, 9) LUT, adds only.
+
+    Entry ``i = (s0+1)*3 + (s1+1)`` holds ``s0*a0 + s1*a1``.
+    """
+    z = jnp.zeros_like(a0)
+    lut = jnp.stack(
+        [-a0 - a1, -a0, a1 - a0, -a1, z, a1, a0 - a1, a0, a0 + a1], axis=1
+    )
+    return lut.astype(entry_dtype)
+
+
+def _accum_block(acts_ref, tables2d, block_k: int, shape, acts_at):
+    """Shared accumulate over one packed-chunk tile.
+
+    ``tables2d``: (kb, pb) uint8; ``acts_at(j, c)``: code of element 4c+j.
+    """
+    entry_dtype, acc_dtype = _acc_dtypes(acts_ref.dtype)
+    acc = jnp.zeros(shape, acc_dtype)
+    for c in range(block_k):  # static unroll over the packed-chunk tile
+        w = tables2d[c].astype(jnp.int32)  # (pb,) packed byte
+        lo, hi = w & 15, w >> 4
+        lut_lo = _pair_lut(acts_at(0, c), acts_at(1, c), entry_dtype)
+        lut_hi = _pair_lut(acts_at(2, c), acts_at(3, c), entry_dtype)
+        acc = acc + jnp.take(lut_lo, lo, axis=1).astype(acc_dtype)
+        acc = acc + jnp.take(lut_hi, hi, axis=1).astype(acc_dtype)
+    return acc
+
+
+def _kernel(acts_ref, tables_ref, out_ref, *, block_k: int):
+    """One (batch, out, packed-chunk) grid step.
+
+    acts_ref  : (bb, 4, kb) int32/f32 VMEM — activation codes, element
+                ``4c + j`` at ``[:, j, c]`` (the codes-tile layout of
+                ``lut_affine`` with the plane axis reused for the 4 byte slots)
+    tables_ref: (kb, pb) uint8 VMEM — packed base-3 weight-pair indices
+    out_ref   : (bb, pb) int32/f32 VMEM (revisited across chunk tiles)
+    """
+    kt = pl.program_id(2)
+
+    @pl.when(kt == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += _accum_block(
+        acts_ref,
+        tables_ref,
+        block_k,
+        out_ref.shape,
+        lambda j, c: acts_ref[:, j, c],
+    )
+
+
+def _grouped_kernel(acts_ref, tables_ref, out_ref, *, block_k: int):
+    """One (group, batch, out, packed-chunk) grid step.
+
+    The activation tile is shared across the group dimension — the fused
+    projections all quantize the same input once — only the per-group
+    packed-index tile changes.
+
+    acts_ref  : (bb, 4, kb)    VMEM
+    tables_ref: (1, kb, pb) u8 VMEM (leading 1 = this group)
+    out_ref   : (1, bb, pb)    VMEM (revisited across chunk tiles)
+    """
+    kt = pl.program_id(3)
+
+    @pl.when(kt == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[0] += _accum_block(
+        acts_ref,
+        tables_ref[0],
+        block_k,
+        out_ref.shape[1:],
+        lambda j, c: acts_ref[:, j, c],
+    )
+
+
+def lut_tl1_pallas(
+    acts: jax.Array,  # (B, 4, kb) int32 (or f32 for the exact variant)
+    tables: jax.Array,  # (kb, p) uint8 packed indices
+    *,
+    block_b: int,
+    block_p: int,
+    block_k: int,
+    interpret: bool,
+) -> jax.Array:
+    B, four, kb = acts.shape
+    kb2, p = tables.shape
+    assert four == 4 and kb == kb2, (acts.shape, tables.shape)
+    assert B % block_b == 0 and p % block_p == 0 and kb % block_k == 0
+    grid = (B // block_b, p // block_p, kb // block_k)
+    _, acc_dtype = _acc_dtypes(acts.dtype)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, 4, block_k), lambda b, q, c: (b, 0, c)),
+            pl.BlockSpec((block_k, block_p), lambda b, q, c: (c, q)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_p), lambda b, q, c: (b, q)),
+        out_shape=jax.ShapeDtypeStruct((B, p), acc_dtype),
+        interpret=interpret,
+    )(acts, tables)
+
+
+def lut_tl1_grouped_pallas(
+    acts: jax.Array,  # (B, 4, kb) — one quantized input for the group
+    tables: jax.Array,  # (G, kb, p) uint8
+    *,
+    block_b: int,
+    block_p: int,
+    block_k: int,
+    interpret: bool,
+) -> jax.Array:
+    """All ``G`` same-shape TL1 projections of one decode step in a single
+    grid — one dispatch per step for a whole QKV or gate/up group."""
+    B, four, kb = acts.shape
+    G, kb2, p = tables.shape
+    assert four == 4 and kb == kb2, (acts.shape, tables.shape)
+    assert B % block_b == 0 and p % block_p == 0 and kb % block_k == 0
+    grid = (G, B // block_b, p // block_p, kb // block_k)
+    _, acc_dtype = _acc_dtypes(acts.dtype)
+
+    return pl.pallas_call(
+        functools.partial(_grouped_kernel, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, 4, block_k), lambda g, b, q, c: (b, 0, c)),
+            pl.BlockSpec((1, block_k, block_p), lambda g, b, q, c: (g, c, q)),
+        ],
+        out_specs=pl.BlockSpec((1, block_b, block_p), lambda g, b, q, c: (g, b, q)),
+        out_shape=jax.ShapeDtypeStruct((G, B, p), acc_dtype),
+        interpret=interpret,
+    )(acts, tables)

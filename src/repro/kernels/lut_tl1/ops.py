@@ -1,0 +1,155 @@
+"""Jit'd public wrappers around the TL1 Pallas kernels.
+
+Handles padding to block multiples, block-size selection under the VMEM
+budget, dequantization (per-token activation scale x ternary weight scale),
+bias, and arbitrary leading batch dims.  Input is the flat padded code
+vector ``repro.core.lut_tl1.quantize_acts`` produces.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import ceil_to, default_interpret, pad_axis
+from repro.kernels.lut_tl1.lut_tl1 import lut_tl1_grouped_pallas, lut_tl1_pallas
+
+_VMEM_BUDGET = 4 * 2**20  # bytes of live blocks per grid step
+
+
+def _pick_blocks(B: int, kb: int, p: int, G: int = 1):
+    """Block sizes keeping live tiles under ``_VMEM_BUDGET``.
+
+    The packed-index tile is ``G * kb_block * p_block`` BYTES (uint8) and
+    the activation tile ``bb * 4 * kb_block * 4`` — both tiny next to the
+    weight family's ``entries``-wide tables, so block_k usually reaches the
+    whole packed axis.
+    """
+    block_p = min(ceil_to(p, 128), 512)
+    block_b = min(ceil_to(B, 8), 128)
+    per_k = G * block_p + block_b * 16  # bytes per unit of block_k
+    max_kb = max(1, _VMEM_BUDGET // per_k)
+    block_k = 1
+    while block_k * 2 <= min(max_kb, kb):
+        block_k *= 2
+    return block_b, block_p, block_k
+
+
+def _acts3(acts: jax.Array, kb: int):
+    """(..., 4*kb) flat codes -> (B, 4, kb) kernel tile layout + lead dims."""
+    *lead, q4 = acts.shape
+    assert q4 == 4 * kb, (q4, kb)
+    B = 1
+    for d in lead:
+        B *= d
+    return jnp.swapaxes(acts.reshape(B, kb, 4), 1, 2), lead, B
+
+
+def _dequant(out, act_scale, scale, bias):
+    out = out.astype(jnp.float32)
+    if act_scale is not None:
+        out = out * act_scale
+    if scale is not None:
+        out = out * scale
+    if bias is not None:
+        out = out + bias.astype(out.dtype)
+    return out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_p", "block_k", "interpret")
+)
+def _lut_tl1_padded(acts, tables, block_b, block_p, block_k, interpret):
+    return lut_tl1_pallas(
+        acts,
+        tables,
+        block_b=block_b,
+        block_p=block_p,
+        block_k=block_k,
+        interpret=interpret,
+    )
+
+
+def lut_tl1(
+    acts: jax.Array,  # (..., 4*kb) int32 codes (or f32, exact variant)
+    tables: jax.Array,  # (kb, p) uint8 packed base-3 indices
+    act_scale: jax.Array | None = None,  # (..., 1) per-token dequant scale
+    scale: jax.Array | None = None,  # ternary weight scale
+    bias: jax.Array | None = None,  # (p,)
+    *,
+    interpret: bool | None = None,
+    blocks: tuple[int, int, int] | None = None,
+) -> jax.Array:
+    """out[..., :] = act_scale * scale * sum_c lut[c, widx[c, :]] + bias
+
+    ``blocks`` overrides the static ``_pick_blocks`` heuristic with autotuned
+    ``(block_b, block_p, block_k)`` tile sizes (block_k in packed bytes)."""
+    if interpret is None:
+        interpret = default_interpret()
+    kb, p = tables.shape
+    acts3, lead, B = _acts3(acts, kb)
+
+    block_b, block_p, block_k = blocks or _pick_blocks(B, kb, p)
+    Bp, pp, kp = ceil_to(B, block_b), ceil_to(p, block_p), ceil_to(kb, block_k)
+    # padded chunk rows meet zero-padded activation codes -> every LUT entry
+    # they can index is 0; padded p columns are sliced off below
+    acts3 = pad_axis(pad_axis(acts3, 0, Bp), 2, kp)
+    tables_p = pad_axis(pad_axis(tables, 0, kp), 1, pp)
+
+    out = _lut_tl1_padded(acts3, tables_p, block_b, block_p, block_k, interpret)
+    out = out[:B, :p].reshape(*lead, p)
+    if act_scale is not None:
+        act_scale = act_scale.reshape(*lead, 1)
+    return _dequant(out, act_scale, scale, bias)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_p", "block_k", "interpret")
+)
+def _lut_tl1_grouped_padded(acts, tables, block_b, block_p, block_k, interpret):
+    return lut_tl1_grouped_pallas(
+        acts,
+        tables,
+        block_b=block_b,
+        block_p=block_p,
+        block_k=block_k,
+        interpret=interpret,
+    )
+
+
+def lut_tl1_grouped(
+    acts: jax.Array,  # (..., 4*kb) — one quantized input for the group
+    tables: jax.Array,  # (G, kb, p) uint8 — pre-stacked same-shape projections
+    act_scale: jax.Array | None = None,  # (..., 1)
+    scale: jax.Array | None = None,  # (G,) per-member ternary scales
+    biases: jax.Array | None = None,  # (G, p)
+    *,
+    interpret: bool | None = None,
+    blocks: tuple[int, int, int] | None = None,
+) -> jax.Array:
+    """Fused batched decode path: ``out[g] = lut_tl1(acts, tables[g],
+    act_scale, scale[g]) (+ biases[g])`` for all ``G`` projections in ONE
+    Pallas grid.  ``tables`` is exactly the leaf a TL1-converted
+    ``core.convert.LUTGroup`` stores."""
+    if interpret is None:
+        interpret = default_interpret()
+    G, kb, p = tables.shape
+    acts3, lead, B = _acts3(acts, kb)
+
+    block_b, block_p, block_k = blocks or _pick_blocks(B, kb, p, G=G)
+    Bp, pp, kp = ceil_to(B, block_b), ceil_to(p, block_p), ceil_to(kb, block_k)
+    acts3 = pad_axis(pad_axis(acts3, 0, Bp), 2, kp)
+    tables_p = pad_axis(pad_axis(tables, 1, kp), 2, pp)
+
+    out = _lut_tl1_grouped_padded(
+        acts3, tables_p, block_b, block_p, block_k, interpret
+    )
+    out = out[:, :B, :p].reshape(G, *lead, p)
+    if act_scale is not None:
+        act_scale = act_scale.reshape(*lead, 1)
+    if scale is not None:
+        scale = scale.reshape(G, *([1] * (out.ndim - 1)))
+    if biases is not None:
+        biases = biases.reshape(G, *([1] * (out.ndim - 2)), p)
+    return _dequant(out, act_scale, scale, biases)

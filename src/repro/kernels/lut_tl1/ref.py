@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the TL1 kernel contract (tested against Pallas)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lut_tl1 import build_act_lut, unpack_indices
+
+
+def lut_tl1_ref(acts: jax.Array, tables: jax.Array) -> jax.Array:
+    """acts (B, 4, kb) int32/f32, tables (kb, p) uint8 -> (B, p) int32/f32.
+
+    Same contract as :func:`repro.kernels.lut_tl1.ops.lut_tl1`'s inner
+    kernel: raw accumulate, no scales/bias.
+    """
+    B, four, kb = acts.shape
+    assert four == 4 and tables.shape[0] == kb, (acts.shape, tables.shape)
+    flat = jnp.swapaxes(acts, 1, 2).reshape(B, 4 * kb)  # element 4c+j order
+    lut = build_act_lut(flat)  # (B, 2kb, 9)
+    idx = unpack_indices(tables)  # (2kb, p)
+    p = idx.shape[-1]
+    g = jnp.take_along_axis(lut, jnp.broadcast_to(idx, lut.shape[:-1] + (p,)), axis=-1)
+    acc_dtype = jnp.int32 if jnp.issubdtype(g.dtype, jnp.integer) else jnp.float32
+    return jnp.sum(g.astype(acc_dtype), axis=-2)
+
+
+def lut_tl1_grouped_ref(acts: jax.Array, tables: jax.Array) -> jax.Array:
+    """acts (B, 4, kb), tables (G, kb, p) -> (G, B, p)."""
+    return jax.vmap(lambda t: lut_tl1_ref(acts, t))(tables)

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Sequence
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.convert import LUTGroup, LUTLinear
 from repro.core.lut import LUTPlan, apply_luts, pack_codes, plane_scales
+from repro.core.lut_tl1 import TL1Plan, apply_tl1, quantize_acts
 from repro.core.quantize import FixedPointFormat
 from repro.dist.sharding import ShardCtx
 from repro.models.params import PSpec
@@ -131,6 +132,30 @@ def linear_spec(
     return s
 
 
+def _tl1_apply(
+    tables: jax.Array,  # (kb, p) uint8 packed base-3 indices
+    b: jax.Array | None,
+    plan: "TL1Plan",
+    x: jax.Array,
+    ctx: Ctx,
+    acts: tuple | None = None,  # pre-quantized (codes, act_scale)
+    scale: jax.Array | None = None,  # ternary weight scale
+) -> jax.Array:
+    """One TL1-converted projection: per-token 9-entry activation LUT +
+    packed ternary weight-pair indices (the activation-side table family)."""
+    assert x.shape[-1] == plan.in_features, (x.shape, plan)
+    if acts is None:
+        acts = quantize_acts(x, plan)
+    codes, act_scale = acts
+    if ctx.ex.use_pallas:
+        from repro.kernels.lut_tl1.ops import lut_tl1
+
+        y = lut_tl1(codes, tables, act_scale, scale, bias=b, blocks=plan.blocks)
+    else:
+        y = apply_tl1(tables, x, plan, bias=b, scale=scale, acts=acts)
+    return y.astype(x.dtype)
+
+
 def _lut_apply(
     tables: jax.Array,  # (k, entries, p)
     b: jax.Array | None,
@@ -186,6 +211,8 @@ def linear(p: dict | LUTLinear, x: jax.Array, ctx: Ctx) -> jax.Array:
     """y = x @ W (+ b), or its TableNet-converted equivalents."""
     ex = ctx.ex
     if isinstance(p, LUTLinear):  # converted layer: paper-faithful LUT path
+        if isinstance(p.plan, TL1Plan):
+            return _tl1_apply(p.tables, p.b, p.plan, x, ctx, scale=p.scale)
         return _lut_apply(p.tables, p.b, p.plan, x, ctx, scale=p.scale)
     b = p.get("b")
     if ex.linear_mode == "binary_matmul":  # beyond-paper MXU bitplane path
@@ -212,6 +239,65 @@ def linear(p: dict | LUTLinear, x: jax.Array, ctx: Ctx) -> jax.Array:
     if b is not None:
         y = y + b.astype(y.dtype)
     return y
+
+
+def _tl1_group_apply(
+    node: LUTGroup,
+    wanted: list[str],
+    x: jax.Array,
+    ctx: Ctx,
+    acts: tuple | None = None,  # pre-quantized (shared across sibling groups)
+):
+    """TL1 twin of :func:`_group_apply`: the input is quantized ONCE for the
+    whole group; when every member is wanted and ``ctx.ex.lut_grouped`` is
+    set, the stored ``(G, kb, p)`` packed leaf feeds ``lut_tl1_grouped``
+    (one Pallas dispatch) or a vmapped oracle.  Ternary scales are per
+    member (``node.scale`` is ``(G,)``), applied after the accumulate."""
+    plan = node.plan
+    if acts is None:
+        acts = quantize_acts(x, plan)
+    codes, act_scale = acts
+    fuse = len(wanted) == len(node.members) and ctx.ex.lut_grouped
+    outs: dict[str, jax.Array] = {}
+    if fuse:
+        stacked_b = node.b if isinstance(node.b, jax.Array) else None
+        if ctx.ex.use_pallas:
+            from repro.kernels.lut_tl1.ops import lut_tl1_grouped
+
+            y = lut_tl1_grouped(
+                codes,
+                node.tables,
+                act_scale,
+                node.scale,
+                biases=stacked_b,
+                blocks=plan.blocks,
+            )
+        else:
+            y = jax.vmap(
+                lambda t, s: apply_tl1(t, x, plan, scale=s, acts=acts)
+            )(node.tables, node.scale)
+            if stacked_b is not None:
+                y = y + stacked_b.reshape(
+                    stacked_b.shape[:1] + (1,) * (y.ndim - 2) + stacked_b.shape[-1:]
+                )
+        for g, name in enumerate(node.members):
+            yi = y[g]
+            if stacked_b is None and node.member_bias(g) is not None:
+                yi = yi + node.member_bias(g)
+            outs[name] = yi.astype(x.dtype)
+        return outs
+    for g, name in enumerate(node.members):
+        if name in wanted:
+            outs[name] = _tl1_apply(
+                node.tables[g],
+                node.member_bias(g),
+                plan,
+                x,
+                ctx,
+                acts=acts,
+                scale=node.scale[..., g],
+            )
+    return outs
 
 
 def _group_apply(
@@ -304,12 +390,23 @@ def fused_linears(
     identical to the unfused path.
     """
     outs: dict[str, jax.Array] = {}
-    packed: dict[tuple, jax.Array] = {}  # share codes across same-input groups
+    packed: dict[tuple, Any] = {}  # share packed codes across same-input groups
     for node in parent.values():
         if isinstance(node, LUTGroup):
             wanted = [m for m in node.members if m in names]
             if wanted:
+                if isinstance(node.plan, TL1Plan):
+                    # TL1 "packing" is activation quantization: share one
+                    # (codes, act_scale) per input format across groups
+                    key = ("tl1", node.plan.in_features, node.plan.act_bits)
+                    if key not in packed:
+                        packed[key] = quantize_acts(x, node.plan)
+                    outs.update(
+                        _tl1_group_apply(node, wanted, x, ctx, acts=packed[key])
+                    )
+                    continue
                 key = (
+                    "weight",
                     node.plan.in_features,
                     node.plan.chunk_size,
                     node.plan.mode,

@@ -49,6 +49,7 @@ from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 from repro.core.convert import LUTGroup, LUTLinear
 from repro.core.lut import LUTPlan, pack_codes, plane_scales
+from repro.core.lut_tl1 import TL1Plan, build_act_lut, quantize_acts, unpack_indices
 from repro.models.layers import Ctx, ExecCfg, mlp, mlp_specs
 from repro.models.params import PSpec
 
@@ -97,11 +98,17 @@ def _member_node(experts: dict, name: str):
     raise KeyError(name)
 
 
-def _local_plan(plan: LUTPlan, tables: jax.Array) -> LUTPlan:
+def _local_plan(plan, tables: jax.Array):
     """The packing plan for a possibly chunk-axis-TP-sliced table leaf: a
     shard holding ``k_local`` of the ``k`` chunks packs a ``k_local * m``
     feature slice (exact: LUT affine is linear in the table chunks, and the
-    slicing is only enabled when chunk boundaries align with the shards)."""
+    slicing is only enabled when chunk boundaries align with the shards).
+
+    TL1 leaves never chunk-shard (``_down_chunks_shardable`` forces the TP
+    drop), and their packed-chunk axis sits at ``-2``, not ``-3`` — so the
+    plan passes through untouched."""
+    if plan.table_family == "tl1":
+        return plan
     k_local = tables.shape[-3]
     if k_local == plan.num_chunks:
         return plan
@@ -139,6 +146,40 @@ def _ragged_lut(
     )
 
 
+def _ragged_tl1(
+    tables: jax.Array,  # (E, G, kb, p) uint8 packed base-3 indices
+    plan: TL1Plan,
+    acts: jax.Array,  # (T, 4*kb) expert-sorted activation codes
+    group_sizes: jax.Array,  # (E,)
+    scale: jax.Array | None = None,  # (E, G) per-expert ternary scales
+    act_scale: jax.Array | None = None,  # (T, 1) expert-sorted, int8 mode only
+) -> jax.Array:
+    """(G, T, p) float32 — TL1 twin of :func:`_ragged_lut`.
+
+    The activation LUT is per TOKEN (the inverse of the weight family, where
+    tables are per expert and codes per token), so the ragged structure only
+    selects which expert's packed index matrix each sorted row gathers from.
+    Runs as a jnp oracle on every path — the transient ``(T, 2kb, 9)`` LUT is
+    small and the gather is the whole computation, so there is no separate
+    experts Pallas kernel for this family."""
+    E, G = tables.shape[0], tables.shape[1]
+    T = acts.shape[0]
+    expert_of = jnp.repeat(jnp.arange(E), group_sizes, total_repeat_length=T)
+    idx = unpack_indices(tables)  # (E, G, 2kb, p)
+    rows = jnp.take(idx, expert_of, axis=0)  # (T, G, 2kb, p)
+    lut = build_act_lut(acts)[:, None]  # (T, 1, 2kb, 9)
+    lut = jnp.broadcast_to(lut, rows.shape[:-1] + (lut.shape[-1],))
+    g = jnp.take_along_axis(lut, rows, axis=-1)  # (T, G, 2kb, p)
+    acc = jnp.int32 if jnp.issubdtype(g.dtype, jnp.integer) else jnp.float32
+    out = jnp.moveaxis(jnp.sum(g.astype(acc), axis=-2), 0, 1)  # (G, T, p)
+    out = out.astype(jnp.float32)
+    if act_scale is not None:
+        out = out * act_scale[None]  # (1, T, 1)
+    if scale is not None:
+        out = out * jnp.moveaxis(scale[expert_of], 0, 1)[..., None]  # (G, T, 1)
+    return out
+
+
 def _moe_local(
     x, experts: dict, *, cfg: ModelConfig, ex: ExecCfg, psum_axes, mean_axes
 ):
@@ -155,7 +196,7 @@ def _moe_local(
     # LUT input decomposition is expert-independent: pack x ONCE per token,
     # then gather the packed codes into the expert-sorted (T*k) order — the
     # same gather the dense path applies to the raw activations.
-    pack_cache: dict[LUTPlan, jax.Array] = {}
+    pack_cache: dict = {}  # keyed by plan; TL1 entries hold (codes, act_scale)
 
     def sorted_codes(plan: LUTPlan, src: jax.Array, gather: bool) -> jax.Array:
         if gather:  # src is (T, d): pack per token, gather to (T*k, n, kc)
@@ -164,9 +205,39 @@ def _moe_local(
             return jnp.take(pack_cache[plan], token_of, axis=0)
         return pack_codes(src, plan)  # src already expert-sorted (h)
 
+    def sorted_tl1(plan: TL1Plan, src: jax.Array, gather: bool):
+        """(codes, act_scale) in expert-sorted row order — quantization is
+        expert-independent, so it runs once per token like the packing."""
+        if gather:
+            if plan not in pack_cache:
+                pack_cache[plan] = quantize_acts(src, plan)
+            codes, ascale = pack_cache[plan]
+            codes = jnp.take(codes, token_of, axis=0)
+            if ascale is not None:
+                ascale = jnp.take(ascale, token_of, axis=0)
+            return codes, ascale
+        return quantize_acts(src, plan)
+
+    def project_tl1(node, name: str, src: jax.Array, gather: bool) -> jax.Array:
+        plan = node.plan
+        codes, ascale = sorted_tl1(plan, src, gather)
+        if isinstance(node, LUTGroup):
+            g = node.members.index(name)
+            tables, scale = node.tables[:, g : g + 1], node.scale[:, g : g + 1]
+        else:
+            tables, scale = node.tables[:, None], node.scale[:, None]
+        y = _ragged_tl1(
+            tables, plan, codes, group_sizes, scale=scale, act_scale=ascale
+        )
+        return y[0].astype(x.dtype)
+
     def project(name: str, src: jax.Array, gather: bool) -> jax.Array:
         """One expert projection over the expert-sorted rows."""
         node = _member_node(experts, name)
+        if isinstance(node, (LUTGroup, LUTLinear)) and isinstance(
+            node.plan, TL1Plan
+        ):
+            return project_tl1(node, name, src, gather)
         if isinstance(node, LUTGroup):
             g = node.members.index(name)
             plan = _local_plan(node.plan, node.tables)
@@ -195,10 +266,21 @@ def _moe_local(
     if isinstance(gate_node, LUTGroup) and gate_node is up_node:
         # pre-stacked gate/up pair: ONE fused ragged dispatch for both
         plan = _local_plan(gate_node.plan, gate_node.tables)
-        codes = sorted_codes(plan, x, gather=True)
-        gu = _ragged_lut(
-            gate_node.tables, plan, codes, group_sizes, ex, scale=gate_node.scale
-        )
+        if isinstance(plan, TL1Plan):
+            codes, ascale = sorted_tl1(plan, x, gather=True)
+            gu = _ragged_tl1(
+                gate_node.tables,
+                plan,
+                codes,
+                group_sizes,
+                scale=gate_node.scale,
+                act_scale=ascale,
+            )
+        else:
+            codes = sorted_codes(plan, x, gather=True)
+            gu = _ragged_lut(
+                gate_node.tables, plan, codes, group_sizes, ex, scale=gate_node.scale
+            )
         order_g = {m: i for i, m in enumerate(gate_node.members)}
         g = gu[order_g["w_gate"]].astype(x.dtype)
         u = gu[order_g["w_up"]].astype(x.dtype)
@@ -221,9 +303,14 @@ def _moe_local(
 # ---------------------------------------------------------------------------
 
 
-def _down_chunks_shardable(plan: LUTPlan, tp_size: int) -> bool:
+def _down_chunks_shardable(plan, tp_size: int) -> bool:
     """Chunk-axis TP slices are exact only when every shard holds whole
-    chunks covering exactly its d_ff slice (no ragged tail chunk)."""
+    chunks covering exactly its d_ff slice (no ragged tail chunk).  TL1
+    packed bytes interleave two chunks per byte and the activation LUT is
+    per token, so TL1 down projections never chunk-shard — expert TP drops
+    to replicated tables instead."""
+    if plan.table_family == "tl1":
+        return False
     return tp_size > 1 and plan.in_features % (tp_size * plan.chunk_size) == 0
 
 
@@ -248,13 +335,15 @@ def _expert_specs(experts: dict, tp: tuple) -> dict:
     for key, node in experts.items():
         if key == "router":
             specs[key] = P(None, None)
-        elif isinstance(node, LUTGroup):  # (E, G, k, entries, p=f)
-            specs[key] = _lut_node_spec(node, P(None, None, None, None, tpa))
-        elif isinstance(node, LUTLinear):
-            if key == "w_down":  # (E, k, entries, d): shard chunks (= d_ff)
-                specs[key] = _lut_node_spec(node, P(None, tpa, None, None))
-            else:  # (E, k, entries, f): shard the output dim
-                specs[key] = _lut_node_spec(node, P(None, None, None, tpa))
+        elif isinstance(node, (LUTGroup, LUTLinear)):
+            # ndim-generic over both families: weight tables are
+            # (E, [G,] k, entries, p), TL1 packed leaves (E, [G,] kb, p).
+            axes = [None] * node.tables.ndim
+            if key == "w_down" and node.plan.table_family == "weight":
+                axes[-3] = tpa  # (..., k, entries, d): shard chunks (= d_ff)
+            else:  # gate/up shard the output dim (p = f); TL1 down never
+                axes[-1] = tpa  # TP-shards (tp was already dropped above)
+            specs[key] = _lut_node_spec(node, P(*axes))
         elif key == "w_down":  # (E, f, d)
             specs[key] = P(None, tpa, None)
         else:  # raw (E, d, f) gate/up

@@ -1,9 +1,7 @@
 """Public serving API.
 
 This package is the supported surface for serving: import from
-``repro.serve``, not from the implementation modules.  The old deep paths
-(``repro.serve.engine``, ``repro.serve.cache``) still resolve through
-deprecation shims for one release.
+``repro.serve``, not from the implementation modules.
 
 Engine / generation:
   :class:`BatchingEngine` — fixed-slot continuous batching over a

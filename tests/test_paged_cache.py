@@ -4,7 +4,7 @@ Fast tests cover the pure pieces: page routing in ``advance_meta``
 (including the unmapped-page overflow contract), the paged write/gather
 pair against the dense one-hot reference, in-graph page copies, the
 host-side allocator's refcount/registry/eviction bookkeeping, and the
-``repro.serve`` public API + deprecation shims.
+``repro.serve`` public API surface.
 
 Slow tests are the acceptance bar: paged ``generate`` and the paged
 ``BatchingEngine`` produce token streams identical to the dense rectangle
@@ -15,7 +15,6 @@ capacity edges (EOS at the final page slot, prompt + max_new exactly at
 capacity, SWA ring wraparound over reused pages) hold.
 """
 import dataclasses
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -220,7 +219,7 @@ def test_allocator_windowed_maps_full_ring():
 
 
 # ---------------------------------------------------------------------------
-# public API + deprecation shims
+# public API surface
 # ---------------------------------------------------------------------------
 
 
@@ -234,20 +233,14 @@ def test_serve_public_api_surface():
         assert hasattr(serve, name), name
 
 
-def test_deprecated_module_paths_warn():
-    import repro.serve as serve
-    import repro.serve.cache as old_cache
-    import repro.serve.engine as old_engine
+def test_deep_module_paths_removed():
+    # the one-release PEP 562 deprecation shims are gone: the deep paths
+    # fail loudly instead of resolving silently to stale modules
+    import importlib
 
-    for mod, name, want in (
-        (old_cache, "advance_meta", serve.advance_meta),
-        (old_engine, "BatchingEngine", serve.BatchingEngine),
-    ):
-        with warnings.catch_warnings(record=True) as rec:
-            warnings.simplefilter("always")
-            got = getattr(mod, name)
-        assert got is want
-        assert any(issubclass(w.category, DeprecationWarning) for w in rec), name
+    for name in ("repro.serve.cache", "repro.serve.engine"):
+        with pytest.raises(ModuleNotFoundError):
+            importlib.import_module(name)
 
 
 # ---------------------------------------------------------------------------

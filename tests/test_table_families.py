@@ -1,0 +1,466 @@
+"""Family-polymorphic table pipeline: the TL1 activation-side family.
+
+Unit tests cover the ternary quantizer (idempotence), the base-3 pair
+packing round trip, the exact-mode oracle against a ternarized dense
+matmul, and the Pallas kernels (plain + grouped, both activation modes,
+non-multiple shapes) against the core oracle.
+
+Pipeline tests cover family-tagged plan JSON (with the weight-family
+default for pre-family payloads), the knapsack assigning DIFFERENT
+families to different layers under one global byte budget, and the
+satellite property: ``ModelPlan.total_lut_bytes`` equals the bytes of the
+actually-converted table leaves across mixed weight/TL1 plans including
+scan-stacked and expert trees.
+
+Slow tests are the acceptance bar: a tiny LM planned entirely into TL1
+(exact activation mode) produces greedy token streams identical to the
+same model with ternarized dense weights — through ``generate`` AND the
+``BatchingEngine`` — and the jitted decode step's program contains no
+``dot_general`` over weight-sized operands.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import core as jax_core
+
+from repro.configs.base import get_config
+from repro.core.convert import LUTGroup, LUTLinear, convert_params
+from repro.core.lut import LUTPlan
+from repro.core.lut_tl1 import (
+    TL1Plan,
+    apply_tl1,
+    build_tl1_tables,
+    pack_ternary,
+    quantize_acts,
+    unpack_indices,
+)
+from repro.core.planner import ModelPlan, plan_from_json, plan_model, plan_to_json
+from repro.core.quantize import (
+    FixedPointFormat,
+    ternary_fake_quant,
+    ternary_quantize,
+)
+from repro.kernels.lut_affine.autotune import TunePoint
+from repro.kernels.lut_tl1.ops import lut_tl1, lut_tl1_grouped
+from repro.models.layers import Ctx, ExecCfg
+from repro.models.model import model_specs
+from repro.models.params import init_params
+from repro.serve import (
+    BatchingEngine,
+    Request,
+    generate,
+    make_cache,
+    make_decode_step,
+)
+
+
+# ---------------------------------------------------------------------------
+# quantizer + packing
+# ---------------------------------------------------------------------------
+
+
+def test_ternary_quantize_idempotent():
+    w = jax.random.normal(jax.random.PRNGKey(0), (37, 19)) * 0.3
+    t, s = ternary_quantize(w)
+    assert t.dtype == jnp.int8 and set(np.unique(np.asarray(t))) <= {-1, 0, 1}
+    t2, s2 = ternary_quantize(s * t.astype(jnp.float32))
+    np.testing.assert_array_equal(np.asarray(t), np.asarray(t2))
+    # the refit scale reproduces itself to fp32 rounding (the multiply
+    # before the re-sum reassociates one ulp)
+    np.testing.assert_allclose(float(s), float(s2), rtol=1e-6)
+
+
+def test_pack_ternary_round_trip():
+    rng = np.random.default_rng(1)
+    for q, p in [(2, 3), (6, 5), (37, 19), (64, 8)]:
+        t = rng.integers(-1, 2, size=(q, p)).astype(np.int8)
+        packed = pack_ternary(jnp.asarray(t))
+        kb = -(-(-(-q // 2)) // 2)  # ceil(ceil(q/2)/2)
+        assert packed.shape == (kb, p) and packed.dtype == jnp.uint8
+        idx = np.asarray(unpack_indices(packed))  # (2*kb, p) base-3 pairs
+        tq = np.zeros((4 * kb, p), np.int8)
+        tq[:q] = t  # zero-padded tail chunks
+        want = (tq[0::2] + 1) * 3 + (tq[1::2] + 1)
+        np.testing.assert_array_equal(idx, want)
+
+
+def test_apply_tl1_exact_matches_ternary_dense():
+    key = jax.random.PRNGKey(2)
+    w = jax.random.normal(key, (37, 19)) * 0.1
+    x = jax.random.normal(jax.random.fold_in(key, 1), (5, 37))
+    b = jax.random.normal(jax.random.fold_in(key, 2), (19,)) * 0.01
+    tables, s = build_tl1_tables(w)
+    plan = TL1Plan(37, 19, act_bits=None)
+    got = apply_tl1(tables, x, plan, bias=b, scale=s)
+    want = x @ ternary_fake_quant(w) + b
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_apply_tl1_int8_close():
+    key = jax.random.PRNGKey(3)
+    w = jax.random.normal(key, (64, 24)) * 0.1
+    x = jax.random.normal(jax.random.fold_in(key, 1), (4, 64))
+    tables, s = build_tl1_tables(w)
+    got = np.asarray(apply_tl1(tables, x, TL1Plan(64, 24), scale=s))
+    want = np.asarray(x @ ternary_fake_quant(w))
+    rel = np.linalg.norm(got - want) / np.linalg.norm(want)
+    assert rel < 0.02  # int8 activation quantisation noise only
+
+
+# ---------------------------------------------------------------------------
+# kernels vs core oracle (interpret-mode Pallas, padding edges)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("act_bits", [None, 8])
+@pytest.mark.parametrize("shape", [(5, 38, 19), (8, 64, 128), (1, 2, 1)])
+def test_lut_tl1_kernel_matches_oracle(act_bits, shape):
+    B, q, p = shape
+    key = jax.random.PRNGKey(4)
+    w = jax.random.normal(key, (q, p)) * 0.1
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, q))
+    b = jax.random.normal(jax.random.fold_in(key, 2), (p,)) * 0.01
+    tables, s = build_tl1_tables(w)
+    plan = TL1Plan(q, p, act_bits=act_bits)
+    codes, act_scale = quantize_acts(x, plan)
+    got = lut_tl1(codes, tables, act_scale, s, bias=b, interpret=True)
+    want = apply_tl1(tables, x, plan, bias=b, scale=s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+@pytest.mark.parametrize("act_bits", [None, 8])
+def test_lut_tl1_grouped_kernel_matches_member_dispatches(act_bits):
+    G, B, q, p = 3, 4, 38, 19
+    key = jax.random.PRNGKey(5)
+    ws = jax.random.normal(key, (G, q, p)) * 0.1
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, q))
+    built = [build_tl1_tables(ws[g]) for g in range(G)]
+    tables = jnp.stack([t for t, _ in built])
+    scale = jnp.stack([s for _, s in built])
+    biases = jax.random.normal(jax.random.fold_in(key, 2), (G, p)) * 0.01
+    plan = TL1Plan(q, p, act_bits=act_bits)
+    codes, act_scale = quantize_acts(x, plan)
+    got = lut_tl1_grouped(
+        codes, tables, act_scale, scale, biases=biases, interpret=True
+    )
+    for g in range(G):
+        want = lut_tl1(
+            codes, tables[g], act_scale, scale[g], bias=biases[g], interpret=True
+        )
+        np.testing.assert_allclose(
+            np.asarray(got[g]), np.asarray(want), atol=1e-5
+        )
+
+
+def test_lut_tl1_leading_batch_dims():
+    key = jax.random.PRNGKey(6)
+    w = jax.random.normal(key, (30, 12)) * 0.1
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 3, 30))
+    tables, s = build_tl1_tables(w)
+    plan = TL1Plan(30, 12, act_bits=None)
+    codes, act_scale = quantize_acts(x, plan)
+    got = lut_tl1(codes, tables, act_scale, s, interpret=True)
+    assert got.shape == (2, 3, 12)
+    want = apply_tl1(tables, x, plan, scale=s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# plan accounting, JSON round trips, family tagging
+# ---------------------------------------------------------------------------
+
+
+def test_tl1_plan_accounting():
+    plan = TL1Plan(37, 19)
+    assert plan.table_family == "tl1"
+    assert plan.num_chunks == 19 and plan.packed_chunks == 10
+    assert plan.total_lut_bytes == 10 * 19  # persistent packed bytes only
+    assert plan.num_entries == 9 and plan.storage_bits == 8
+    # per-step work: one 9-entry add-only LUT build per chunk + the gathers
+    assert plan.shift_add_ops == 19 * (plan.num_chunks - 1) + 9 * plan.num_chunks
+
+
+def test_plan_json_round_trip_both_families():
+    fmt = FixedPointFormat(8, 6, signed=True)
+    plans = [
+        TL1Plan(64, 48),
+        TL1Plan(64, 48, act_bits=None, blocks=(8, 128, 4)),
+        LUTPlan(64, 48, 2, fmt, mode="bitplane"),
+    ]
+    for plan in plans:
+        assert plan_from_json(plan_to_json(plan)) == plan
+    # payloads serialized before the family axis existed stay loadable
+    legacy = plan_to_json(plans[2])
+    assert "family" not in legacy
+    assert plan_from_json(legacy).table_family == "weight"
+    with pytest.raises(ValueError):
+        plan_from_json({"family": "nonsense", "in_features": 4, "out_features": 4})
+
+
+def test_model_plan_families_property_and_json():
+    fmt = FixedPointFormat(8, 6, signed=True)
+    mp = ModelPlan(
+        {"a": TL1Plan(8, 4), "b": LUTPlan(8, 4, 2, fmt, mode="bitplane")}
+    )
+    assert mp.families == ("weight", "tl1")
+    again = ModelPlan.from_json(mp.to_json())
+    assert again.layers == dict(mp.layers)
+    assert "weight" in mp.summary() or "tl1" in mp.summary()
+
+
+def test_tunepoint_json_family_default():
+    pt = TunePoint.from_plan(TL1Plan(64, 48), batch=4)
+    assert pt.family == "tl1" and pt.entries == 9 and pt.k == 16
+    assert TunePoint.from_json(pt.to_json()) == pt
+    legacy = {k: v for k, v in pt.to_json().items() if k != "family"}
+    assert TunePoint.from_json(legacy).family == "weight"
+
+
+# ---------------------------------------------------------------------------
+# planner: family mixing under one byte budget (the tentpole's search axis)
+# ---------------------------------------------------------------------------
+
+
+def _three_layer_params():
+    return {
+        "a": {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 48))},
+        "b": {"w": jax.random.normal(jax.random.PRNGKey(1), (64, 48))},
+        "c": {"w": jax.random.normal(jax.random.PRNGKey(2), (32, 24))},
+    }
+
+
+def test_plan_model_mixes_families_under_budget():
+    """The knapsack assigns DIFFERENT table families to different layers
+    under one global budget: TL1 is the min-bytes floor, fixed-point
+    full-mode weight tables the fewer-ops / more-bytes upgrades, and an
+    intermediate budget buys the upgrade only where it pays best."""
+    params = _three_layer_params()
+    fmt = FixedPointFormat(4, 3, signed=True)
+    kw = dict(
+        fmt=fmt, max_chunk=2, modes=("bitplane", "full"),
+        families=("weight", "tl1"),
+    )
+    floor = plan_model(params, float("inf"), fmt=fmt, families=("tl1",))
+    assert floor.families == ("tl1",)
+    unbounded = plan_model(params, float("inf"), **kw)
+    assert unbounded.families == ("weight",)  # full-mode wins on ops alone
+    assert unbounded.total_lut_bytes > floor.total_lut_bytes
+
+    mid = (floor.total_lut_bytes + unbounded.total_lut_bytes) // 3
+    mp = plan_model(params, mid, **kw)
+    assert mp.total_lut_bytes <= mid
+    fams = {k: p.table_family for k, p in mp.layers.items()}
+    assert set(fams.values()) == {"weight", "tl1"}, fams
+    assert mp.families == ("weight", "tl1")
+    # deterministic: same inputs, same plan
+    assert plan_model(params, mid, **kw) == mp
+
+
+def test_plan_model_rejects_unknown_family():
+    with pytest.raises(ValueError, match="famil"):
+        plan_model(_three_layer_params(), float("inf"), families=("lut3",))
+    with pytest.raises(ValueError, match="famil"):
+        plan_model(_three_layer_params(), float("inf"), families=())
+
+
+# ---------------------------------------------------------------------------
+# satellite: plan bytes == converted leaf bytes, mixed families, all layouts
+# ---------------------------------------------------------------------------
+
+
+def _table_leaf_bytes(tree) -> int:
+    total = 0
+    for node in jax.tree.leaves(
+        tree, is_leaf=lambda n: isinstance(n, (LUTLinear, LUTGroup))
+    ):
+        if isinstance(node, (LUTLinear, LUTGroup)):
+            total += node.tables.size * node.tables.dtype.itemsize
+    return total
+
+
+@pytest.mark.parametrize("families", [("tl1",), ("weight", "tl1")])
+def test_plan_bytes_match_converted_leaves_mixed_trees(families):
+    """``ModelPlan.total_lut_bytes`` equals the bytes of the table leaves
+    conversion actually materialises — across mixed weight/TL1 plans, plain
+    linears, scan stacks, grouped siblings, and stacked expert trees.
+    (fp16 weight tables are the accounting width, TL1 leaves are uint8.)"""
+    ks = jax.random.split(jax.random.PRNGKey(7), 8)
+    E, d, f = 3, 32, 24
+    params = {
+        "fc": {"w": jax.random.normal(ks[0], (64, 48))},
+        "scan": {"w": jax.random.normal(ks[1], (4, 64, 48))},
+        "wk": {"w": jax.random.normal(ks[2], (64, 32))},
+        "wv": {"w": jax.random.normal(ks[3], (64, 32))},
+        "moe": {
+            "router": jax.random.normal(ks[4], (d, E)),
+            "w_gate": jax.random.normal(ks[5], (E, d, f)),
+            "w_up": jax.random.normal(ks[6], (E, d, f)),
+            "w_down": jax.random.normal(ks[7], (E, f, d)),
+        },
+    }
+    fmt = FixedPointFormat(4, 3, signed=True)
+    kw = dict(
+        fmt=fmt, max_chunk=2, modes=("bitplane", "full"), families=families,
+        convert_experts=True,
+    )
+    floor = plan_model(params, float("inf"), fmt=fmt, families=("tl1",),
+                       convert_experts=True)
+    if len(families) == 1:
+        mp = floor
+    else:
+        unbounded = plan_model(params, float("inf"), **kw)
+        mp = plan_model(
+            params,
+            (floor.total_lut_bytes + unbounded.total_lut_bytes) // 3,
+            **kw,
+        )
+        assert len(mp.families) == 2  # the mixed case really mixes
+    assert set(mp.copies.values()) >= {4, E} or families == ("tl1",)
+    conv, report = convert_params(
+        params, plan=mp, table_dtype=jnp.float16, convert_experts=True
+    )
+    leaf_bytes = _table_leaf_bytes(conv)
+    assert leaf_bytes == mp.total_lut_bytes
+    assert report.table_bytes == mp.total_lut_bytes
+
+
+# ---------------------------------------------------------------------------
+# acceptance: TL1-planned LM serves greedy streams identical to ternary dense
+# ---------------------------------------------------------------------------
+
+_PROMPTS = ((1, 2, 3, 4), (5, 6, 7), (9, 10, 11, 12, 13))
+
+
+def _tl1_lm(seed=0):
+    cfg = get_config("granite_8b", reduced=True)
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(seed))
+    # exact activation mode: the TL1 path computes x @ (s*t) bit-for-bit up
+    # to fp32 reassociation, so greedy streams must match the same model
+    # with its planned weights ternarized in place
+    mplan = plan_model(
+        params, float("inf"), families=("tl1",), tl1_act_bits=None
+    )
+    assert mplan.families == ("tl1",) and mplan.groups
+    tl1_params, report = convert_params(params, plan=mplan)
+    assert report.grouped > 0
+    tern = jax.tree.map(lambda a: a, params)  # fresh containers
+    for key in mplan.layers:
+        node = tern
+        for part in key.split("/"):
+            node = node[part]
+        quant = ternary_fake_quant
+        for _ in range(node["w"].ndim - 2):  # scan stacks: per-set scales
+            quant = jax.vmap(quant)
+        node["w"] = quant(node["w"])
+    return cfg, params, tern, tl1_params, mplan
+
+
+def _run_engine(params, ctx, max_new=4):
+    eng = BatchingEngine(params, ctx, num_slots=2, max_len=32)
+    reqs = [
+        Request(uid=i, prompt=jnp.asarray(p, jnp.int32), max_new=max_new)
+        for i, p in enumerate(_PROMPTS)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return {r.uid: r.generated for r in reqs}
+
+
+@pytest.mark.slow
+def test_generate_tl1_equals_ternary_dense_greedy():
+    cfg, _, tern, tl1_params, _ = _tl1_lm()
+    ctx = Ctx(cfg, ex=ExecCfg(remat="none"))
+    tctx = Ctx(cfg, ex=ExecCfg(remat="none", lut_grouped=True))
+    tokens = jnp.asarray([[1, 2, 3, 4, 5, 6]], jnp.int32)
+    want = generate(tern, ctx, tokens, max_new=4, max_len=32)
+    got = generate(tl1_params, tctx, tokens, max_new=4, max_len=32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.slow
+def test_engine_tl1_equals_ternary_dense_greedy():
+    cfg, _, tern, tl1_params, _ = _tl1_lm(seed=1)
+    dense = _run_engine(tern, Ctx(cfg, ex=ExecCfg(remat="none")))
+    tl1 = _run_engine(
+        tl1_params, Ctx(cfg, ex=ExecCfg(remat="none", lut_grouped=True))
+    )
+    assert dense == tl1
+
+
+def _iter_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            sub = v if isinstance(v, (list, tuple)) else (v,)
+            for s in sub:
+                if isinstance(s, jax_core.ClosedJaxpr):
+                    yield from _iter_eqns(s.jaxpr)
+                elif isinstance(s, jax_core.Jaxpr):
+                    yield from _iter_eqns(s)
+
+
+@pytest.mark.slow
+def test_tl1_decode_step_jaxpr_is_multiplier_free():
+    """The decode step over a TL1-converted tree lowers to a program whose
+    only dot_generals are smaller than the smallest PLANNED weight — every
+    planned projection executes as the pack/unpack + 9-entry gather path.
+    (The tied LM head reads the raw embedding table and is outside the
+    conversion scope, so vocab-dim operands are exempt.)"""
+    cfg, _, _, tl1_params, mplan = _tl1_lm()
+    ctx = Ctx(cfg, ex=ExecCfg(remat="none", lut_grouped=True))
+    decode = make_decode_step(ctx)
+    cache = make_cache(cfg, 1, 16, ctx)
+    jaxpr = jax.make_jaxpr(decode)(tl1_params, cache, jnp.zeros((1, 1), jnp.int32))
+
+    min_w = min(p.in_features * p.out_features for p in mplan.layers.values())
+    vocab_pad = -(-cfg.vocab_size // cfg.vocab_pad_multiple) * cfg.vocab_pad_multiple
+    offenders = []
+    for eqn in _iter_eqns(jaxpr.jaxpr):
+        if eqn.primitive.name != "dot_general":
+            continue
+        shapes = [tuple(v.aval.shape) for v in eqn.invars]
+        if any(vocab_pad in s or cfg.vocab_size in s for s in shapes):
+            continue  # tied embedding head: not a planned linear
+        big = max(int(np.prod(s)) for s in shapes)
+        if big >= min_w:
+            offenders.append(("dot_general", shapes))
+    assert not offenders, (
+        f"decode_step still multiplies over weight-sized operands: "
+        f"{offenders} (threshold {min_w} elems)"
+    )
+
+
+# ---------------------------------------------------------------------------
+# layers-level: fused group dispatch == per-member (both exec paths)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_tl1_group_fused_equals_unfused(use_pallas):
+    cfg = get_config("granite_8b", reduced=True)
+    key = jax.random.PRNGKey(8)
+    q, p = 64, 32
+    params = {
+        "wk": {"w": jax.random.normal(key, (q, p)) * 0.1},
+        "wv": {"w": jax.random.normal(jax.random.fold_in(key, 1), (q, p)) * 0.1},
+    }
+    mplan = ModelPlan(
+        {"wk": TL1Plan(q, p), "wv": TL1Plan(q, p)}, groups=(("wk", "wv"),)
+    )
+    conv, _ = convert_params(params, plan=mplan)
+    assert isinstance(conv["wk+wv"], LUTGroup)
+    from repro.models.layers import fused_linears
+
+    x = jax.random.normal(jax.random.fold_in(key, 2), (3, q))
+    fused = fused_linears(
+        conv, ["wk", "wv"], x,
+        Ctx(cfg, ex=ExecCfg(lut_grouped=True, use_pallas=use_pallas)),
+    )
+    unfused = fused_linears(
+        conv, ["wk", "wv"], x,
+        Ctx(cfg, ex=ExecCfg(lut_grouped=False, use_pallas=use_pallas)),
+    )
+    for a, b in zip(fused, unfused):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
