@@ -19,7 +19,7 @@ from repro.core.analysis import LINEAR_CLASSIFIER, MLP, figure_curve
 from repro.core.convert import convert_params, conversion_summary
 from repro.core.quantize import FixedPointFormat, Float16Format
 from repro.data.synthetic import image_batch
-from repro.models.layers import Ctx, ExecCfg
+from repro.models.layers import Ctx
 from repro.models.paper_models import PAPER_MODELS
 from repro.models.params import init_params
 

@@ -2,7 +2,7 @@
 with checkpointing, restart, and metrics — the framework's full train path.
 
   PYTHONPATH=src python examples/train_100m.py --preset tiny --steps 50   # CPU-quick
-  PYTHONPATH=src python examples/train_100m.py --preset 100m --steps 300  # the real driver
+  PYTHONPATH=src python examples/train_100m.py --preset 100m --steps 300
 
 The 100m preset is the deliverable configuration (~110M params, granite-
 style dense decoder); the tiny preset (~6M) exists so the driver can be
@@ -13,7 +13,6 @@ A mid-run restart (--demo-restart) kills and resumes from the checkpoint to
 demonstrate fault tolerance.
 """
 import argparse
-import dataclasses
 import os
 import shutil
 
@@ -88,8 +87,9 @@ def main():
     first = sum(r["loss"] for r in log[:3]) / max(len(log[:3]), 1)
     last = sum(r["loss"] for r in log[-3:]) / max(len(log[-3:]), 1)
     times = sorted(r["time_s"] for r in log)
-    print(f"loss {first:.3f} -> {last:.3f}; "
-          f"step p50={times[len(times)//2]:.2f}s p99={times[int(len(times)*0.99)-1]:.2f}s")
+    p50 = times[len(times) // 2]
+    p99 = times[int(len(times) * 0.99) - 1]
+    print(f"loss {first:.3f} -> {last:.3f}; step p50={p50:.2f}s p99={p99:.2f}s")
     print(f"checkpoints + metrics.jsonl in {args.out}")
 
 

@@ -1,0 +1,69 @@
+"""Static-analysis audit of the repo's structural contracts.
+
+The paper's claim — inference "without the use of any multipliers" — is a
+property of the *program*, not of any particular run.  This package
+proves it (and the layout, donation, and plan-consistency contracts that
+keep it cheap) by tracing the jitted serving steps for a committed matrix
+of model configs x table families and checking rules on the closed jaxpr
+and compiled HLO, with nothing executed:
+
+* :func:`iter_eqns` / :func:`op_census` — the one recursive jaxpr walker
+  (scan/while/cond/pjit/custom-vjp/remat; ``pallas_call`` stays opaque)
+* :func:`multiplier_free_violations`, :func:`zero_copy_violations`,
+  :func:`plan_consistency_violations`, :func:`donation_violations` — the
+  rule classes (empty list == invariant holds)
+* :data:`AUDIT_POINTS` / :func:`audit_point` — the audited matrix
+* :func:`build_manifest` & friends — the JSON manifest behind
+  ``python -m repro.audit --check`` (the CI gate) and ``--write``
+
+See "Audited invariants" in ``src/repro/core/README.md`` for the rule
+table.
+"""
+from repro.audit.compiled import (
+    aliased_param_indices,
+    compiled_report,
+    donation_violations,
+)
+from repro.audit.manifest import (
+    ManifestError,
+    build_manifest,
+    diff_manifests,
+    load_manifest,
+    manifest_violations,
+    write_manifest,
+)
+from repro.audit.points import AUDIT_POINTS, AuditPoint, audit_point, build_point
+from repro.audit.rules import (
+    Violation,
+    multiplier_free_violations,
+    plan_consistency_violations,
+    planned_weight_shapes,
+    table_leaf_shapes,
+    zero_copy_violations,
+)
+from repro.audit.walker import OPAQUE_PRIMITIVES, iter_eqns, op_census
+
+__all__ = [
+    "AUDIT_POINTS",
+    "AuditPoint",
+    "ManifestError",
+    "OPAQUE_PRIMITIVES",
+    "Violation",
+    "aliased_param_indices",
+    "audit_point",
+    "build_manifest",
+    "build_point",
+    "compiled_report",
+    "diff_manifests",
+    "donation_violations",
+    "iter_eqns",
+    "load_manifest",
+    "manifest_violations",
+    "multiplier_free_violations",
+    "op_census",
+    "plan_consistency_violations",
+    "planned_weight_shapes",
+    "table_leaf_shapes",
+    "write_manifest",
+    "zero_copy_violations",
+]

@@ -1,0 +1,119 @@
+"""CLI: audit the committed config matrix, gate on the baseline.
+
+Modes (mutually exclusive):
+
+* default      — build the manifest, print a summary (and ``--out`` it)
+* ``--check``  — rebuild fresh, fail on any rule violation, op-census
+                 drift vs ``--baseline``, or missing point (the CI gate)
+* ``--write``  — regenerate ``--baseline`` after a reviewed graph change;
+                 refuses to snapshot a manifest with violations
+
+``--no-compile`` skips the AOT donation/collective pass for a fast
+jaxpr-only run (not valid for ``--check``/``--write``: the committed
+baseline always carries the compiled report).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Sequence
+
+from repro.audit.manifest import (
+    ManifestError,
+    build_manifest,
+    diff_manifests,
+    load_manifest,
+    manifest_violations,
+    write_manifest,
+)
+
+_DEFAULT_BASELINE = "benchmarks/baselines/audit.json"
+
+
+def _summarise(manifest: dict) -> str:
+    lines = []
+    for name, entry in sorted(manifest["points"].items()):
+        n_viol = sum(len(v) for v in entry["rules"].values())
+        plan = entry["plan"]
+        census = entry["census"]["decode"]
+        lines.append(
+            f"  {name}: {plan['layers']} layers "
+            f"({'+'.join(plan['families'])}), "
+            f"{plan['total_lut_bytes'] / 2**20:.1f} MiB tables, "
+            f"{sum(census.values())} decode eqns, "
+            f"{n_viol} violations"
+        )
+    return "\n".join(lines)
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.audit", description=__doc__.splitlines()[0]
+    )
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument(
+        "--check", action="store_true", help="gate against the baseline"
+    )
+    mode.add_argument(
+        "--write", action="store_true", help="regenerate the baseline"
+    )
+    ap.add_argument("--baseline", default=_DEFAULT_BASELINE)
+    ap.add_argument("--out", help="also write the fresh manifest here")
+    ap.add_argument(
+        "--no-compile",
+        action="store_true",
+        help="skip the AOT donation/collective pass (default mode only)",
+    )
+    args = ap.parse_args(argv)
+    if args.no_compile and (args.check or args.write):
+        ap.error("--no-compile is not valid with --check/--write")
+
+    baseline = None
+    if args.check:
+        # load before the (slow) fresh build so a missing or malformed
+        # baseline fails loudly and immediately, bench_compare-style
+        try:
+            baseline = load_manifest(args.baseline)
+        except ManifestError as e:
+            print(f"audit: {e}", file=sys.stderr)
+            return 2
+
+    fresh = build_manifest(compile_hlo=not args.no_compile)
+    violations = manifest_violations(fresh)
+    if args.out:
+        write_manifest(args.out, fresh)
+
+    if args.check:
+        errs = violations + diff_manifests(fresh, baseline)
+        for e in errs:
+            print(f"audit: {e}", file=sys.stderr)
+        if errs:
+            return 1
+        n = len(fresh["points"])
+        print(f"audit OK: {n} points, all invariants hold, census matches")
+        print(_summarise(fresh))
+        return 0
+
+    if args.write:
+        if violations:
+            for e in violations:
+                print(f"audit: {e}", file=sys.stderr)
+            print(
+                "audit: refusing to write a baseline with violations",
+                file=sys.stderr,
+            )
+            return 1
+        write_manifest(args.baseline, fresh)
+        print(f"wrote {args.baseline}: {len(fresh['points'])} points")
+        print(_summarise(fresh))
+        return 0
+
+    for e in violations:
+        print(f"audit: {e}", file=sys.stderr)
+    print(f"audited {len(fresh['points'])} points:")
+    print(_summarise(fresh))
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,77 @@
+"""Compiled-artifact checks: cache donation + collective traffic.
+
+The jaxpr rules see the program *before* XLA; donation is a property of
+the compiled executable.  ``serve.generate`` and the ``BatchingEngine``
+jit their steps with the cache argument donated so decode updates the KV
+rectangle in place — if a refactor drops the aliasing (a stray
+``device_put``, a cache leaf returned through a reshaping copy), every
+step silently pays a full cache copy.  This module parses the
+``input_output_alias`` attribute off ``compiled.as_text()`` and verifies
+the cache's flat parameter slots all alias an output buffer.
+
+Collective traffic reuses :func:`repro.launch.hlo_analysis.collective_stats`
+(the partitioned-module ring model) so the audit manifest records, per
+audited graph, what the program moves over links — zero on the
+single-device CI points, and a drift signal once sharded points land.
+"""
+from __future__ import annotations
+
+import re
+
+from repro.audit.rules import Violation
+from repro.launch.hlo_analysis import collective_stats
+
+_ALIAS_ATTR = "input_output_alias={"
+_ALIAS_PARAM_RE = re.compile(r":\s*\((\d+)")
+
+
+def aliased_param_indices(hlo_text: str) -> frozenset[int]:
+    """Flat parameter indices the executable aliases to output buffers.
+
+    The HloModule header carries ``input_output_alias={ {out}: (param,
+    {index}, may-alias), ... }`` with nested braces, so this brace-matches
+    the attribute block before pulling the parameter numbers out.
+    """
+    start = hlo_text.find(_ALIAS_ATTR)
+    if start < 0:
+        return frozenset()
+    i = start + len(_ALIAS_ATTR)
+    depth = 1
+    j = i
+    while depth and j < len(hlo_text):
+        if hlo_text[j] == "{":
+            depth += 1
+        elif hlo_text[j] == "}":
+            depth -= 1
+        j += 1
+    block = hlo_text[i : j - 1]
+    return frozenset(int(m) for m in _ALIAS_PARAM_RE.findall(block))
+
+
+def donation_violations(
+    hlo_text: str, cache_param_indices: range
+) -> list[Violation]:
+    """Every cache leaf's flat parameter slot must be aliased (donated)."""
+    aliased = aliased_param_indices(hlo_text)
+    missing = sorted(set(cache_param_indices) - aliased)
+    if not missing:
+        return []
+    return [
+        Violation(
+            "donation",
+            "undonated_cache_leaf",
+            f"cache params {missing} not in input_output_alias "
+            f"(aliased: {sorted(aliased)})",
+        )
+    ]
+
+
+def compiled_report(hlo_text: str, cache_param_indices: range) -> dict:
+    """Donation verdict + collective traffic for one compiled graph."""
+    return {
+        "donation": [
+            v.to_json() for v in donation_violations(hlo_text, cache_param_indices)
+        ],
+        "aliased_params": sorted(aliased_param_indices(hlo_text)),
+        "collectives": collective_stats(hlo_text).to_dict(),
+    }

@@ -1,0 +1,102 @@
+"""Audit manifest: build, persist, and diff the per-point verdicts.
+
+The manifest is the JSON artifact ``python -m repro.audit`` emits and CI
+commits at ``benchmarks/baselines/audit.json``: one entry per audit
+point with its rule verdicts, plan summary, op census, and compiled
+donation/collective report.  ``--check`` rebuilds it fresh and fails on
+
+* any rule violation in the fresh manifest (the invariants themselves);
+* op-census drift against the baseline (a silent graph change — new
+  primitives in a decode step, a vanished kernel dispatch);
+* a baseline point missing from the fresh run (a deleted gate).
+
+Census drift is a *review* signal, not always a bug: a legitimate graph
+change regenerates the baseline with ``--write`` (which refuses to
+snapshot a manifest that violates the invariants).
+"""
+from __future__ import annotations
+
+import json
+
+MANIFEST_VERSION = 1
+
+
+class ManifestError(Exception):
+    """A malformed or unusable manifest file."""
+
+
+def build_manifest(points=None, compile_hlo: bool = True) -> dict:
+    from repro.audit.points import AUDIT_POINTS, audit_point
+
+    points = AUDIT_POINTS if points is None else points
+    return {
+        "version": MANIFEST_VERSION,
+        "points": {pt.name: audit_point(pt, compile_hlo) for pt in points},
+    }
+
+
+def manifest_violations(manifest: dict) -> list[str]:
+    """Flatten every rule violation in a manifest to human-readable lines."""
+    out = []
+    for name, entry in sorted(manifest.get("points", {}).items()):
+        for rule, violations in sorted(entry.get("rules", {}).items()):
+            for v in violations:
+                out.append(
+                    f"{name}: {rule} violated by {v['primitive']}: {v['detail']}"
+                )
+    return out
+
+
+def diff_manifests(fresh: dict, baseline: dict) -> list[str]:
+    """Census/coverage drift of ``fresh`` against the committed baseline."""
+    out = []
+    base_points = baseline.get("points", {})
+    fresh_points = fresh.get("points", {})
+    for name in sorted(set(base_points) - set(fresh_points)):
+        out.append(f"{name}: baseline point missing from fresh audit")
+    for name in sorted(set(fresh_points) - set(base_points)):
+        out.append(f"{name}: new audit point not in baseline (run --write)")
+    for name in sorted(set(base_points) & set(fresh_points)):
+        base_census = base_points[name].get("census", {})
+        fresh_census = fresh_points[name].get("census", {})
+        for graph in sorted(set(base_census) | set(fresh_census)):
+            b = base_census.get(graph, {})
+            f = fresh_census.get(graph, {})
+            for prim in sorted(set(b) | set(f)):
+                if b.get(prim, 0) != f.get(prim, 0):
+                    out.append(
+                        f"{name}/{graph}: op census drift: {prim} "
+                        f"{b.get(prim, 0)} -> {f.get(prim, 0)}"
+                    )
+    return out
+
+
+def load_manifest(path: str) -> dict:
+    """Load a manifest, raising :class:`ManifestError` on anything off."""
+    try:
+        with open(path) as f:
+            manifest = json.load(f)
+    except FileNotFoundError:
+        raise ManifestError(
+            f"manifest {path!r} not found — generate it with "
+            f"`python -m repro.audit --write`"
+        ) from None
+    except json.JSONDecodeError as e:
+        raise ManifestError(f"manifest {path!r} is not valid JSON: {e}") from None
+    if not isinstance(manifest, dict) or "points" not in manifest:
+        raise ManifestError(
+            f"manifest {path!r} is malformed: expected an object with a "
+            f"'points' key"
+        )
+    if manifest.get("version") != MANIFEST_VERSION:
+        raise ManifestError(
+            f"manifest {path!r} has version {manifest.get('version')!r}, "
+            f"this tool expects {MANIFEST_VERSION}"
+        )
+    return manifest
+
+
+def write_manifest(path: str, manifest: dict) -> None:
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")

@@ -1,0 +1,202 @@
+"""The audited matrix: model config x table family x exec config points.
+
+Every point is audited *fully abstractly* — ``abstract_params`` shapes
+feed ``plan_model``, ``jax.eval_shape`` runs the converter over them, and
+the serving steps are traced (and AOT-compiled for the donation pass)
+over ``ShapeDtypeStruct`` trees.  No weights are initialised, no tables
+are built, nothing executes; a point costs a trace plus one small CPU
+compile, so the full matrix runs on every CI commit.
+
+The committed points cover the three structural regimes the rules must
+hold over: the attention weight-table path (pre-stacked ``LUTGroup``
+decode), the TL1 activation-side family (packed ternary tables, per-step
+activation LUTs), and the MoE expert path (ragged expert stacks, the
+``ragged_dot`` temptation).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.audit.compiled import compiled_report
+from repro.audit.rules import (
+    multiplier_free_violations,
+    plan_consistency_violations,
+    planned_weight_shapes,
+    table_leaf_shapes,
+    zero_copy_violations,
+)
+from repro.audit.walker import op_census
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditPoint:
+    """One (model config, table family, exec config) cell of the matrix."""
+
+    name: str
+    arch: str
+    families: tuple = ("weight",)
+    convert_experts: bool = False
+    tl1_act_bits: int | None = 8
+    batch: int = 1
+    cache_len: int = 16
+    prefill_len: int = 4
+
+
+AUDIT_POINTS = (
+    # attention weight-table path: grouped fp16 tables, prestacked KV pair
+    AuditPoint("granite_weight", "granite_8b", families=("weight",)),
+    # TL1 activation-side family: packed ternary tables, exact act mode
+    AuditPoint("granite_tl1", "granite_8b", families=("tl1",), tl1_act_bits=None),
+    # MoE expert path: converted expert stacks through the ragged LUT route
+    AuditPoint(
+        "moe_weight_experts",
+        "qwen2_moe_a2_7b",
+        families=("weight",),
+        convert_experts=True,
+    ),
+)
+
+
+def build_point(pt: AuditPoint) -> dict:
+    """Abstract artifacts for one point: plan, converted template, steps."""
+    from repro.configs.base import get_config
+    from repro.core.convert import convert_params
+    from repro.core.planner import plan_model
+    from repro.kernels.lut_affine.autotune import attach_tuned_blocks
+    from repro.models.layers import Ctx, ExecCfg
+    from repro.models.model import model_specs
+    from repro.models.params import abstract_params
+    from repro.serve import abstract_cache, make_decode_step, make_prefill_step
+
+    cfg = get_config(pt.arch, reduced=True)
+    aparams = abstract_params(model_specs(cfg))
+    mplan = plan_model(
+        aparams,
+        float("inf"),
+        max_chunk=1,
+        families=pt.families,
+        convert_experts=pt.convert_experts,
+        tl1_act_bits=pt.tl1_act_bits,
+    )
+    # tuned blocks ride the plan so the VMEM-legality rule audits them too
+    mplan = attach_tuned_blocks(mplan, pt.batch)
+    template = jax.eval_shape(
+        lambda p: convert_params(
+            p,
+            plan=mplan,
+            table_dtype=jnp.float16,
+            convert_experts=pt.convert_experts,
+        )[0],
+        aparams,
+    )
+    ctx = Ctx(cfg, ex=ExecCfg(remat="none", lut_grouped=True))
+    cache = abstract_cache(cfg, pt.batch, pt.cache_len, ctx)
+    return {
+        "cfg": cfg,
+        "mplan": mplan,
+        "template": template,
+        "ctx": ctx,
+        "cache": cache,
+        "decode": make_decode_step(ctx),
+        "prefill": make_prefill_step(ctx),
+        "decode_tokens": jax.ShapeDtypeStruct((pt.batch, 1), jnp.int32),
+        "prefill_tokens": jax.ShapeDtypeStruct(
+            (pt.batch, pt.prefill_len), jnp.int32
+        ),
+    }
+
+
+def _vocab_dims(cfg) -> tuple[int, int]:
+    pad = -(-cfg.vocab_size // cfg.vocab_pad_multiple) * cfg.vocab_pad_multiple
+    return (cfg.vocab_size, pad)
+
+
+def audit_point(pt: AuditPoint, compile_hlo: bool = True) -> dict:
+    """Run every rule class over one point; return its manifest entry.
+
+    ``compile_hlo=False`` skips the AOT donation/collective pass (the only
+    part that invokes XLA) for fast jaxpr-only audits.
+    """
+    art = build_point(pt)
+    mplan, template, cache = art["mplan"], art["template"], art["cache"]
+    decode_jaxpr = jax.make_jaxpr(art["decode"])(
+        template, cache, art["decode_tokens"]
+    )
+    prefill_jaxpr = jax.make_jaxpr(art["prefill"])(
+        template, {"tokens": art["prefill_tokens"]}, cache
+    )
+
+    weight_shapes = planned_weight_shapes(mplan)
+    table_shapes = table_leaf_shapes(template)
+    exempt = _vocab_dims(art["cfg"])
+    rules = {
+        "multiplier_free": [
+            v.to_json()
+            for graph in (decode_jaxpr, prefill_jaxpr)
+            for v in multiplier_free_violations(
+                graph,
+                weight_shapes=weight_shapes,
+                table_shapes=table_shapes,
+                exempt_dims=exempt,
+            )
+        ],
+        # the zero-copy contract is about the per-token step; prefill may
+        # legitimately lay out its prompt-length activations
+        "zero_copy": [
+            v.to_json()
+            for v in zero_copy_violations(decode_jaxpr, table_shapes=table_shapes)
+        ],
+        "plan_consistency": [
+            v.to_json()
+            for v in plan_consistency_violations(mplan, template, batch=pt.batch)
+        ],
+    }
+    entry = {
+        "plan": {
+            "layers": len(mplan.layers),
+            "groups": len(mplan.groups),
+            "families": list(mplan.families),
+            "total_lut_bytes": mplan.total_lut_bytes,
+        },
+        "rules": rules,
+        "census": {
+            "decode": op_census(decode_jaxpr),
+            "prefill": op_census(prefill_jaxpr),
+        },
+    }
+    if compile_hlo:
+        n_params = len(jax.tree_util.tree_leaves(template))
+        n_cache = len(jax.tree_util.tree_leaves(cache))
+        # same donation signature serve.generate jits its steps with
+        decode_hlo = (
+            jax.jit(art["decode"], donate_argnums=(1,))
+            .lower(template, cache, art["decode_tokens"])
+            .compile()
+            .as_text()
+        )
+        prefill_hlo = (
+            jax.jit(art["prefill"], donate_argnums=(2,))
+            .lower(template, {"tokens": art["prefill_tokens"]}, cache)
+            .compile()
+            .as_text()
+        )
+        compiled = {
+            # flat param order: params ++ (prefill: tokens) ++ cache leaves
+            "decode": compiled_report(
+                decode_hlo, range(n_params, n_params + n_cache)
+            ),
+            "prefill": compiled_report(
+                prefill_hlo, range(n_params + 1, n_params + 1 + n_cache)
+            ),
+        }
+        entry["rules"]["donation"] = [
+            v for g in compiled.values() for v in g["donation"]
+        ]
+        entry["compiled"] = {
+            g: {k: v for k, v in rep.items() if k != "donation"}
+            for g, rep in compiled.items()
+        }
+    return entry

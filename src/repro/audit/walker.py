@@ -1,0 +1,55 @@
+"""Shared recursive jaxpr walker.
+
+One walker for every structural audit in the repo (the rule classes in
+``audit.rules`` and the jaxpr-level acceptance tests).  It descends into
+every sub-jaxpr an equation carries in its params — ``scan`` / ``while`` /
+``cond`` branches, ``pjit``, ``custom_jvp``/``custom_vjp`` callables,
+``remat`` (``checkpoint``) bodies — because all of them store their bodies
+as ``Jaxpr`` / ``ClosedJaxpr`` values (possibly inside lists or tuples).
+
+``pallas_call`` is the one exception: its body is a hand-written kernel
+whose inner program is *supposed* to gather, multiply indices, and copy
+tiles — auditing it with graph-level rules would be meaningless.  The
+walker surfaces the ``pallas_call`` equation itself as an opaque audited
+leaf and does not descend, so a census counts kernel dispatches, not
+kernel internals.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Iterator
+
+from jax import core as jax_core
+
+# Primitives surfaced as opaque leaves: yielded, never descended into.
+OPAQUE_PRIMITIVES = frozenset({"pallas_call"})
+
+
+def iter_eqns(jaxpr) -> Iterator:
+    """Yield every equation in ``jaxpr`` and (recursively) its sub-jaxprs.
+
+    Accepts a ``Jaxpr`` or a ``ClosedJaxpr`` (``jax.make_jaxpr`` returns
+    the latter).  Equations whose primitive is in :data:`OPAQUE_PRIMITIVES`
+    are yielded but not descended into.
+    """
+    if isinstance(jaxpr, jax_core.ClosedJaxpr):
+        jaxpr = jaxpr.jaxpr
+    for eqn in jaxpr.eqns:
+        yield eqn
+        if eqn.primitive.name in OPAQUE_PRIMITIVES:
+            continue
+        for v in eqn.params.values():
+            sub = v if isinstance(v, (list, tuple)) else (v,)
+            for s in sub:
+                if isinstance(s, (jax_core.ClosedJaxpr, jax_core.Jaxpr)):
+                    yield from iter_eqns(s)
+
+
+def op_census(jaxpr) -> dict[str, int]:
+    """Primitive name -> occurrence count over the whole (recursive) program.
+
+    Sorted by name so the result is JSON-stable — the audit manifest diffs
+    censuses across commits to catch silent graph drift.
+    """
+    counts = Counter(eqn.primitive.name for eqn in iter_eqns(jaxpr))
+    return dict(sorted(counts.items()))

@@ -152,7 +152,8 @@ class LUTPlan:
 
     @property
     def total_lut_bits(self) -> int:
-        return self.num_chunks * self.num_entries * self.out_features * self.storage_bits
+        per_entry = self.out_features * self.storage_bits
+        return self.num_chunks * self.num_entries * per_entry
 
     @property
     def total_lut_bytes(self) -> int:

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Callable, Iterator
+from typing import Iterator
 
 import jax
 

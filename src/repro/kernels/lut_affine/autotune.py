@@ -104,13 +104,33 @@ class TunePoint:
         )
 
 
+def table_tile_bytes(pt: TunePoint, blocks: tuple[int, int, int]) -> int:
+    """Live table-tile bytes a ``blocks`` tiling keeps resident for ``pt``,
+    with the same ``G``-aware accounting as ``ops._pick_blocks``."""
+    _, bp, bk = blocks
+    if pt.family == "tl1":
+        # the packed-index tile is plain bytes — no entries axis
+        return pt.G * bk * bp * pt.table_bytes
+    return pt.G * bk * pt.entries * bp * pt.table_bytes
+
+
+def blocks_fit_vmem(pt: TunePoint, blocks: tuple[int, int, int]) -> bool:
+    """Whether a tiling's live table tile fits the kernels' VMEM budget.
+
+    The reusable legality predicate: ``candidate_blocks`` enumerates with
+    it, and ``repro.audit``'s plan-consistency rule re-checks any ``blocks``
+    riding a ``ModelPlan`` against the same budget.
+    """
+    return table_tile_bytes(pt, tuple(blocks)) <= _VMEM_BUDGET
+
+
 def candidate_blocks(pt: TunePoint) -> list[tuple[int, int, int]]:
     """All legal ``(block_b, block_p, block_k)`` tilings for ``pt``.
 
     Legality mirrors the kernel's constraints: the batch tile is a multiple
     of 8 (sublane), the output tile a multiple of 128 (lane), the chunk tile
-    a power of two, and the live table tiles fit the VMEM budget with the
-    same ``G``-aware accounting as ``ops._pick_blocks``.
+    a power of two, and the live table tiles fit the VMEM budget
+    (:func:`blocks_fit_vmem`).
     """
     bbs = [bb for bb in (8, 16, 32, 64, 128) if bb <= ceil_to(pt.B, 8) * 2]
     bps = [bp for bp in (128, 256, 512) if bp <= ceil_to(pt.p, 128)]
@@ -118,18 +138,13 @@ def candidate_blocks(pt: TunePoint) -> list[tuple[int, int, int]]:
     while bk <= pt.k:
         bks.append(bk)
         bk *= 2
-    out = []
-    for bb in bbs:
-        for bp in bps:
-            for bk in bks:
-                if pt.family == "tl1":
-                    # the packed-index tile is plain bytes — no entries axis
-                    tile = pt.G * bk * bp * pt.table_bytes
-                else:
-                    tile = pt.G * bk * pt.entries * bp * pt.table_bytes
-                if tile <= _VMEM_BUDGET:
-                    out.append((bb, bp, bk))
-    return out
+    return [
+        (bb, bp, bk)
+        for bb in bbs
+        for bp in bps
+        for bk in bks
+        if blocks_fit_vmem(pt, (bb, bp, bk))
+    ]
 
 
 def analytic_cost(pt: TunePoint, blocks: tuple[int, int, int]) -> float:

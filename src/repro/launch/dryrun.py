@@ -1,3 +1,4 @@
+# ruff: noqa: E402 -- BackendConfig.apply() must run before any jax import
 import os
 
 from repro.launch.backend import BackendConfig
@@ -11,7 +12,8 @@ mesh) cell against the production meshes, record memory/cost/collective
 analysis for the roofline.
 
   PYTHONPATH=src python -m repro.launch.dryrun --all [--resume]
-  PYTHONPATH=src python -m repro.launch.dryrun --arch granite_8b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun \\
+      --arch granite_8b --shape train_4k --mesh single
 
 ``--all`` drives one subprocess per cell (isolation: a pathological cell
 cannot poison the rest) and appends records to results/dryrun.json.
@@ -26,6 +28,7 @@ import traceback
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ARCH_NAMES, get_config
 from repro.dist.sharding import ShardCtx
@@ -42,7 +45,6 @@ from repro.launch.mesh import make_production_mesh
 from repro.models.layers import Ctx, ExecCfg
 from repro.models.model import model_specs
 from repro.models.params import abstract_params
-from repro.optim.adamw import AdamWConfig
 from repro.serve import abstract_cache, make_decode_step, make_prefill_step
 from repro.train.trainer import TrainConfig, make_train_step
 
@@ -103,7 +105,8 @@ def abstract_lut_params(cfg, ctx: Ctx, chunk_size: int = 1,
         name = name if name is not None else str(path[-1])
         if name == "tables":
             p_out = leaf.shape[-1]
-            tp = "model" if ctx.shard.axis_size("model") and p_out % ctx.shard.axis_size("model") == 0 else None
+            n_model = ctx.shard.axis_size("model")
+            tp = "model" if n_model and p_out % n_model == 0 else None
             axes = [None] * (leaf.ndim - 1) + [tp]
             if fsdp_tables:  # shard the chunk dim over data (ZeRO-3 tables)
                 k = leaf.shape[-3]
@@ -133,9 +136,16 @@ def abstract_lut_params(cfg, ctx: Ctx, chunk_size: int = 1,
     return jax.tree_util.tree_map_with_path(build, shapes)
 
 
-def lower_cell(arch: str, shape: str, mesh_kind: str, exec_overrides: dict | None = None,
-               cfg_overrides: dict | None = None, case_overrides: dict | None = None,
-               rules: str = "default", params_mode: str = "standard"):
+def lower_cell(
+    arch: str,
+    shape: str,
+    mesh_kind: str,
+    exec_overrides: dict | None = None,
+    cfg_overrides: dict | None = None,
+    case_overrides: dict | None = None,
+    rules: str = "default",
+    params_mode: str = "standard",
+):
     """Returns (lowered, compiled, ctx, case, cfg)."""
     from repro.dist.sharding import RULE_SETS
 
@@ -180,8 +190,6 @@ def lower_cell(arch: str, shape: str, mesh_kind: str, exec_overrides: dict | Non
     compiled = lowered.compile()
     return lowered, compiled, ctx, case, cfg
 
-
-import numpy as np
 
 
 def _raw_costs(compiled) -> "np.ndarray":
@@ -371,7 +379,8 @@ def _driver(args):
             })
             with open(args.out, "w") as f:
                 json.dump(results, f, indent=1)
-            print(f"  CRASHED: {(r.stderr or '').strip().splitlines()[-1] if r.stderr else '?'}")
+            err = (r.stderr or "").strip().splitlines()[-1] if r.stderr else "?"
+            print(f"  CRASHED: {err}")
         else:
             print("  " + (r.stdout.strip().splitlines()[-1] if r.stdout else "ok"))
 

@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any
 
 PEAK_FLOPS = 197e12  # bf16 / chip
 HBM_BW = 819e9  # B/s / chip

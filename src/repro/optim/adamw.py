@@ -6,7 +6,6 @@ optimizer state is ZeRO-sharded wherever the params are.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

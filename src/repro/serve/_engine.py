@@ -137,7 +137,9 @@ def make_cache(
         elif page_table == "empty":
             cache["page_table"] = jnp.full((batch, max_pages), -1, jnp.int32)
         else:
-            raise ValueError(f"page_table must be 'identity' or 'empty': {page_table!r}")
+            raise ValueError(
+                f"page_table must be 'identity' or 'empty': {page_table!r}"
+            )
     return cache
 
 

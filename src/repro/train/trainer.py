@@ -32,7 +32,6 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import pvary, shard_map
-from repro.configs.base import ModelConfig
 from repro.dist import checkpoint as ckpt
 from repro.dist.compression import compressed_psum
 from repro.models.layers import Ctx

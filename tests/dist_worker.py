@@ -3,6 +3,7 @@
 Usage: python tests/dist_worker.py <mode>
 Prints one JSON line with results; exit code 0 on success.
 """
+# ruff: noqa: E402 -- the fake-device XLA_FLAGS must be set before jax imports
 import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"

@@ -1,0 +1,263 @@
+"""The `repro.audit` invariant auditor.
+
+Covers the shared walker (recursive descent through control-flow
+sub-jaxprs, ``pallas_call`` opacity), the rule classes on clean audited
+points, the seeded-violation regressions proving each rule actually
+fires (a dense fallback spliced over a planned layer trips
+multiplier-free; an un-prestacked group re-stacked per step trips
+zero-copy; a ghost plan entry trips plan-consistency; an undonated cache
+trips donation), and the manifest machinery behind ``python -m
+repro.audit --check`` (census drift, loud failure on malformed or
+missing baselines).
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.audit import (
+    AUDIT_POINTS,
+    ManifestError,
+    audit_point,
+    build_point,
+    diff_manifests,
+    donation_violations,
+    iter_eqns,
+    load_manifest,
+    multiplier_free_violations,
+    op_census,
+    plan_consistency_violations,
+    planned_weight_shapes,
+    table_leaf_shapes,
+    zero_copy_violations,
+)
+from repro.audit.__main__ import main as audit_main
+from repro.core.convert import LUTGroup
+
+
+@pytest.fixture(scope="module")
+def granite_point():
+    """Abstract artifacts for the attention weight-table point (no exec)."""
+    return build_point(AUDIT_POINTS[0])
+
+
+# ---------------------------------------------------------------------------
+# walker
+# ---------------------------------------------------------------------------
+
+
+def test_walker_descends_control_flow_sub_jaxprs():
+    def f(x):
+        def body(carry, _):
+            return jax.lax.cond(
+                carry.sum() > 0, lambda c: jnp.sin(c), lambda c: jnp.cos(c), carry
+            ), None
+
+        y, _ = jax.lax.scan(body, x, None, length=3)
+        return jax.checkpoint(lambda z: jnp.tanh(z) * 2.0)(y)
+
+    census = op_census(jax.make_jaxpr(f)(jnp.ones((4,))))
+    # sin/cos live inside cond branches inside scan; tanh inside remat
+    assert census["scan"] == 1
+    assert census["sin"] >= 1 and census["cos"] >= 1
+    assert census["tanh"] >= 1
+
+
+def test_walker_surfaces_pallas_call_as_opaque_leaf():
+    from repro.kernels.lut_affine.ops import lut_affine
+
+    codes = jax.ShapeDtypeStruct((8, 2, 4), jnp.int32)
+    tables = jax.ShapeDtypeStruct((4, 16, 128), jnp.float32)
+    scales = jax.ShapeDtypeStruct((2,), jnp.float32)
+    jaxpr = jax.make_jaxpr(lambda c, t, s: lut_affine(c, t, s))(
+        codes, tables, scales
+    )
+    walked = {id(eqn) for eqn in iter_eqns(jaxpr)}
+    pallas = [e for e in iter_eqns(jaxpr) if e.primitive.name == "pallas_call"]
+    assert pallas, "kernel dispatch not surfaced"
+    body = pallas[0].params["jaxpr"]
+    body = getattr(body, "jaxpr", body)
+    assert body.eqns, "kernel body unexpectedly empty"
+    assert not any(id(e) in walked for e in body.eqns), (
+        "walker descended into the opaque pallas_call body"
+    )
+
+
+# ---------------------------------------------------------------------------
+# clean audited point: every rule holds on the real decode/prefill graphs
+# ---------------------------------------------------------------------------
+
+
+def test_audit_point_weight_family_is_clean(granite_point):
+    entry = audit_point(AUDIT_POINTS[0], compile_hlo=False)
+    assert all(not v for v in entry["rules"].values()), entry["rules"]
+    assert entry["census"]["decode"]
+    assert entry["plan"]["total_lut_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# seeded violations: each rule class actually fires
+# ---------------------------------------------------------------------------
+
+
+def test_seeded_dense_fallback_trips_multiplier_free(granite_point):
+    art = granite_point
+    template, attn = art["template"], art["template"]["blocks"]["attn"]
+    from repro.models.model import model_specs
+    from repro.models.params import abstract_params
+
+    raw = abstract_params(model_specs(art["cfg"]))
+    broken = {
+        **template,
+        "blocks": {
+            **template["blocks"],
+            "attn": {
+                k: v for k, v in attn.items() if k != "wq"
+            } | {"wq": raw["blocks"]["attn"]["wq"]},
+        },
+    }
+    jaxpr = jax.make_jaxpr(art["decode"])(
+        broken, art["cache"], art["decode_tokens"]
+    )
+    hits = multiplier_free_violations(
+        jaxpr, weight_shapes=planned_weight_shapes(art["mplan"])
+    )
+    assert hits and all(v.rule == "multiplier_free" for v in hits)
+    assert any(v.primitive == "dot_general" for v in hits)
+    # the clean template passes under the identical predicate
+    clean = jax.make_jaxpr(art["decode"])(
+        template, art["cache"], art["decode_tokens"]
+    )
+    assert not multiplier_free_violations(
+        clean, weight_shapes=planned_weight_shapes(art["mplan"])
+    )
+
+
+def test_seeded_unprestacked_group_trips_zero_copy(granite_point):
+    art = granite_point
+    template = art["template"]
+    group = template["blocks"]["attn"]["wk+wv"]
+    assert isinstance(group, LUTGroup)
+    g_axis = 1  # tables are (L, G, k, E, p)
+    members = tuple(
+        jax.ShapeDtypeStruct(
+            group.tables.shape[:g_axis] + group.tables.shape[g_axis + 1 :],
+            group.tables.dtype,
+        )
+        for _ in range(group.tables.shape[g_axis])
+    )
+
+    def restacking_decode(member_tables, params, cache, tokens):
+        node = LUTGroup(
+            tables=jnp.stack(member_tables, axis=g_axis),
+            plan=group.plan,
+            members=group.members,
+            b=group.b,
+            scale=group.scale,
+        )
+        spliced = {
+            **params,
+            "blocks": {
+                **params["blocks"],
+                "attn": {**params["blocks"]["attn"], "wk+wv": node},
+            },
+        }
+        return art["decode"](spliced, cache, tokens)
+
+    jaxpr = jax.make_jaxpr(restacking_decode)(
+        members, template, art["cache"], art["decode_tokens"]
+    )
+    shapes = table_leaf_shapes(template)
+    hits = zero_copy_violations(jaxpr, table_shapes=shapes)
+    assert hits and all(v.rule == "zero_copy" for v in hits)
+    assert any(v.primitive == "concatenate" for v in hits)
+    # the stored pre-stacked layout passes under the identical predicate
+    clean = jax.make_jaxpr(art["decode"])(
+        template, art["cache"], art["decode_tokens"]
+    )
+    assert not zero_copy_violations(clean, table_shapes=shapes)
+
+
+def test_seeded_ghost_plan_entry_trips_plan_consistency(granite_point):
+    import dataclasses
+
+    art = granite_point
+    mplan = art["mplan"]
+    assert not plan_consistency_violations(mplan, art["template"])
+    some_plan = next(iter(mplan.layers.values()))
+    ghost = dataclasses.replace(
+        mplan, layers={**dict(mplan.layers), "ghost/linear": some_plan}
+    )
+    hits = plan_consistency_violations(ghost, art["template"])
+    kinds = {v.primitive for v in hits}
+    assert "never_consumed" in kinds  # the unconsumed plan entry
+    assert "byte_mismatch" in kinds  # its bytes inflate total_lut_bytes
+
+
+def test_seeded_undonated_cache_trips_donation(granite_point):
+    art = granite_point
+    n_params = len(jax.tree_util.tree_leaves(art["template"]))
+    n_cache = len(jax.tree_util.tree_leaves(art["cache"]))
+    cache_idx = range(n_params, n_params + n_cache)
+    lowered_args = (art["template"], art["cache"], art["decode_tokens"])
+    donated = (
+        jax.jit(art["decode"], donate_argnums=(1,))
+        .lower(*lowered_args)
+        .compile()
+        .as_text()
+    )
+    assert not donation_violations(donated, cache_idx)
+    undonated = jax.jit(art["decode"]).lower(*lowered_args).compile().as_text()
+    hits = donation_violations(undonated, cache_idx)
+    assert hits and hits[0].primitive == "undonated_cache_leaf"
+
+
+# ---------------------------------------------------------------------------
+# manifest: drift detection + loud failure modes
+# ---------------------------------------------------------------------------
+
+
+def _fake_manifest(mul_count):
+    return {
+        "version": 1,
+        "points": {
+            "pt": {
+                "rules": {},
+                "census": {"decode": {"mul": mul_count, "add": 2}},
+            }
+        },
+    }
+
+
+def test_diff_manifests_flags_census_drift_and_missing_points():
+    base = _fake_manifest(3)
+    assert diff_manifests(_fake_manifest(3), base) == []
+    drift = diff_manifests(_fake_manifest(4), base)
+    assert drift and "mul 3 -> 4" in drift[0]
+    gone = diff_manifests({"version": 1, "points": {}}, base)
+    assert gone and "missing from fresh" in gone[0]
+
+
+def test_load_manifest_fails_loud_on_missing_and_malformed(tmp_path):
+    with pytest.raises(ManifestError, match="not found"):
+        load_manifest(str(tmp_path / "nope.json"))
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    with pytest.raises(ManifestError, match="not valid JSON"):
+        load_manifest(str(bad))
+    not_manifest = tmp_path / "rows.json"
+    not_manifest.write_text(json.dumps([{"name": "x", "value": 1.0}]))
+    with pytest.raises(ManifestError, match="malformed"):
+        load_manifest(str(not_manifest))
+    stale = tmp_path / "stale.json"
+    stale.write_text(json.dumps({"version": 999, "points": {}}))
+    with pytest.raises(ManifestError, match="version"):
+        load_manifest(str(stale))
+
+
+def test_cli_check_exits_2_before_tracing_on_missing_baseline(tmp_path):
+    # exit code 2 (not 1): the baseline itself is unusable, and the CLI
+    # must say so before paying for the fresh trace/compile
+    rc = audit_main(["--check", "--baseline", str(tmp_path / "missing.json")])
+    assert rc == 2

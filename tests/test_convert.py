@@ -1,7 +1,6 @@
 """TableNet conversion pass: converted models must reproduce the
 fp16-quantised-input reference, end to end, for the paper's models AND a
 reduced LM from the zoo."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

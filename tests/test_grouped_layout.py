@@ -14,8 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax import core as jax_core
 
+from repro.audit import zero_copy_violations
 from repro.configs.base import get_config
 from repro.core.convert import LUTGroup, LUTLinear, convert_params
 from repro.core.lut import LUTPlan, quantized_matmul_reference
@@ -220,18 +220,6 @@ def test_expert_plan_alignment_with_converter():
 # ---------------------------------------------------------------------------
 
 
-def _iter_eqns(jaxpr):
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for v in eqn.params.values():
-            sub = v if isinstance(v, (list, tuple)) else (v,)
-            for s in sub:
-                if isinstance(s, jax_core.ClosedJaxpr):
-                    yield from _iter_eqns(s.jaxpr)
-                elif isinstance(s, jax_core.Jaxpr):
-                    yield from _iter_eqns(s)
-
-
 def test_decode_step_jaxpr_has_no_table_sized_concat():
     """The acceptance bar: with ``lut_grouped=True`` over the pre-stacked
     layout, tracing ``decode_step`` yields NO concatenate/stack whose
@@ -252,13 +240,9 @@ def test_decode_step_jaxpr_has_no_table_sized_concat():
     tokens = jnp.zeros((1, 1), jnp.int32)
     jaxpr = jax.make_jaxpr(decode)(lut_params, cache, tokens)
 
-    offenders = []
-    for eqn in _iter_eqns(jaxpr.jaxpr):
-        if eqn.primitive.name != "concatenate":
-            continue
-        out_elems = max(int(np.prod(v.aval.shape)) for v in eqn.outvars)
-        if out_elems >= min_member_elems:
-            offenders.append((eqn.primitive.name, out_elems))
+    offenders = zero_copy_violations(
+        jaxpr, min_out_elems=min_member_elems, primitives=("concatenate",)
+    )
     assert not offenders, (
         f"decode_step concatenates table-sized operands per step: "
         f"{offenders} (threshold {min_member_elems} elems)"

@@ -3,19 +3,21 @@ import pytest
 
 from repro.configs.base import get_config
 from repro.launch import hlo_analysis as H
-from repro.launch.inputs import SHAPES, cell_is_runnable, shape_case
+from repro.launch.inputs import cell_is_runnable, shape_case
 
 
-HLO = """
-  %all-gather = f32[8192,8]{1,0} all-gather(%x), replica_groups=[4,4]<=[4,4]T(1,0), dimensions={0}
-  %all-reduce.5 = bf16[1024]{0} all-reduce(%y), replica_groups=[2,8]<=[16]
-  %tuple-ar = (f32[16384]{0}, f32[16384,256]{1,0}) all-reduce(%a, %b), replica_groups=[4,4]<=[4,4]T(1,0)
-  %rs = f32[128]{0} reduce-scatter(%z), replica_groups={{0,1,2,3},{4,5,6,7}}
-  %cp = u8[64]{0} collective-permute(%w), source_target_pairs={{0,1}}
-  %ag-start = f32[32]{0} all-gather-start(%v), replica_groups=[4,4]<=[16]
-  %ag-done = f32[32]{0} all-gather-done(%ag-start)
-  %not-a-collective = f32[10]{0} add(%p, %q)
-"""
+HLO = (
+    "%all-gather = f32[8192,8]{1,0} all-gather(%x), "
+    "replica_groups=[4,4]<=[4,4]T(1,0), dimensions={0}\n"
+    "%all-reduce.5 = bf16[1024]{0} all-reduce(%y), replica_groups=[2,8]<=[16]\n"
+    "%tuple-ar = (f32[16384]{0}, f32[16384,256]{1,0}) all-reduce(%a, %b), "
+    "replica_groups=[4,4]<=[4,4]T(1,0)\n"
+    "%rs = f32[128]{0} reduce-scatter(%z), replica_groups={{0,1,2,3},{4,5,6,7}}\n"
+    "%cp = u8[64]{0} collective-permute(%w), source_target_pairs={{0,1}}\n"
+    "%ag-start = f32[32]{0} all-gather-start(%v), replica_groups=[4,4]<=[16]\n"
+    "%ag-done = f32[32]{0} all-gather-done(%ag-start)\n"
+    "%not-a-collective = f32[10]{0} add(%p, %q)\n"
+)
 
 
 def test_collective_stats_parsing():
@@ -31,6 +33,44 @@ def test_collective_stats_parsing():
     rs = st.by_op["reduce-scatter"]
     assert rs["link_bytes"] == pytest.approx(128 * 4 * 4 * 3 / 4)  # N=4 groups-list
     assert st.by_op["collective-permute"]["link_bytes"] == 64
+
+
+def test_collective_stats_empty_module():
+    st = H.collective_stats("")
+    assert st.by_op == {} and st.result_bytes == 0 and st.link_bytes == 0.0
+    # a module with no collectives at all behaves the same
+    st = H.collective_stats("%add.1 = f32[8]{0} add(%a, %b)\n")
+    assert st.to_dict() == {"by_op": {}, "result_bytes": 0, "link_bytes": 0.0}
+
+
+def test_collective_stats_unknown_dtype_skipped():
+    # a dtype outside _DTYPE_BYTES contributes zero bytes but the op is
+    # still counted (future float formats must not crash the parser)
+    hlo = (
+        "%ar = f4e2m1[4096]{0} all-reduce(%x), replica_groups=[2,8]<=[16]\n"
+        "%mixed = (f4e2m1[64]{0}, f32[64]{0}) all-reduce(%a, %b), "
+        "replica_groups=[2,8]<=[16]\n"
+    )
+    st = H.collective_stats(hlo)
+    assert st.by_op["all-reduce"]["count"] == 2
+    # only the known f32 component of the tuple is sized
+    assert st.result_bytes == 64 * 4
+
+
+def test_collective_stats_async_pair_counted_once():
+    # the -start op carries the payload; its -done must add nothing, even
+    # for tuple-typed results
+    hlo = (
+        "%s = (f32[256]{0}, f32[1024]{0}) all-gather-start(%v), "
+        "replica_groups=[4,4]<=[16]\n"
+        "%d = (f32[256]{0}, f32[1024]{0}) all-gather-done(%s)\n"
+    )
+    st = H.collective_stats(hlo)
+    assert st.by_op["all-gather"]["count"] == 1
+    assert st.result_bytes == (256 + 1024) * 4
+    assert st.by_op["all-gather"]["link_bytes"] == pytest.approx(
+        0.75 * (256 + 1024) * 4
+    )
 
 
 def test_roofline_terms_dominance():

@@ -6,11 +6,11 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.lut import LUTPlan, build_luts, pack_codes, plane_scales
-from repro.core.quantize import FixedPointFormat, Float16Format
-from repro.kernels.bitplane_pack.ops import bitplane_pack
-from repro.kernels.bitplane_pack.ref import bitplane_pack_ref
+from repro.core.quantize import FixedPointFormat
 from repro.kernels.binary_matmul.ops import binary_matmul
 from repro.kernels.binary_matmul.ref import binary_matmul_ref
+from repro.kernels.bitplane_pack.ops import bitplane_pack
+from repro.kernels.bitplane_pack.ref import bitplane_pack_ref
 from repro.kernels.lut_affine.ops import (
     lut_affine,
     lut_affine_experts,
@@ -61,7 +61,8 @@ def test_lut_affine_leading_dims_and_bias():
     scales = jnp.ones((4,))
     bias = jnp.arange(12.0)
     got = lut_affine(codes, tables, scales, bias=bias, interpret=True)
-    want = lut_affine_ref(codes.reshape(6, 4, 8), tables, scales).reshape(2, 3, 12) + bias
+    ref = lut_affine_ref(codes.reshape(6, 4, 8), tables, scales)
+    want = ref.reshape(2, 3, 12) + bias
     # blocked accumulation reorders fp32 sums (same slack as matches_ref)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
 

@@ -27,9 +27,8 @@ pytestmark = pytest.mark.slow  # property sweeps over LUT plans: ~minutes on CPU
 
 def _int_weights(key, q, p, wbits=4):
     """Integer-valued weights so fp32 accumulation is exact -> bitwise tests."""
-    return jax.random.randint(key, (q, p), -(2 ** (wbits - 1)), 2 ** (wbits - 1)).astype(
-        jnp.float32
-    )
+    lo = -(2 ** (wbits - 1))
+    return jax.random.randint(key, (q, p), lo, -lo).astype(jnp.float32)
 
 
 # ---------------------------------------------------------------------------

@@ -16,8 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax import core as jax_core
 
+from repro.audit import multiplier_free_violations
 from repro.configs.base import get_config
 from repro.core.convert import LUTGroup, LUTLinear, convert_params
 from repro.core.planner import plan_model
@@ -169,18 +169,6 @@ def test_generate_moe_lut_matches_dense_greedy():
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
-def _iter_eqns(jaxpr):
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for v in eqn.params.values():
-            sub = v if isinstance(v, (list, tuple)) else (v,)
-            for s in sub:
-                if isinstance(s, jax_core.ClosedJaxpr):
-                    yield from _iter_eqns(s.jaxpr)
-                elif isinstance(s, jax_core.Jaxpr):
-                    yield from _iter_eqns(s)
-
-
 def test_moe_decode_step_jaxpr_is_multiplier_free():
     """The acceptance bar: the jitted decode step over a converted-experts
     tree lowers to a program with NO ragged_dot anywhere and no dot_general
@@ -196,14 +184,9 @@ def test_moe_decode_step_jaxpr_is_multiplier_free():
 
     E, d, f = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
     min_expert_w = E * d * f  # elements of one (E, d, f) expert projection
-    offenders = []
-    for eqn in _iter_eqns(jaxpr.jaxpr):
-        if eqn.primitive.name == "ragged_dot":
-            offenders.append(("ragged_dot", None))
-        elif eqn.primitive.name == "dot_general":
-            big = max(int(np.prod(v.aval.shape)) for v in eqn.invars)
-            if big >= min_expert_w:
-                offenders.append(("dot_general", big))
+    offenders = multiplier_free_violations(
+        jaxpr, min_operand_elems=min_expert_w
+    )
     assert not offenders, (
         f"decode_step still multiplies over expert weights: {offenders} "
         f"(threshold {min_expert_w} elems)"

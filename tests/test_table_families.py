@@ -22,8 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax import core as jax_core
 
+from repro.audit import multiplier_free_violations
 from repro.configs.base import get_config
 from repro.core.convert import LUTGroup, LUTLinear, convert_params
 from repro.core.lut import LUTPlan
@@ -389,18 +389,6 @@ def test_engine_tl1_equals_ternary_dense_greedy():
     assert dense == tl1
 
 
-def _iter_eqns(jaxpr):
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for v in eqn.params.values():
-            sub = v if isinstance(v, (list, tuple)) else (v,)
-            for s in sub:
-                if isinstance(s, jax_core.ClosedJaxpr):
-                    yield from _iter_eqns(s.jaxpr)
-                elif isinstance(s, jax_core.Jaxpr):
-                    yield from _iter_eqns(s)
-
-
 @pytest.mark.slow
 def test_tl1_decode_step_jaxpr_is_multiplier_free():
     """The decode step over a TL1-converted tree lowers to a program whose
@@ -416,16 +404,12 @@ def test_tl1_decode_step_jaxpr_is_multiplier_free():
 
     min_w = min(p.in_features * p.out_features for p in mplan.layers.values())
     vocab_pad = -(-cfg.vocab_size // cfg.vocab_pad_multiple) * cfg.vocab_pad_multiple
-    offenders = []
-    for eqn in _iter_eqns(jaxpr.jaxpr):
-        if eqn.primitive.name != "dot_general":
-            continue
-        shapes = [tuple(v.aval.shape) for v in eqn.invars]
-        if any(vocab_pad in s or cfg.vocab_size in s for s in shapes):
-            continue  # tied embedding head: not a planned linear
-        big = max(int(np.prod(s)) for s in shapes)
-        if big >= min_w:
-            offenders.append(("dot_general", shapes))
+    offenders = multiplier_free_violations(
+        jaxpr,
+        min_operand_elems=min_w,
+        # tied embedding head: not a planned linear
+        exempt_dims=(cfg.vocab_size, vocab_pad),
+    )
     assert not offenders, (
         f"decode_step still multiplies over weight-sized operands: "
         f"{offenders} (threshold {min_w} elems)"

@@ -1,12 +1,10 @@
 """Trainer substrate: loss goes down, checkpoint/restart resumes bit-exactly,
 failure replay works, preemption saves state, data is deterministic."""
-import json
 import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import get_config
 from repro.data.pipeline import lm_stream, prefetch
