@@ -10,9 +10,15 @@ and compiled HLO, with nothing executed:
 * :func:`iter_eqns` / :func:`op_census` — the one recursive jaxpr walker
   (scan/while/cond/pjit/custom-vjp/remat; ``pallas_call`` stays opaque)
 * :func:`multiplier_free_violations`, :func:`zero_copy_violations`,
-  :func:`plan_consistency_violations`, :func:`donation_violations` — the
-  rule classes (empty list == invariant holds)
-* :data:`AUDIT_POINTS` / :func:`audit_point` — the audited matrix
+  :func:`plan_consistency_violations`, :func:`donation_violations`,
+  :func:`overflow_violations` — the rule classes (empty list == invariant
+  holds)
+* :func:`interval_eval` / :func:`layer_range_cert` /
+  :func:`precision_report` — the range/overflow pass: interval abstract
+  interpretation over the traced steps plus closed-form per-plan
+  accumulator and error-bound certificates
+* :data:`AUDIT_POINTS` / :func:`audit_point` / :func:`trace_point` — the
+  audited matrix (one shared abstract trace per point)
 * :func:`build_manifest` & friends — the JSON manifest behind
   ``python -m repro.audit --check`` (the CI gate) and ``--write``
 
@@ -24,6 +30,14 @@ from repro.audit.compiled import (
     compiled_report,
     donation_violations,
 )
+from repro.audit.interp import (
+    INT_INPUT_BOUND,
+    Interval,
+    OverflowFact,
+    default_arg_intervals,
+    dtype_interval,
+    interval_eval,
+)
 from repro.audit.manifest import (
     ManifestError,
     build_manifest,
@@ -32,7 +46,20 @@ from repro.audit.manifest import (
     manifest_violations,
     write_manifest,
 )
-from repro.audit.points import AUDIT_POINTS, AuditPoint, audit_point, build_point
+from repro.audit.points import (
+    AUDIT_POINTS,
+    AuditPoint,
+    audit_point,
+    build_point,
+    trace_point,
+)
+from repro.audit.ranges import (
+    RangeCert,
+    layer_range_cert,
+    overflow_violations,
+    pallas_interval_model,
+    precision_report,
+)
 from repro.audit.rules import (
     Violation,
     multiplier_free_violations,
@@ -41,29 +68,42 @@ from repro.audit.rules import (
     table_leaf_shapes,
     zero_copy_violations,
 )
-from repro.audit.walker import OPAQUE_PRIMITIVES, iter_eqns, op_census
+from repro.audit.walker import OPAQUE_PRIMITIVES, as_eqns, iter_eqns, op_census
 
 __all__ = [
     "AUDIT_POINTS",
     "AuditPoint",
+    "INT_INPUT_BOUND",
+    "Interval",
     "ManifestError",
     "OPAQUE_PRIMITIVES",
+    "OverflowFact",
+    "RangeCert",
     "Violation",
     "aliased_param_indices",
+    "as_eqns",
     "audit_point",
     "build_manifest",
     "build_point",
     "compiled_report",
+    "default_arg_intervals",
     "diff_manifests",
     "donation_violations",
+    "dtype_interval",
+    "interval_eval",
     "iter_eqns",
+    "layer_range_cert",
     "load_manifest",
     "manifest_violations",
     "multiplier_free_violations",
     "op_census",
+    "overflow_violations",
+    "pallas_interval_model",
     "plan_consistency_violations",
     "planned_weight_shapes",
+    "precision_report",
     "table_leaf_shapes",
+    "trace_point",
     "write_manifest",
     "zero_copy_violations",
 ]

@@ -10,7 +10,11 @@ Modes (mutually exclusive):
 
 ``--no-compile`` skips the AOT donation/collective pass for a fast
 jaxpr-only run (not valid for ``--check``/``--write``: the committed
-baseline always carries the compiled report).
+baseline always carries the compiled report).  ``--point NAME`` (repeat
+for several) restricts the run to the named points; under ``--check``
+the baseline comparison restricts to the same selection.  The fast local
+loop is ``--point X --no-compile``.  ``--point`` is not valid with
+``--write`` — a partial baseline would silently drop the other gates.
 """
 from __future__ import annotations
 
@@ -64,9 +68,30 @@ def main(argv: Sequence[str] | None = None) -> int:
         action="store_true",
         help="skip the AOT donation/collective pass (default mode only)",
     )
+    ap.add_argument(
+        "--point",
+        action="append",
+        metavar="NAME",
+        help="restrict to the named audit point (repeatable)",
+    )
     args = ap.parse_args(argv)
     if args.no_compile and (args.check or args.write):
         ap.error("--no-compile is not valid with --check/--write")
+    if args.point and args.write:
+        ap.error("--point is not valid with --write (partial baseline)")
+
+    points = None
+    if args.point:
+        from repro.audit.points import AUDIT_POINTS
+
+        by_name = {pt.name: pt for pt in AUDIT_POINTS}
+        unknown = sorted(set(args.point) - set(by_name))
+        if unknown:
+            ap.error(
+                f"unknown audit point(s) {unknown}; "
+                f"known: {sorted(by_name)}"
+            )
+        points = tuple(by_name[n] for n in dict.fromkeys(args.point))
 
     baseline = None
     if args.check:
@@ -78,12 +103,21 @@ def main(argv: Sequence[str] | None = None) -> int:
             print(f"audit: {e}", file=sys.stderr)
             return 2
 
-    fresh = build_manifest(compile_hlo=not args.no_compile)
+    fresh = build_manifest(points=points, compile_hlo=not args.no_compile)
     violations = manifest_violations(fresh)
     if args.out:
         write_manifest(args.out, fresh)
 
     if args.check:
+        if points is not None:
+            # compare only the selected points: a restricted run must not
+            # report the *unselected* baseline points as deleted gates
+            baseline = dict(baseline)
+            baseline["points"] = {
+                k: v
+                for k, v in baseline.get("points", {}).items()
+                if k in fresh["points"]
+            }
         errs = violations + diff_manifests(fresh, baseline)
         for e in errs:
             print(f"audit: {e}", file=sys.stderr)

@@ -5,20 +5,26 @@ commits at ``benchmarks/baselines/audit.json``: one entry per audit
 point with its rule verdicts, plan summary, op census, and compiled
 donation/collective report.  ``--check`` rebuilds it fresh and fails on
 
-* any rule violation in the fresh manifest (the invariants themselves);
+* any rule violation in the fresh manifest (the invariants themselves —
+  including ``overflow``, the numerical-safety class from
+  ``repro.audit.ranges``);
 * op-census drift against the baseline (a silent graph change — new
   primitives in a decode step, a vanished kernel dispatch);
+* precision drift against the baseline (a layer's proved accumulator
+  bound, minimal safe dtype, or worst-case error bound changed — the
+  numbers are certificates, so any movement is a semantics change);
 * a baseline point missing from the fresh run (a deleted gate).
 
-Census drift is a *review* signal, not always a bug: a legitimate graph
-change regenerates the baseline with ``--write`` (which refuses to
-snapshot a manifest that violates the invariants).
+Census and precision drift are *review* signals, not always bugs: a
+legitimate change regenerates the baseline with ``--write`` (which
+refuses to snapshot a manifest that violates the invariants).
 """
 from __future__ import annotations
 
 import json
 
-MANIFEST_VERSION = 1
+# v2: adds the "overflow" rule class and the per-point "precision" report.
+MANIFEST_VERSION = 2
 
 
 class ManifestError(Exception):
@@ -48,7 +54,12 @@ def manifest_violations(manifest: dict) -> list[str]:
 
 
 def diff_manifests(fresh: dict, baseline: dict) -> list[str]:
-    """Census/coverage drift of ``fresh`` against the committed baseline."""
+    """Census/precision/coverage drift against the committed baseline.
+
+    Census drift compresses to ONE line per point/graph listing every
+    drifted primitive as ``prim base->fresh (±d)`` — a reviewable signed
+    summary instead of one raw line per primitive.
+    """
     out = []
     base_points = baseline.get("points", {})
     fresh_points = fresh.get("points", {})
@@ -62,12 +73,33 @@ def diff_manifests(fresh: dict, baseline: dict) -> list[str]:
         for graph in sorted(set(base_census) | set(fresh_census)):
             b = base_census.get(graph, {})
             f = fresh_census.get(graph, {})
-            for prim in sorted(set(b) | set(f)):
-                if b.get(prim, 0) != f.get(prim, 0):
-                    out.append(
-                        f"{name}/{graph}: op census drift: {prim} "
-                        f"{b.get(prim, 0)} -> {f.get(prim, 0)}"
-                    )
+            drifted = [
+                f"{prim} {b.get(prim, 0)}->{f.get(prim, 0)} "
+                f"({f.get(prim, 0) - b.get(prim, 0):+d})"
+                for prim in sorted(set(b) | set(f))
+                if b.get(prim, 0) != f.get(prim, 0)
+            ]
+            if drifted:
+                out.append(
+                    f"{name}/{graph}: op census drift: " + ", ".join(drifted)
+                )
+        bp = base_points[name].get("precision", {})
+        fp = fresh_points[name].get("precision", {})
+        for layer in sorted(set(bp) - set(fp)):
+            out.append(f"{name}: precision entry {layer!r} missing from fresh audit")
+        for layer in sorted(set(fp) - set(bp)):
+            out.append(f"{name}: new precision entry {layer!r} not in baseline")
+        for layer in sorted(set(bp) & set(fp)):
+            bl, fl = bp[layer], fp[layer]
+            changed = [
+                f"{k} {bl.get(k)}->{fl.get(k)}"
+                for k in sorted(set(bl) | set(fl))
+                if bl.get(k) != fl.get(k)
+            ]
+            if changed:
+                out.append(
+                    f"{name}: precision drift at {layer!r}: " + ", ".join(changed)
+                )
     return out
 
 

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.audit.compiled import compiled_report
+from repro.audit.ranges import overflow_violations, precision_report
 from repro.audit.rules import (
     multiplier_free_violations,
     plan_consistency_violations,
@@ -28,7 +29,7 @@ from repro.audit.rules import (
     table_leaf_shapes,
     zero_copy_violations,
 )
-from repro.audit.walker import op_census
+from repro.audit.walker import as_eqns, op_census
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,20 +115,39 @@ def _vocab_dims(cfg) -> tuple[int, int]:
     return (cfg.vocab_size, pad)
 
 
-def audit_point(pt: AuditPoint, compile_hlo: bool = True) -> dict:
+def trace_point(pt: AuditPoint) -> dict:
+    """Build one point's abstract trace ONCE, shared across all rule passes.
+
+    Extends :func:`build_point` with the decode/prefill jaxprs and their
+    pre-walked recursive equation lists (``decode_eqns`` / ``prefill_eqns``,
+    consumable wherever a rule accepts ``walker.as_eqns`` input) — the trace
+    is the expensive part of an audit, so ``--point`` single-point runs and
+    multi-rule full runs both pay it exactly once.
+    """
+    art = build_point(pt)
+    art["decode_jaxpr"] = jax.make_jaxpr(art["decode"])(
+        art["template"], art["cache"], art["decode_tokens"]
+    )
+    art["prefill_jaxpr"] = jax.make_jaxpr(art["prefill"])(
+        art["template"], {"tokens": art["prefill_tokens"]}, art["cache"]
+    )
+    art["decode_eqns"] = as_eqns(art["decode_jaxpr"])
+    art["prefill_eqns"] = as_eqns(art["prefill_jaxpr"])
+    return art
+
+
+def audit_point(
+    pt: AuditPoint, compile_hlo: bool = True, trace: dict | None = None
+) -> dict:
     """Run every rule class over one point; return its manifest entry.
 
     ``compile_hlo=False`` skips the AOT donation/collective pass (the only
-    part that invokes XLA) for fast jaxpr-only audits.
+    part that invokes XLA) for fast jaxpr-only audits.  ``trace`` reuses a
+    :func:`trace_point` result instead of re-tracing.
     """
-    art = build_point(pt)
+    art = trace if trace is not None else trace_point(pt)
     mplan, template, cache = art["mplan"], art["template"], art["cache"]
-    decode_jaxpr = jax.make_jaxpr(art["decode"])(
-        template, cache, art["decode_tokens"]
-    )
-    prefill_jaxpr = jax.make_jaxpr(art["prefill"])(
-        template, {"tokens": art["prefill_tokens"]}, cache
-    )
+    decode_jaxpr, prefill_jaxpr = art["decode_jaxpr"], art["prefill_jaxpr"]
 
     weight_shapes = planned_weight_shapes(mplan)
     table_shapes = table_leaf_shapes(template)
@@ -135,9 +155,9 @@ def audit_point(pt: AuditPoint, compile_hlo: bool = True) -> dict:
     rules = {
         "multiplier_free": [
             v.to_json()
-            for graph in (decode_jaxpr, prefill_jaxpr)
+            for eqns in (art["decode_eqns"], art["prefill_eqns"])
             for v in multiplier_free_violations(
-                graph,
+                eqns,
                 weight_shapes=weight_shapes,
                 table_shapes=table_shapes,
                 exempt_dims=exempt,
@@ -147,11 +167,22 @@ def audit_point(pt: AuditPoint, compile_hlo: bool = True) -> dict:
         # legitimately lay out its prompt-length activations
         "zero_copy": [
             v.to_json()
-            for v in zero_copy_violations(decode_jaxpr, table_shapes=table_shapes)
+            for v in zero_copy_violations(
+                art["decode_eqns"], table_shapes=table_shapes
+            )
         ],
         "plan_consistency": [
             v.to_json()
             for v in plan_consistency_violations(mplan, template, batch=pt.batch)
+        ],
+        # numerical safety: closed-form per-plan certificates + interval
+        # abstract interpretation over both traced steps
+        "overflow": [
+            v.to_json()
+            for v in overflow_violations(
+                mplan,
+                graphs=(("decode", decode_jaxpr), ("prefill", prefill_jaxpr)),
+            )
         ],
     }
     entry = {
@@ -163,9 +194,10 @@ def audit_point(pt: AuditPoint, compile_hlo: bool = True) -> dict:
         },
         "rules": rules,
         "census": {
-            "decode": op_census(decode_jaxpr),
-            "prefill": op_census(prefill_jaxpr),
+            "decode": op_census(art["decode_eqns"]),
+            "prefill": op_census(art["prefill_eqns"]),
         },
+        "precision": precision_report(mplan),
     }
     if compile_hlo:
         n_params = len(jax.tree_util.tree_leaves(template))

@@ -1,0 +1,291 @@
+"""Per-plan range certificates: accumulator safety and worst-case error.
+
+For every planned table format this module derives, in closed form, a sound
+bound on the accumulator the LUT path builds — ``|acc| <= max_abs_acc`` —
+plus a worst-case absolute output error decomposed into its two quantization
+sources (narrow table storage and activation quantization).  The bounds are
+*certificates*: :func:`repro.core.planner.plan_model` consults them to
+reject knapsack candidates whose proved bound exceeds the kernel's
+accumulator contract, the chosen plans carry them as ``acc_dtype`` /
+``max_abs_acc`` (riding checkpoints like ``blocks``), the kernels assert
+them at trace time (``repro.kernels.common.check_acc_contract``), and the
+audit manifest gates CI on them (``overflow_violations`` /
+``precision_report``).
+
+Certificate math, per family (``w_max`` bounds per-weight magnitude,
+``act_max`` per-activation magnitude; both default to 1.0 — normalised
+units, scaled linearly by callers with real statistics):
+
+**weight family** (tables built from weights, fp32 accumulate):
+every gathered entry is ``sum_i coeff_i * W_i`` with the per-element
+dequantised coefficient bounded by ``elem_max`` — fp16 ``full`` mode
+65504 (the format max); fp16 bitplane modes ``32 * (2**(r*n) - 1)``
+(per-plane slice max ``2**r - 1`` times plane scales summed,
+``sigma_max = 2**5``; equals 65504 exactly at radix 1); fixed point the
+format's ``max(|min_value|, max_value)`` (full) or ``(2**n - 1) * 2**-f``
+(bitplane).  Hence ``max_abs_acc = padded_in * elem_max * w_max``; i8/i16
+table storage inflates each gathered entry by at most ``maxabs / qmax``
+(round-half + power-of-2 ceil scale), a uniform ``(1 + 1/qmax)`` factor.
+
+**tl1 family** (activation-side 9-entry LUTs): on the int path the bound
+is in CODE units — entries are ``±a0 ± a1`` with ``|a| <= qa =
+2**(act_bits-1) - 1``, so ``entry_max = 2 * qa`` (must fit the int16
+entry dtype) and ``max_abs_acc = 2 * qa * num_chunks`` accumulated in the
+plan's ``acc_dtype``; the exact ``act_bits=None`` path is fp32 with
+``max_abs_acc = 2 * act_max * num_chunks``.
+
+Error bounds are absolute, on one output element, in value units:
+``table_quant_err = exact_acc / qmax`` (narrow storage rounding),
+``act_quant_err`` the activation rounding worst case (fp16: relative
+``2**-11``; fixed point / TL1 absmax-int: half an LSB per element).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.audit.interp import Interval, dtype_interval, interval_eval
+from repro.audit.rules import Violation
+from repro.core.lut import LUTPlan
+from repro.core.lut_tl1 import TL1Plan
+from repro.core.quantize import Float16Format
+from repro.kernels.common import ACC_CAPACITY, acc_capacity
+
+_F16_MAX = 65504.0
+_F16_SIGMA_MAX = 32.0  # 2**(30 - 25): max exponent field 30 for finite f16
+_TABLE_QMAX = {"i8": 127.0, "i16": 32767.0}
+_INT16_MAX = 32767.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RangeCert:
+    """The proved range/precision facts for one planned layer."""
+
+    family: str  # "weight" | "tl1"
+    integer: bool  # True when max_abs_acc counts integer CODE units
+    max_abs_acc: float  # sound bound on |accumulator|
+    min_acc_dtype: str  # smallest dtype in ACC_CAPACITY that holds it
+    entry_max: float  # sound bound on |stored/built table entry|
+    table_quant_err: float  # worst-case |error| from narrow table storage
+    act_quant_err: float  # worst-case |error| from activation quantization
+
+    @property
+    def total_err(self) -> float:
+        return self.table_quant_err + self.act_quant_err
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        for k in ("max_abs_acc", "entry_max", "table_quant_err", "act_quant_err"):
+            d[k] = float(f"{d[k]:.8g}")  # stable across platforms in the manifest
+        d["total_err"] = float(f"{self.total_err:.8g}")
+        return d
+
+
+def _min_acc_dtype(bound: float, integer: bool) -> str:
+    if integer:
+        for name in ("int16", "int32", "int64"):
+            if bound <= ACC_CAPACITY[name]:
+                return name
+    return "float32"
+
+
+def _weight_elem_max(plan: LUTPlan) -> float:
+    """Max |dequantised value| one input element contributes through the
+    tables, plane scales included (sound across all planes/modes)."""
+    fmt = plan.fmt
+    if isinstance(fmt, Float16Format):
+        if plan.mode == "full":
+            return _F16_MAX
+        # bitplane / bitplane_shift: per plane a slice <= 2**r - 1 at plane
+        # scale (2**r)**j, summed over planes, times sigma_max.  Radix 1 is
+        # exactly the format max; wider radices are conservative (the slices
+        # partition 11 mantissa bits, but per-plane maxima need not).
+        r = fmt.mantissa_radix
+        return _F16_SIGMA_MAX * float(2 ** (r * fmt.num_planes) - 1)
+    if plan.mode == "full":
+        return max(abs(fmt.min_value), abs(fmt.max_value))
+    # fixed bitplane: every plane bit set, |plane_scales| summed.
+    return float(2**fmt.total_bits - 1) * fmt.scale
+
+
+def layer_range_cert(plan, *, w_max: float = 1.0, act_max: float = 1.0) -> RangeCert:
+    """Closed-form :class:`RangeCert` for one plan (either family)."""
+    if isinstance(plan, TL1Plan):
+        if plan.act_bits is not None:
+            qa = float(2 ** (int(plan.act_bits) - 1) - 1)
+            entry_max = 2.0 * qa  # |±a0 ± a1| in code units
+            max_abs_acc = entry_max * plan.num_chunks
+            # per-element absmax rounding <= scale/2 = act_max/(2*qa),
+            # through a |weight| <= w_max, summed over the input width.
+            act_err = plan.in_features * w_max * act_max / (2.0 * qa)
+            return RangeCert(
+                family="tl1",
+                integer=True,
+                max_abs_acc=max_abs_acc,
+                min_acc_dtype=_min_acc_dtype(max_abs_acc, integer=True),
+                entry_max=entry_max,
+                table_quant_err=0.0,  # ternary indices are stored exactly
+                act_quant_err=act_err,
+            )
+        entry_max = 2.0 * act_max
+        max_abs_acc = entry_max * plan.num_chunks
+        return RangeCert(
+            family="tl1",
+            integer=False,
+            max_abs_acc=max_abs_acc,
+            min_acc_dtype="float32",
+            entry_max=entry_max,
+            table_quant_err=0.0,
+            act_quant_err=0.0,  # the exact path quantizes nothing
+        )
+    if not isinstance(plan, LUTPlan):
+        raise TypeError(f"expected LUTPlan or TL1Plan, got {type(plan)!r}")
+    elem_max = _weight_elem_max(plan)
+    exact_acc = plan.padded_in * elem_max * w_max
+    if plan.table_format is not None:
+        qmax = _TABLE_QMAX[plan.table_format]
+        max_abs_acc = exact_acc * (1.0 + 1.0 / qmax)
+        table_err = exact_acc / qmax
+    else:
+        max_abs_acc = exact_acc
+        table_err = 0.0
+    if isinstance(plan.fmt, Float16Format):
+        # fp16 round-to-nearest: relative error <= 2**-11 per element.
+        act_err = plan.padded_in * w_max * act_max * 2.0**-11
+        entry_max = elem_max * plan.chunk_size * w_max
+    else:
+        act_err = plan.padded_in * w_max * plan.fmt.scale / 2.0
+        entry_max = elem_max * plan.chunk_size * w_max
+    return RangeCert(
+        family="weight",
+        integer=False,
+        max_abs_acc=max_abs_acc,
+        min_acc_dtype=_min_acc_dtype(max_abs_acc, integer=False),
+        entry_max=entry_max,
+        table_quant_err=table_err,
+        act_quant_err=act_err,
+    )
+
+
+def precision_report(mplan, *, w_max: float = 1.0, act_max: float = 1.0) -> dict:
+    """Per-layer certificate summary for the audit manifest (JSON-stable)."""
+    out = {}
+    for key in sorted(mplan.layers):
+        plan = mplan.layers[key]
+        cert = layer_range_cert(plan, w_max=w_max, act_max=act_max)
+        out[key] = {"acc_dtype": plan.acc_dtype, **cert.to_json()}
+    return out
+
+
+def pallas_interval_model(mplan):
+    """Closed-form interval model for opaque ``pallas_call`` interiors.
+
+    The graph walk cannot see inside a kernel, but the kernels implement
+    exactly the per-family contracts this module certifies, so their
+    *outputs* are bounded by the certificates: integer results (TL1 int
+    accumulators surfaced before the fp32 rescale) stay within the largest
+    certified ``max_abs_acc`` of any integer-path plan; everything else
+    falls back to the dtype range.
+    """
+    int_bound = 0.0
+    for plan in mplan.layers.values():
+        cert = layer_range_cert(plan)
+        if cert.integer:
+            int_bound = max(int_bound, cert.max_abs_acc, cert.entry_max)
+
+    def model(eqn, ins):
+        import numpy as np
+
+        outs = []
+        for v in eqn.outvars:
+            d = np.dtype(v.aval.dtype)
+            if d.kind == "i" and int_bound > 0:
+                rng = dtype_interval(d)
+                outs.append(
+                    Interval(max(rng.lo, -int_bound), min(rng.hi, int_bound))
+                )
+            else:
+                outs.append(dtype_interval(d))
+        return outs
+
+    return model
+
+
+def overflow_violations(
+    mplan,
+    *,
+    graphs=(),
+    arg_intervals=None,
+    pallas_model=None,
+    w_max: float = 1.0,
+    act_max: float = 1.0,
+) -> list[Violation]:
+    """The numerical-safety rule class: a clean pipeline returns ``[]``.
+
+    Three plan-level checks per layer — the proved ``max_abs_acc`` fits the
+    plan's declared ``acc_dtype``, TL1 int entries fit their int16 storage,
+    and any bound stamped on the plan matches what the certificate proves
+    now (a stale stamp means a plan rode a checkpoint across a semantics
+    change) — plus one graph-level check: interval abstract interpretation
+    over each named jaxpr in ``graphs`` (``(name, jaxpr)`` pairs, e.g. the
+    decode and prefill steps) flags every signed-integer equation whose
+    ideal result escapes its machine dtype.  ``pallas_model`` defaults to
+    :func:`pallas_interval_model` over the same plan.
+    """
+    out: list[Violation] = []
+    for key in sorted(mplan.layers):
+        plan = mplan.layers[key]
+        cert = layer_range_cert(plan, w_max=w_max, act_max=act_max)
+        cap = acc_capacity(plan.acc_dtype)
+        if cert.max_abs_acc > cap:
+            out.append(
+                Violation(
+                    rule="overflow",
+                    primitive="accumulate",
+                    detail=(
+                        f"{key}: proved |acc| bound {cert.max_abs_acc:.6g} "
+                        f"exceeds acc_dtype={plan.acc_dtype!r} capacity "
+                        f"{cap:.6g} (minimal safe dtype: "
+                        f"{cert.min_acc_dtype})"
+                    ),
+                )
+            )
+        if cert.integer and cert.entry_max > _INT16_MAX:
+            out.append(
+                Violation(
+                    rule="overflow",
+                    primitive="table_entry",
+                    detail=(
+                        f"{key}: TL1 activation-LUT entry bound "
+                        f"{cert.entry_max:.6g} exceeds the int16 entry "
+                        f"dtype ({_INT16_MAX:.0f})"
+                    ),
+                )
+            )
+        stamped = getattr(plan, "max_abs_acc", None)
+        if stamped is not None and not math.isclose(
+            stamped, cert.max_abs_acc, rel_tol=1e-6
+        ):
+            out.append(
+                Violation(
+                    rule="overflow",
+                    primitive="stale_bound",
+                    detail=(
+                        f"{key}: stamped max_abs_acc {stamped:.6g} != "
+                        f"certified {cert.max_abs_acc:.6g} — restamp via "
+                        f"plan_model"
+                    ),
+                )
+            )
+    model = pallas_model if pallas_model is not None else pallas_interval_model(mplan)
+    for name, jaxpr in graphs:
+        _, facts = interval_eval(jaxpr, arg_intervals, pallas_model=model)
+        for f in facts:
+            out.append(
+                Violation(
+                    rule="overflow",
+                    primitive=f.primitive,
+                    detail=f"{name}: {f.detail}",
+                )
+            )
+    return out

@@ -36,7 +36,7 @@ import dataclasses
 import math
 from typing import Iterable, Sequence
 
-from repro.audit.walker import iter_eqns
+from repro.audit.walker import as_eqns
 
 # Primitives that multiply operands elementwise or as contractions.
 _CONTRACTIONS = ("dot_general", "conv_general_dilated")
@@ -124,7 +124,7 @@ def multiplier_free_violations(
     table_shapes = tuple(tuple(s) for s in table_shapes)
     exempt = frozenset(exempt_dims)
     out = []
-    for eqn in iter_eqns(jaxpr):
+    for eqn in as_eqns(jaxpr):
         name = eqn.primitive.name
         if name == "ragged_dot":
             out.append(
@@ -164,7 +164,7 @@ def zero_copy_violations(
     """
     table_shapes = tuple(tuple(s) for s in table_shapes)
     out = []
-    for eqn in iter_eqns(jaxpr):
+    for eqn in as_eqns(jaxpr):
         if eqn.primitive.name not in primitives:
             continue
         shapes = [tuple(v.aval.shape) for v in eqn.outvars]

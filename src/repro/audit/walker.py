@@ -45,11 +45,24 @@ def iter_eqns(jaxpr) -> Iterator:
                     yield from iter_eqns(s)
 
 
+def as_eqns(jaxpr_or_eqns) -> list:
+    """Materialise the recursive equation list once.
+
+    Pass-through for an already-materialised ``list`` of equations, so every
+    rule pass over one audit point shares a single walk of the trace
+    (``points.trace_point`` builds the lists; ``--point`` runs lean on them).
+    """
+    if isinstance(jaxpr_or_eqns, list):
+        return jaxpr_or_eqns
+    return list(iter_eqns(jaxpr_or_eqns))
+
+
 def op_census(jaxpr) -> dict[str, int]:
     """Primitive name -> occurrence count over the whole (recursive) program.
 
     Sorted by name so the result is JSON-stable — the audit manifest diffs
-    censuses across commits to catch silent graph drift.
+    censuses across commits to catch silent graph drift.  Accepts a jaxpr
+    or a pre-walked equation list (see :func:`as_eqns`).
     """
-    counts = Counter(eqn.primitive.name for eqn in iter_eqns(jaxpr))
+    counts = Counter(eqn.primitive.name for eqn in as_eqns(jaxpr))
     return dict(sorted(counts.items()))

@@ -63,6 +63,15 @@ class LUTPlan:
     # through ModelPlan JSON so tuned plans ride checkpoints.  None falls
     # back to the static heuristic in kernels.lut_affine.
     blocks: tuple[int, int, int] | None = None
+    # Accumulator contract: the dtype the kernels accumulate partial sums
+    # in (weight-family kernels always widen gathered rows to fp32) and
+    # the statically proved worst-case |accumulator| for this plan
+    # (``repro.audit.ranges.layer_range_cert``, stamped by ``plan_model``
+    # and riding checkpoints like ``blocks``).  ``max_abs_acc`` is derived
+    # metadata, so like a cache it is excluded from equality — two plans
+    # that differ only in the stamp describe the same layer mapping.
+    acc_dtype: str = "float32"
+    max_abs_acc: float | None = dataclasses.field(default=None, compare=False)
 
     # The table-family axis: "weight" = tables built from weights at convert
     # time, indexed by activation codes (every mode above).  The second
@@ -88,6 +97,12 @@ class LUTPlan:
             object.__setattr__(self, "blocks", tuple(int(v) for v in self.blocks))
             if len(self.blocks) != 3 or any(v <= 0 for v in self.blocks):
                 raise ValueError(f"blocks must be 3 positive ints, got {self.blocks}")
+        if self.acc_dtype not in ("int16", "int32", "float32"):
+            raise ValueError(f"unknown acc_dtype {self.acc_dtype!r}")
+        if self.max_abs_acc is not None:
+            object.__setattr__(self, "max_abs_acc", float(self.max_abs_acc))
+            if self.max_abs_acc < 0:
+                raise ValueError(f"max_abs_acc must be >= 0, got {self.max_abs_acc}")
         if self.index_bits > 24:
             raise ValueError(
                 f"LUT index width {self.index_bits} bits is impractically large"

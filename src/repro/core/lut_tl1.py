@@ -18,9 +18,12 @@ codes.  TL1 (SNIPPETS snippet 1, BitNet lineage) inverts that layout:
   gathers and adds, no multiplies over weight-sized operands.
 
 Entries are int16 (activations are int8 so each entry fits ±254); the
-accumulator is int32 — int16 would overflow beyond ~128 chunks, so the
-"int16" in the TL1 lineage refers to the table entries, and we document the
-wider accumulate honestly.  ``act_bits=None`` selects an exact fp32 variant
+accumulator dtype is a *proved* per-plan contract, not folklore: the plan
+carries ``acc_dtype``/``max_abs_acc`` and ``repro.audit.ranges`` certifies
+``|acc| <= 2 * (2**(act_bits-1) - 1) * num_chunks`` statically (the "int16"
+in the TL1 lineage refers to the table entries; the accumulator needs
+whatever that bound demands — int32 for every real layer width).
+``act_bits=None`` selects an exact fp32 variant
 (no activation quantization; the adds are exact w.r.t. a dense matmul over
 the ternarised weights) used by the stream-equivalence tests.
 
@@ -56,6 +59,14 @@ class TL1Plan:
     # counts *packed bytes* along the input axis; persisted via ModelPlan
     # JSON like the weight family's.
     blocks: tuple[int, int, int] | None = None
+    # Accumulator contract: the integer dtype the kernels accumulate LUT
+    # entries in (fp32 on the exact ``act_bits=None`` path) and the proved
+    # worst-case |accumulator| in code units — ``2*(2**(act_bits-1)-1)*
+    # num_chunks``, certified by ``repro.audit.ranges.layer_range_cert``
+    # and stamped by ``plan_model``.  ``max_abs_acc`` is derived metadata,
+    # excluded from equality like the weight family's.
+    acc_dtype: str = "int32"
+    max_abs_acc: float | None = dataclasses.field(default=None, compare=False)
 
     table_family = "tl1"
 
@@ -66,6 +77,17 @@ class TL1Plan:
             object.__setattr__(self, "blocks", tuple(int(v) for v in self.blocks))
             if len(self.blocks) != 3 or any(v <= 0 for v in self.blocks):
                 raise ValueError(f"blocks must be 3 positive ints, got {self.blocks}")
+        if self.acc_dtype not in ("int16", "int32", "float32"):
+            raise ValueError(f"unknown acc_dtype {self.acc_dtype!r}")
+        if self.act_bits is None:
+            # the exact path's codes are fp32, so every kernel (and the
+            # oracle's _accumulate) accumulates fp32 — normalising here
+            # keeps the declared contract truthful for exact plans.
+            object.__setattr__(self, "acc_dtype", "float32")
+        if self.max_abs_acc is not None:
+            object.__setattr__(self, "max_abs_acc", float(self.max_abs_acc))
+            if self.max_abs_acc < 0:
+                raise ValueError(f"max_abs_acc must be >= 0, got {self.max_abs_acc}")
 
     # -- derived sizes --------------------------------------------------------
     @property

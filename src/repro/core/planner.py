@@ -196,6 +196,12 @@ def plan_to_json(plan: AnyPlan) -> dict:
         }
         if plan.blocks is not None:
             out["blocks"] = list(plan.blocks)
+        # acc contract rides checkpoints like blocks; defaults stay implicit
+        # so pre-contract plan JSON and its golden files keep round-tripping.
+        if plan.act_bits is not None and plan.acc_dtype != "int32":
+            out["acc_dtype"] = plan.acc_dtype
+        if plan.max_abs_acc is not None:
+            out["max_abs_acc"] = plan.max_abs_acc
         return out
     out = {
         "in_features": plan.in_features,
@@ -209,6 +215,10 @@ def plan_to_json(plan: AnyPlan) -> dict:
         out["table_format"] = plan.table_format
     if plan.blocks is not None:
         out["blocks"] = list(plan.blocks)
+    if plan.acc_dtype != "float32":
+        out["acc_dtype"] = plan.acc_dtype
+    if plan.max_abs_acc is not None:
+        out["max_abs_acc"] = plan.max_abs_acc
     return out
 
 
@@ -225,6 +235,8 @@ def plan_from_json(d: Mapping) -> AnyPlan:
             d["out_features"],
             act_bits=d.get("act_bits", 8),
             blocks=blocks,
+            acc_dtype=d.get("acc_dtype", "int32"),
+            max_abs_acc=d.get("max_abs_acc"),
         )
     if family != "weight":
         raise ValueError(f"unknown table family {family!r}")
@@ -237,6 +249,8 @@ def plan_from_json(d: Mapping) -> AnyPlan:
         out_bits=d["out_bits"],
         table_format=d.get("table_format"),
         blocks=blocks,
+        acc_dtype=d.get("acc_dtype", "float32"),
+        max_abs_acc=d.get("max_abs_acc"),
     )
 
 
@@ -435,6 +449,7 @@ def plan_model(
     table_formats: Sequence[str | None] = (None,),
     families: Sequence[str] = ("weight",),
     tl1_act_bits: int | None = 8,
+    tl1_acc_dtype: str = "int32",
 ) -> ModelPlan:
     """Choose a per-layer plan for every eligible linear under a global budget.
 
@@ -477,9 +492,22 @@ def plan_model(
     upgrades move individual items to weight-table plans wherever the
     budget buys the most shift/add reduction — so one model mixes families.
 
+    Every candidate must additionally pass its *range certificate*
+    (``repro.audit.ranges.layer_range_cert``): candidates whose proved
+    worst-case |accumulator| exceeds the declared accumulator dtype's
+    capacity (``tl1_acc_dtype`` for TL1 points, fp32 for weight tables)
+    are rejected before the knapsack sees them, and the survivors are
+    stamped with the proved bound (``max_abs_acc``) so kernels can assert
+    the contract at trace time and checkpoints carry the proof.
+
     Raises ``ValueError`` if even the minimal per-layer plans exceed
-    ``max_lut_bytes``.
+    ``max_lut_bytes``, or if every candidate for some layer fails its
+    accumulator certificate.
     """
+    # call-time import: repro.audit imports this module (points builds
+    # plans), so the certificate pass must not close the cycle at import.
+    from repro.audit.ranges import layer_range_cert
+    from repro.kernels.common import acc_capacity
     families = tuple(families)
     if not families or any(f not in TABLE_FAMILIES for f in families):
         raise ValueError(
@@ -535,8 +563,37 @@ def plan_model(
                     )
                 ]
             if "tl1" in families:
-                pts.append(PlanPoint.of(TL1Plan(q, p, act_bits=tl1_act_bits)))
-            frontier_cache[(q, p)] = tradeoff_curve(pts)
+                pts.append(
+                    PlanPoint.of(
+                        TL1Plan(q, p, act_bits=tl1_act_bits, acc_dtype=tl1_acc_dtype)
+                    )
+                )
+            # certificate gate: drop candidates whose proved |acc| bound
+            # overflows their declared accumulator; stamp the survivors.
+            kept, rejected = [], []
+            for pt in pts:
+                cert = layer_range_cert(pt.plan)
+                if cert.max_abs_acc > acc_capacity(pt.plan.acc_dtype):
+                    rejected.append((pt.plan, cert))
+                else:
+                    kept.append(
+                        PlanPoint.of(
+                            dataclasses.replace(
+                                pt.plan, max_abs_acc=cert.max_abs_acc
+                            )
+                        )
+                    )
+            if not kept and rejected:
+                plan, cert = rejected[0]
+                raise ValueError(
+                    f"no overflow-safe plan for {q}x{p}: e.g. "
+                    f"{type(plan).__name__} proves |acc| <= "
+                    f"{cert.max_abs_acc:.6g}, which overflows "
+                    f"acc_dtype={plan.acc_dtype!r} (capacity "
+                    f"{acc_capacity(plan.acc_dtype):.6g}; minimal safe "
+                    f"dtype {cert.min_acc_dtype})"
+                )
+            frontier_cache[(q, p)] = tradeoff_curve(kept)
         frontier = frontier_cache[(q, p)]
         if not frontier:
             raise ValueError(f"no feasible LUT plan for {item[0]} ({q}x{p})")

@@ -10,7 +10,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import ceil_to, default_interpret, pad_axis
+from repro.kernels.common import (
+    ceil_to,
+    check_acc_contract,
+    default_interpret,
+    pad_axis,
+)
 from repro.kernels.lut_affine.lut_affine import (
     lut_affine_experts_pallas,
     lut_affine_grouped_pallas,
@@ -69,12 +74,17 @@ def lut_affine(
     interpret: bool | None = None,
     blocks: tuple[int, int, int] | None = None,
     shift_bits: int = 0,
+    plan=None,
 ) -> jax.Array:
     """out[..., :] = sum_j scales[j] * sum_c tables[c, codes[..., j, c], :] + bias
 
     ``blocks`` overrides the static ``_pick_blocks`` heuristic with autotuned
     ``(block_b, block_p, block_k)`` tile sizes (see ``autotune.py``);
-    ``shift_bits`` selects the ``bitplane_shift`` code contract."""
+    ``shift_bits`` selects the ``bitplane_shift`` code contract; ``plan``
+    (a ``LUTPlan``) asserts the accumulator contract at trace time when it
+    carries a proved ``max_abs_acc`` (this kernel accumulates fp32)."""
+    if plan is not None:
+        check_acc_contract("lut_affine", plan, "float32")
     if interpret is None:
         interpret = default_interpret()
     *lead, n, k = codes.shape
@@ -127,6 +137,7 @@ def lut_affine_grouped(
     interpret: bool | None = None,
     blocks: tuple[int, int, int] | None = None,
     shift_bits: int = 0,
+    plan=None,
 ) -> jax.Array:
     """Fused batched decode path: ``out[g, ..., :] = lut_affine(codes,
     tables[g], scales) (+ biases[g])`` for all ``G`` projections in ONE
@@ -134,6 +145,8 @@ def lut_affine_grouped(
     group instead of one per projection.  ``tables`` is exactly the leaf a
     converted ``core.convert.LUTGroup`` stores (stacked once at conversion
     time), so serving never re-stacks per step."""
+    if plan is not None:
+        check_acc_contract("lut_affine_grouped", plan, "float32")
     if interpret is None:
         interpret = default_interpret()
     *lead, n, k = codes.shape
@@ -187,6 +200,7 @@ def lut_affine_experts(
     interpret: bool | None = None,
     blocks: tuple[int, int, int] | None = None,
     shift_bits: int = 0,
+    plan=None,
 ) -> jax.Array:
     """Ragged MoE dispatch over pre-stacked expert tables: token row ``t``
     (sorted by expert, the ``lax.ragged_dot`` layout) is evaluated against
@@ -194,6 +208,8 @@ def lut_affine_experts(
     the LUT-affine replacement for a grouped GEMM.  ``tables`` is exactly
     the scan-sliced leaf a converted expert ``LUTGroup`` stores (a lone
     ``LUTLinear`` stack passes ``tables[:, None]``)."""
+    if plan is not None:
+        check_acc_contract("lut_affine_experts", plan, "float32")
     if interpret is None:
         interpret = default_interpret()
     T, n, k = codes.shape

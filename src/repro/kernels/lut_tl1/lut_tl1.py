@@ -18,11 +18,15 @@ freshly built ``(bb, 9)`` LUTs.  The gather is a 9-wide row lookup — the
 inverse of the weight family's ``(entries, p)`` row gather: here the table
 axis is tiny and the *index* operand is weight-shaped.
 
-LUT entries are int16 (int8 activation codes sum within ±254); accumulation
-is int32 — int16 would overflow past ~128 chunks, so the family keeps the
-exemplar's int16 *entries* and widens the accumulator honestly.  With fp32
-activation codes (``act_bits=None``) entries and accumulator stay fp32 and
-the kernel is exact w.r.t. a dense matmul over the ternary weights.
+LUT entries are int16, accumulation int32.  Both are *proved* per-plan
+contracts, not folklore: ``repro.audit.ranges.layer_range_cert`` certifies
+``|entry| <= 2*qa`` and ``|acc| <= 2*qa*num_chunks`` (``qa =
+2**(act_bits-1) - 1``), the planner stamps the bound on each ``TL1Plan``
+(``max_abs_acc`` / ``acc_dtype``) and rejects plans it cannot prove safe,
+and the wrappers in ``ops.py`` re-assert the contract at trace time via
+``repro.kernels.common.check_acc_contract``.  With fp32 activation codes
+(``act_bits=None``) entries and accumulator stay fp32 and the kernel is
+exact w.r.t. a dense matmul over the ternary weights.
 """
 from __future__ import annotations
 

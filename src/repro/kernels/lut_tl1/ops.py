@@ -12,7 +12,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import ceil_to, default_interpret, pad_axis
+from repro.kernels.common import (
+    ceil_to,
+    check_acc_contract,
+    default_interpret,
+    pad_axis,
+)
 from repro.kernels.lut_tl1.lut_tl1 import lut_tl1_grouped_pallas, lut_tl1_pallas
 
 _VMEM_BUDGET = 4 * 2**20  # bytes of live blocks per grid step
@@ -80,11 +85,20 @@ def lut_tl1(
     *,
     interpret: bool | None = None,
     blocks: tuple[int, int, int] | None = None,
+    plan=None,
 ) -> jax.Array:
     """out[..., :] = act_scale * scale * sum_c lut[c, widx[c, :]] + bias
 
     ``blocks`` overrides the static ``_pick_blocks`` heuristic with autotuned
-    ``(block_b, block_p, block_k)`` tile sizes (block_k in packed bytes)."""
+    ``(block_b, block_p, block_k)`` tile sizes (block_k in packed bytes);
+    ``plan`` (a ``TL1Plan``) asserts the accumulator contract at trace time
+    when it carries a proved ``max_abs_acc``."""
+    if plan is not None:
+        check_acc_contract(
+            "lut_tl1",
+            plan,
+            "int32" if jnp.issubdtype(acts.dtype, jnp.integer) else "float32",
+        )
     if interpret is None:
         interpret = default_interpret()
     kb, p = tables.shape
@@ -127,11 +141,18 @@ def lut_tl1_grouped(
     *,
     interpret: bool | None = None,
     blocks: tuple[int, int, int] | None = None,
+    plan=None,
 ) -> jax.Array:
     """Fused batched decode path: ``out[g] = lut_tl1(acts, tables[g],
     act_scale, scale[g]) (+ biases[g])`` for all ``G`` projections in ONE
     Pallas grid.  ``tables`` is exactly the leaf a TL1-converted
     ``core.convert.LUTGroup`` stores."""
+    if plan is not None:
+        check_acc_contract(
+            "lut_tl1_grouped",
+            plan,
+            "int32" if jnp.issubdtype(acts.dtype, jnp.integer) else "float32",
+        )
     if interpret is None:
         interpret = default_interpret()
     G, kb, p = tables.shape

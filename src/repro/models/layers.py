@@ -26,6 +26,7 @@ from repro.core.lut import LUTPlan, apply_luts, pack_codes, plane_scales
 from repro.core.lut_tl1 import TL1Plan, apply_tl1, quantize_acts
 from repro.core.quantize import FixedPointFormat
 from repro.dist.sharding import ShardCtx
+from repro.kernels.common import check_acc_contract
 from repro.models.params import PSpec
 
 
@@ -144,13 +145,20 @@ def _tl1_apply(
     """One TL1-converted projection: per-token 9-entry activation LUT +
     packed ternary weight-pair indices (the activation-side table family)."""
     assert x.shape[-1] == plan.in_features, (x.shape, plan)
+    # both execution paths accumulate int32 (fp32 on the exact variant) —
+    # assert the plan's proved bound against that before dispatching.
+    check_acc_contract(
+        "lut_tl1", plan, "int32" if plan.act_bits is not None else "float32"
+    )
     if acts is None:
         acts = quantize_acts(x, plan)
     codes, act_scale = acts
     if ctx.ex.use_pallas:
         from repro.kernels.lut_tl1.ops import lut_tl1
 
-        y = lut_tl1(codes, tables, act_scale, scale, bias=b, blocks=plan.blocks)
+        y = lut_tl1(
+            codes, tables, act_scale, scale, bias=b, blocks=plan.blocks, plan=plan
+        )
     else:
         y = apply_tl1(tables, x, plan, bias=b, scale=scale, acts=acts)
     return y.astype(x.dtype)
@@ -171,6 +179,7 @@ def _lut_apply(
     counts both execute correctly)."""
     ex = ctx.ex
     assert x.shape[-1] == plan.in_features, (x.shape, plan)
+    check_acc_contract("lut_affine", plan, "float32")
     if codes is None:
         codes = pack_codes(x, plan)
     if scales is None:
@@ -188,6 +197,7 @@ def _lut_apply(
             bias=b,
             blocks=plan.blocks,
             shift_bits=plan.index_bits if shifted else 0,
+            plan=plan,
         )
     elif ex.linear_mode == "onehot_mxu" and not shifted:
         # (bitplane_shift codes carry the exponent above the index bits, so
@@ -254,6 +264,9 @@ def _tl1_group_apply(
     (one Pallas dispatch) or a vmapped oracle.  Ternary scales are per
     member (``node.scale`` is ``(G,)``), applied after the accumulate."""
     plan = node.plan
+    check_acc_contract(
+        "lut_tl1_grouped", plan, "int32" if plan.act_bits is not None else "float32"
+    )
     if acts is None:
         acts = quantize_acts(x, plan)
     codes, act_scale = acts
@@ -271,6 +284,7 @@ def _tl1_group_apply(
                 node.scale,
                 biases=stacked_b,
                 blocks=plan.blocks,
+                plan=plan,
             )
         else:
             y = jax.vmap(
@@ -321,6 +335,7 @@ def _group_apply(
     over fusion.
     """
     plan = node.plan
+    check_acc_contract("lut_affine_grouped", plan, "float32")
     if codes is None:
         codes = pack_codes(x, plan)
     scales = jnp.asarray(plane_scales(plan), jnp.float32)
@@ -346,6 +361,7 @@ def _group_apply(
                 scales,
                 biases=stacked_b,
                 blocks=plan.blocks,
+                plan=plan,
                 shift_bits=plan.index_bits if plan.mode == "bitplane_shift" else 0,
             )
         else:

@@ -50,6 +50,7 @@ from repro.configs.base import ModelConfig
 from repro.core.convert import LUTGroup, LUTLinear
 from repro.core.lut import LUTPlan, pack_codes, plane_scales
 from repro.core.lut_tl1 import TL1Plan, build_act_lut, quantize_acts, unpack_indices
+from repro.kernels.common import check_acc_contract
 from repro.models.layers import Ctx, ExecCfg, mlp, mlp_specs
 from repro.models.params import PSpec
 
@@ -124,6 +125,7 @@ def _ragged_lut(
     scale: jax.Array | None = None,  # narrow-table dequant scale
 ) -> jax.Array:
     """(G, T, p) float32 — every token row against ITS expert's tables."""
+    check_acc_contract("lut_affine_experts", plan, "float32")
     scales = jnp.asarray(plane_scales(plan), jnp.float32)
     if scale is not None:  # power-of-2 dequant folds into the plane scales
         scales = scales * scale
@@ -138,6 +140,7 @@ def _ragged_lut(
             group_sizes,
             blocks=plan.blocks,
             shift_bits=shift,
+            plan=plan,
         )
     from repro.kernels.lut_affine.ref import lut_affine_experts_ref
 
@@ -162,6 +165,9 @@ def _ragged_tl1(
     Runs as a jnp oracle on every path — the transient ``(T, 2kb, 9)`` LUT is
     small and the gather is the whole computation, so there is no separate
     experts Pallas kernel for this family."""
+    check_acc_contract(
+        "ragged_tl1", plan, "int32" if plan.act_bits is not None else "float32"
+    )
     E, G = tables.shape[0], tables.shape[1]
     T = acts.shape[0]
     expert_of = jnp.repeat(jnp.arange(E), group_sizes, total_repeat_length=T)

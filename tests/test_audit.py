@@ -94,6 +94,14 @@ def test_audit_point_weight_family_is_clean(granite_point):
     assert all(not v for v in entry["rules"].values()), entry["rules"]
     assert entry["census"]["decode"]
     assert entry["plan"]["total_lut_bytes"] > 0
+    # the range/overflow pass ran: the rule class is present (and clean),
+    # and every planned layer carries a proved precision certificate
+    assert "overflow" in entry["rules"]
+    assert entry["precision"]
+    for layer, cert in entry["precision"].items():
+        assert cert["max_abs_acc"] > 0, layer
+        assert cert["acc_dtype"] in ("int16", "int32", "float32"), layer
+        assert cert["total_err"] >= 0, layer
 
 
 # ---------------------------------------------------------------------------
@@ -218,13 +226,16 @@ def test_seeded_undonated_cache_trips_donation(granite_point):
 # ---------------------------------------------------------------------------
 
 
-def _fake_manifest(mul_count):
+def _fake_manifest(mul_count, acc=1024.0):
     return {
-        "version": 1,
+        "version": 2,
         "points": {
             "pt": {
                 "rules": {},
                 "census": {"decode": {"mul": mul_count, "add": 2}},
+                "precision": {
+                    "blocks/ffn": {"acc_dtype": "int32", "max_abs_acc": acc}
+                },
             }
         },
     }
@@ -234,9 +245,20 @@ def test_diff_manifests_flags_census_drift_and_missing_points():
     base = _fake_manifest(3)
     assert diff_manifests(_fake_manifest(3), base) == []
     drift = diff_manifests(_fake_manifest(4), base)
-    assert drift and "mul 3 -> 4" in drift[0]
-    gone = diff_manifests({"version": 1, "points": {}}, base)
+    # one compact line per point/graph with signed per-primitive deltas
+    assert len(drift) == 1
+    assert "pt/decode: op census drift" in drift[0]
+    assert "mul 3->4 (+1)" in drift[0]
+    gone = diff_manifests({"version": 2, "points": {}}, base)
     assert gone and "missing from fresh" in gone[0]
+
+
+def test_diff_manifests_flags_precision_drift():
+    base = _fake_manifest(3)
+    drift = diff_manifests(_fake_manifest(3, acc=2048.0), base)
+    assert len(drift) == 1
+    assert "precision drift at 'blocks/ffn'" in drift[0]
+    assert "max_abs_acc 1024.0->2048.0" in drift[0]
 
 
 def test_load_manifest_fails_loud_on_missing_and_malformed(tmp_path):
@@ -261,3 +283,15 @@ def test_cli_check_exits_2_before_tracing_on_missing_baseline(tmp_path):
     # must say so before paying for the fresh trace/compile
     rc = audit_main(["--check", "--baseline", str(tmp_path / "missing.json")])
     assert rc == 2
+
+
+def test_cli_point_validates_names_and_rejects_write(capsys):
+    # both are argparse errors: they fail before any (slow) tracing
+    with pytest.raises(SystemExit) as e:
+        audit_main(["--point", "no_such_point"])
+    assert e.value.code == 2
+    assert "unknown audit point" in capsys.readouterr().err
+    with pytest.raises(SystemExit) as e:
+        audit_main(["--write", "--point", "granite_weight"])
+    assert e.value.code == 2
+    assert "not valid with --write" in capsys.readouterr().err
